@@ -1,0 +1,37 @@
+"""Theorem-1 validation: analytic detection bound vs Monte-Carlo truth.
+
+Not a table in the paper, but the partitioning algorithm's correctness
+rests on Eq. (3); this bench quantifies the bound's tightness across
+co-cluster sizes and grids (consumed by EXPERIMENTS.md §Dry-run notes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import probability as P
+
+
+def run(report=print):
+    rng = np.random.default_rng(0)
+    rows = []
+    # adversarially small co-clusters / tight thresholds: the regime where
+    # the bound is non-trivial and T_p > 1 actually gets exercised
+    for (mk, nk, m, n, tm, tn) in [
+        (40, 40, 4, 4, 8, 8),
+        (30, 30, 8, 8, 4, 4),
+        (60, 40, 8, 8, 6, 5),
+        (25, 25, 4, 4, 6, 6),
+    ]:
+        mc = P.mc_failure_estimate(rng, mk, nk, 1000, 1000, m, n, tm, tn,
+                                   trials=1000)
+        bound = P.failure_bound(mk, nk, 1000, 1000, m, n, tm, tn)
+        tp = P.min_resamples(0.95, mk, nk, 1000, 1000, m, n, tm, tn)
+        report(f"prob_bound_Mk{mk}x{nk}_g{m}x{n}_T{tm}{tn},{bound*1e6:.0f},"
+               f"mc={mc:.4f} bound={bound:.4f} tp95={tp}")
+        rows.append((mk, nk, m, n, mc, bound, tp))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Roofline table: merge the dry-run JSONL (compiled artifacts: memory fit,
+HLO collective census, raw cost_analysis) with the analytic trip-count-
+exact cost model (launch/analytic.py) into the §Roofline table.
+
+Reports, per (arch x shape) on the single-pod mesh:
+    compute_s / memory_s / collective_s  (analytic, v5e constants)
+    dominant term, MODEL_FLOPS, useful ratio, HBM fit (from the compile).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES, cells, get_arch
+from repro.launch.analytic import analytic_cell
+from repro.launch.roofline import HW, model_flops
+from repro.launch.steps import padded_cfg
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.jsonl")
+
+
+def load_dryrun(path=RESULTS):
+    recs = {}
+    if os.path.exists(path):
+        for line in open(path):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r.get("mesh", "singlepod"))] = r
+    return recs
+
+
+def cell_report(cfg, shape, chips=256, model_axis=16, fsdp_axis=16,
+                pod_axis=1, measured=None):
+    cfgp = padded_cfg(cfg)
+    ac = analytic_cell(cfgp, shape, chips, model_axis, fsdp_axis, pod_axis)
+    compute_s = ac.flops_global / (chips * HW["flops_bf16"])
+    memory_s = ac.hbm_bytes_per_dev / HW["hbm_bw"]
+    coll_s = ac.coll_bytes_per_dev / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfgp, shape)
+    bound = max(terms.values())
+    row = dict(
+        arch=cfg.name, shape=shape.name, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=mf,
+        useful_ratio=mf / ac.flops_global if ac.flops_global else 0.0,
+        roofline_frac=compute_s / bound if bound else 0.0,
+        step_lower_bound_s=bound,
+    )
+    if measured:
+        mem = measured.get("memory") or {}
+        row["hbm_fit_gb"] = round(
+            ((mem.get("temp_size_in_bytes") or 0)
+             + (mem.get("argument_size_in_bytes") or 0)) / 2**30, 2)
+        row["hlo_raw_flops"] = measured.get("hlo_flops")
+        row["hlo_coll_bytes"] = measured.get("collective_bytes")
+    return row
+
+
+def run(report=print):
+    recs = load_dryrun()
+    rows = []
+    for cfg, shape, live, why in cells(include_skipped=True):
+        if not live:
+            report(f"roofline_{cfg.name}_{shape.name},0,skipped:{why[:40]}")
+            continue
+        measured = recs.get((cfg.name, shape.name, "singlepod"))
+        row = cell_report(cfg, shape, measured=measured)
+        rows.append(row)
+        report(
+            f"roofline_{cfg.name}_{shape.name},"
+            f"{row['step_lower_bound_s']*1e6:.0f},"
+            f"dom={row['dominant']} comp={row['compute_s']:.4f}s "
+            f"mem={row['memory_s']:.4f}s coll={row['collective_s']:.4f}s "
+            f"frac={row['roofline_frac']:.2f} useful={row['useful_ratio']:.2f} "
+            f"fitGB={row.get('hbm_fit_gb')}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract). Sections:
+  table2_*      running-time reproduction (paper Table II)
+  table3_*      NMI/ARI reproduction (paper Table III)
+  prob_bound_*  Theorem-1 bound tightness (paper Eq. 3)
+  roofline_*    per-cell roofline terms (EXPERIMENTS.md §Roofline)
+  kernel_*      Pallas kernel micro-benches (interpret-mode correctness +
+                jnp-path wall time; TPU wall time requires hardware)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _kernel_micro(report):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import kmeans as km
+    from repro.models.attention import chunked_causal_attention
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4096, 64)).astype(np.float32))
+    key = jax.random.key(0)
+    f = jax.jit(lambda: km.kmeans(key, x, 16, n_iter=10).labels)
+    f().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f().block_until_ready()
+    report(f"kernel_kmeans_4096x64_k16,{(time.perf_counter()-t0)/3*1e6:.0f},jnp_path")
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    g = jax.jit(lambda: chunked_causal_attention(q, q, q, chunk_size=256))
+    g().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        g().block_until_ready()
+    report(f"kernel_chunked_attn_1k,{(time.perf_counter()-t0)/3*1e6:.0f},jnp_path")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller table2/3 problem sizes")
+    ap.add_argument("--only", default=None,
+                    help="run a single section: table2|table3|prob|roofline|kernel")
+    args = ap.parse_args(argv)
+
+    def report(line: str) -> None:
+        print(line, flush=True)
+
+    sections = (args.only.split(",") if args.only
+                else ["prob", "roofline", "kernel", "table3", "table2"])
+
+    if "prob" in sections:
+        from benchmarks import bench_probability
+        bench_probability.run(report)
+    if "roofline" in sections:
+        from benchmarks import bench_roofline
+        bench_roofline.run(report)
+    if "kernel" in sections:
+        _kernel_micro(report)
+    if "table3" in sections:
+        from benchmarks import bench_table3
+        bench_table3.run(report, rcv1_scale=0.05 if args.quick else 0.2)
+    if "table2" in sections:
+        from benchmarks import bench_table2
+        bench_table2.run(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Doc x term co-clustering on the CLASSIC4-shaped proxy (paper §V workload):
+discovers document collections and their vocabularies simultaneously.
+
+    PYTHONPATH=src python examples/text_coclustering.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LAMCConfig, lamc_cocluster, cocluster_scores
+from repro.data import classic4_proxy
+
+
+def main():
+    data = classic4_proxy(seed=0, n_docs=6000)  # 6000 docs x 1000 terms
+    a = jnp.asarray(data.matrix)
+    print(f"doc-term matrix: {data.shape}, density {data.density:.3f}")
+
+    cfg = LAMCConfig(
+        n_row_clusters=4, n_col_clusters=4,
+        min_cocluster_rows=700, min_cocluster_cols=120,
+        p_thresh=0.95, workers=8,
+    )
+    out = lamc_cocluster(a, cfg)
+    s = cocluster_scores(np.asarray(out.row_labels), np.asarray(out.col_labels),
+                         data.row_labels, data.col_labels)
+    print(f"plan {out.plan.m}x{out.plan.n} T_p={out.plan.t_p} -> "
+          f"NMI={s['nmi']:.3f} ARI={s['ari']:.3f}")
+
+    # vote margins = per-document confidence (consensus strength)
+    votes = np.asarray(out.row_votes)
+    margin = np.sort(votes, 1)[:, -1] / np.maximum(votes.sum(1), 1)
+    print(f"mean consensus confidence: {margin.mean():.2f} "
+          f"(1.0 = all resamples agree)")
+
+
+if __name__ == "__main__":
+    main()

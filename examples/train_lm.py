@@ -1,0 +1,49 @@
+"""End-to-end LM training driver example: a smollm-family model trained for
+a few hundred steps on the synthetic restartable pipeline, with periodic
+checkpointing, an injected mid-run failure, and automatic recovery.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+On a pod the identical driver takes --full-config and the production mesh
+(the multi-pod dry-run proves those configs lower + compile).
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=120,
+                    help="inject a simulated failure at this step (0=off)")
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_train_lm_")
+    try:
+        run = train_loop(
+            arch="smollm-360m",          # reduced config of the same family
+            steps=args.steps,
+            batch_size=args.batch_size,
+            seq_len=args.seq_len,
+            ckpt_dir=ckpt_dir,
+            save_every=50,
+            fail_at=(args.fail_at,) if args.fail_at else (),
+            lr=3e-3,
+        )
+        first = run.losses[0][1]
+        last = run.losses[-1][1]
+        print(f"\nloss {first:.3f} -> {last:.3f} over {run.final_step} steps "
+              f"({run.failures} failure(s) recovered, {run.wall_s:.0f}s)")
+        assert last < first, "training did not reduce loss"
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

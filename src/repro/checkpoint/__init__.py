@@ -1,0 +1,4 @@
+from . import checkpoint
+from .checkpoint import available_steps, latest_step, restore, save
+
+__all__ = ["checkpoint", "save", "restore", "latest_step", "available_steps"]

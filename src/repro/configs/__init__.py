@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned arch + the paper's own
+workload. Use ``get_arch(name)`` / ``reduced(name)`` / ``cells()``."""
+
+from .base import SHAPES, ArchConfig, ShapeConfig, cells, get_arch, list_archs, reduced
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_arch", "reduced",
+           "list_archs", "cells"]

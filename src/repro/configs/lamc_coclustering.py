@@ -1,0 +1,26 @@
+"""The paper's own workload as a dry-runnable config: distributed LAMC
+co-clustering of a production-scale dense matrix on the full mesh.
+
+Shapes (rows x cols, block grid matched to the mesh):
+    lamc_1m   1,048,576 x 262,144  — 16x16 blocks (1 block/device/resample)
+    lamc_4m   4,194,304 x 262,144  — memory-bound stress cell
+
+These are NOT part of the 40 LM cells; they carry the §Roofline entry for
+the paper's technique itself (the third mandated hillclimb target).
+"""
+
+from .base import ArchConfig, register
+
+# ArchConfig is reused as a thin registry record; the LAMC driver reads the
+# partition geometry from launch/dryrun.py's shape table instead.
+FULL = ArchConfig(
+    name="lamc-coclustering",
+    family="coclustering",
+    n_layers=0, d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+    source="this paper (SMC 2024)",
+    notes="distributed LAMC workload; see launch/dryrun.py LAMC_SHAPES",
+)
+
+REDUCED = FULL
+
+register(FULL, REDUCED)

@@ -1,0 +1,43 @@
+"""Qwen2-VL-72B backbone. [arXiv:2409.12191; hf]
+
+VLM: the transformer BACKBONE only — the vision frontend is a stub
+(input_specs provides precomputed patch embeddings for the leading
+``frontend_len`` positions). M-RoPE (temporal/height/width sections) on the
+positions; text-only positions degenerate to standard RoPE.
+"""
+
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29_568,
+    vocab_size=152_064,
+    rope="mrope",
+    frontend="patches",
+    frontend_len=256,
+    norm="rmsnorm",
+    act="silu",
+    source="arXiv:2409.12191",
+    notes="M-RoPE, dynamic resolution stubbed to 256 patch embeddings",
+)
+
+REDUCED = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    rope="mrope",
+    frontend="patches",
+    frontend_len=8,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,52 @@
+"""Whisper-medium. [arXiv:2212.04356; unverified]
+
+Encoder-decoder; the conv frontend is a STUB — input_specs provides
+precomputed frame embeddings (B, 1500, d) as the encoder input. Decoder:
+causal self-attn + cross-attn, learned positions, no RoPE. Decode shapes
+run on the decoder with cached encoder output.
+"""
+
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    enc_dec=True,
+    n_enc_layers=24,
+    enc_seq_len=1500,
+    frontend="frames",
+    frontend_len=1500,
+    rope="none",
+    norm="layernorm",
+    act="gelu",
+    tie_embeddings=True,
+    source="arXiv:2212.04356 (unverified)",
+    notes="conv frontend stubbed; vocab padded for sharding",
+)
+
+REDUCED = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    enc_dec=True,
+    n_enc_layers=2,
+    enc_seq_len=30,
+    frontend="frames",
+    frontend_len=30,
+    rope="none",
+    norm="layernorm",
+    act="gelu",
+)
+
+register(FULL, REDUCED)

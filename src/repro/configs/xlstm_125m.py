@@ -1,0 +1,40 @@
+"""xLSTM-125M. [arXiv:2405.04517; unverified]
+
+Alternating mLSTM (matrix memory) / sLSTM (scalar memory) blocks;
+d_ff = 0 — the blocks carry their own projections. O(1) decode state ->
+long_500k cell runs.
+"""
+
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    block_pattern=("mlstm", "slstm"),
+    rope="none",
+    norm="layernorm",
+    act="gelu",
+    source="arXiv:2405.04517 (unverified)",
+)
+
+REDUCED = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=0,
+    vocab_size=256,
+    block_pattern=("mlstm", "slstm"),
+    rope="none",
+    norm="layernorm",
+)
+
+register(FULL, REDUCED)

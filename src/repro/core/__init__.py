@@ -1,0 +1,31 @@
+"""LAMC core — the paper's contribution as a composable JAX library.
+
+Public API:
+    LAMCConfig, lamc_cocluster      full pipeline (Algorithm 1)
+    make_plan, PartitionPlan        probabilistic partition planning (§IV-B)
+    scc, nmtf                       atom co-clusterers (§IV-C)
+    signature_merge, jaccard_merge_host   hierarchical merging (§IV-D)
+    nmi, ari                        evaluation metrics (§V)
+"""
+
+from .lamc import LAMCConfig, LAMCResult, lamc_cocluster
+from .merging import jaccard_merge_host, signature_merge
+from .metrics import ari, cocluster_scores, nmi
+from .nmtf import nmtf
+from .partition import PartitionPlan, extract_blocks, make_plan, resample_indices
+from .probability import (
+    detection_probability,
+    failure_bound,
+    min_resamples,
+    plan_partition,
+)
+from .spectral import normalize_bipartite, randomized_svd, scc
+
+__all__ = [
+    "LAMCConfig", "LAMCResult", "lamc_cocluster",
+    "PartitionPlan", "make_plan", "extract_blocks", "resample_indices",
+    "detection_probability", "failure_bound", "min_resamples", "plan_partition",
+    "scc", "nmtf", "normalize_bipartite", "randomized_svd",
+    "signature_merge", "jaccard_merge_host",
+    "nmi", "ari", "cocluster_scores",
+]

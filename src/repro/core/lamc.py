@@ -1,0 +1,166 @@
+"""LAMC driver — partition -> parallel atom co-clustering -> hierarchical merge.
+
+Single-host reference implementation of the full Algorithm 1 pipeline. The
+multi-device version (``core.distributed``) reuses the same pieces under
+``shard_map``; this module is its oracle in tests.
+
+Per resample ``t``:
+  1. ``partition.extract_blocks`` gathers the (m*n, phi, psi) block stack.
+  2. The atom co-clusterer (SCC or NMTF) runs *vmapped* over the stack —
+     on real hardware this is the embarrassingly parallel phase.
+  3. Atom signatures are computed in the shared projection space.
+Afterwards, ``merging.signature_merge`` produces consensus labels.
+
+Everything except the plan search is jittable; the resample loop is a
+``lax.scan`` so the whole pipeline lowers to one XLA program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import merging, nmtf, partition, spectral
+
+__all__ = ["LAMCConfig", "LAMCResult", "lamc_cocluster", "run_resample"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LAMCConfig:
+    n_row_clusters: int
+    n_col_clusters: int
+    # block k/d: clusters the atom method looks for inside one block.
+    atom_row_clusters: int | None = None
+    atom_col_clusters: int | None = None
+    atom: str = "scc"               # "scc" | "nmtf"
+    min_cocluster_rows: int = 8     # adversarial C_k for the Theorem-1 plan
+    min_cocluster_cols: int = 8
+    p_thresh: float = 0.95
+    workers: int = 1
+    seed: int = 0
+    svd_iters: int = 4
+    kmeans_iters: int = 16
+    nmtf_iters: int = 64
+    merge_kmeans_iters: int = 25
+    signature_dim: int = 64    # number of shared anchor rows/cols for merging
+    expected_failed_blocks: int = 0
+    grid_candidates: tuple = (1, 2, 4, 8, 16, 32)
+    assign_impl: str = "jnp"        # "jnp" | "pallas" — k-means hot path
+    svd_method: str = "randomized"  # "randomized" (TPU-adapted) | "exact" (paper)
+
+    @property
+    def atom_k(self) -> int:
+        return self.atom_row_clusters or self.n_row_clusters
+
+    @property
+    def atom_d(self) -> int:
+        return self.atom_col_clusters or self.n_col_clusters
+
+
+class LAMCResult(NamedTuple):
+    row_labels: jax.Array
+    col_labels: jax.Array
+    row_votes: jax.Array
+    col_votes: jax.Array
+    plan: partition.PartitionPlan
+
+
+def _atom_fn(cfg: LAMCConfig):
+    if cfg.atom == "scc":
+        def atom(key, block):
+            res = spectral.scc(
+                key, block, cfg.atom_k, cfg.atom_d,
+                svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
+                assign_impl=cfg.assign_impl, svd_method=cfg.svd_method,
+            )
+            return res.row_labels, res.col_labels
+    elif cfg.atom == "nmtf":
+        def atom(key, block):
+            res = nmtf.nmtf(key, block, cfg.atom_k, cfg.atom_d, n_iter=cfg.nmtf_iters)
+            return res.row_labels, res.col_labels
+    else:
+        raise ValueError(f"unknown atom method {cfg.atom!r}")
+    return atom
+
+
+def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
+    """One resample: extract blocks, co-cluster them (vmapped), summarize.
+
+    ``anchor_rows`` / ``anchor_cols`` are the globally shared anchor index
+    sets (see ``merging.anchor_indices``). Returns the per-resample tensors
+    consumed by ``merging.signature_merge``.
+    """
+    blocks, row_idx, col_idx = partition.extract_blocks(a, plan, t)
+    b = plan.blocks_per_resample
+    keys = jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.fold_in(jax.random.key(plan.seed + 1), t), i)
+    )(jnp.arange(b))
+    row_labels, col_labels = jax.vmap(_atom_fn(cfg))(keys, blocks)   # (B,phi),(B,psi)
+
+    # anchor features: every block's points restricted to the shared anchors
+    j_of_b = jnp.arange(b) % plan.n
+    i_of_b = jnp.arange(b) // plan.n
+    row_feats = a[row_idx][:, :, anchor_cols]          # (m, phi, q)
+    col_feats = a[anchor_rows][:, col_idx]             # (q, n, psi)
+    col_feats = jnp.transpose(col_feats, (1, 2, 0))    # (n, psi, q)
+    row_sigs, row_counts = merging.atom_signatures(
+        row_feats[i_of_b], row_labels, cfg.atom_k)
+    col_sigs, col_counts = merging.atom_signatures(
+        col_feats[j_of_b], col_labels, cfg.atom_d)
+    return dict(
+        row_sigs=row_sigs, row_counts=row_counts, row_labels=row_labels,
+        row_index=row_idx,
+        col_sigs=col_sigs, col_counts=col_counts, col_labels=col_labels,
+        col_index=col_idx,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"))
+def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
+    q = cfg.signature_dim
+    kproj = jax.random.key(plan.seed + 7)
+    kar, kac, kmerge = jax.random.split(kproj, 3)
+    anchor_rows = merging.anchor_indices(kar, plan.n_rows, q)
+    anchor_cols = merging.anchor_indices(kac, plan.n_cols, q)
+
+    def body(_, t):
+        out = run_resample(a, plan, cfg, anchor_rows, anchor_cols, t)
+        return None, out
+
+    _, stacked = jax.lax.scan(body, None, jnp.arange(plan.t_p))
+    merged = merging.signature_merge(
+        kmerge,
+        n_rows=plan.n_rows, n_cols=plan.n_cols,
+        k_row=cfg.n_row_clusters, k_col=cfg.n_col_clusters,
+        m=plan.m, n=plan.n,
+        kmeans_iters=cfg.merge_kmeans_iters,
+        **stacked,
+    )
+    return merged
+
+
+def lamc_cocluster(a: jax.Array, cfg: LAMCConfig,
+                   plan: partition.PartitionPlan | None = None) -> LAMCResult:
+    """Full LAMC pipeline (Algorithm 1). ``plan=None`` derives the optimal
+    plan from the probabilistic model."""
+    n_rows, n_cols = a.shape
+    if plan is None:
+        plan = partition.make_plan(
+            n_rows, n_cols,
+            min_cocluster_rows=cfg.min_cocluster_rows,
+            min_cocluster_cols=cfg.min_cocluster_cols,
+            p_thresh=cfg.p_thresh,
+            workers=cfg.workers,
+            seed=cfg.seed,
+            k=cfg.atom_k,
+            expected_failed_blocks=cfg.expected_failed_blocks,
+            grid_candidates=cfg.grid_candidates,
+            svd_method=cfg.svd_method,
+        )
+    merged = _lamc_jit(a, cfg, plan)
+    return LAMCResult(merged.row_labels, merged.col_labels,
+                      merged.row_votes, merged.col_votes, plan)

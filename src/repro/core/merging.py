@@ -1,0 +1,244 @@
+"""Hierarchical co-cluster merging (paper §IV-D).
+
+The paper specifies the merge only behaviourally (iteratively combine
+per-submatrix co-clusters into a consensus, robust to heterogeneity and
+model uncertainty). We provide two implementations:
+
+1. ``signature`` (primary, jittable, distributed-friendly): every atom
+   co-cluster is summarized by a *signature* — its member-mean over a small
+   set of globally shared ANCHOR columns (for row atoms; anchor rows for
+   column atoms). Anchor indices are derived from the plan seed, so every
+   device picks the same ``q`` anchors locally. Because all signatures are
+   means over the *same* feature subset, same-cluster atoms from ANY two
+   blocks/resamples are correlated — unlike per-block random projections,
+   whose inner products vanish for blocks with disjoint column sets (a bug
+   caught by tests/test_merging.py). Atoms are then aligned by one small
+   global k-means over signatures (``T_p*m*n*k`` points of dim ``q``), and
+   every point casts one vote per resample for its atom's global cluster;
+   final labels = argmax of votes.
+   The hierarchy: block -> signature (local reduce), signatures -> global
+   clusters (small shared clustering), votes -> labels (scatter reduce).
+   Communication is *labels + k x q floats per block* — never matrix data
+   (anchor features are a tiny ``phi x q`` gather each device does locally).
+
+2. ``jaccard`` (host-side numpy, paper-literal): atoms merge greedily along
+   block-columns, then block-rows, then across resamples whenever row/col
+   index-set Jaccard overlap exceeds a threshold (union-find). Quadratic in
+   atom count; used for validation and small problems.
+
+Both are exercised and cross-checked in ``tests/test_merging.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans as _kmeans
+
+__all__ = [
+    "MergeResult",
+    "anchor_indices",
+    "atom_signatures",
+    "signature_merge",
+    "jaccard_merge_host",
+]
+
+
+class MergeResult(NamedTuple):
+    row_labels: jax.Array   # (M,) int32
+    col_labels: jax.Array   # (N,) int32
+    row_votes: jax.Array    # (M, K_row) vote counts (support/confidence)
+    col_votes: jax.Array    # (N, K_col)
+
+
+def anchor_indices(seed_key: jax.Array, length: int, q: int) -> jax.Array:
+    """``q`` shared anchor indices into an axis of length ``length``.
+
+    Derived from the plan seed: every worker regenerates them identically —
+    nothing is broadcast (DESIGN.md §2).
+    """
+    return jax.random.choice(seed_key, length, (min(q, length),), replace=False)
+
+
+def atom_signatures(
+    feats: jax.Array,        # (B, P, q) anchor features per point
+    labels: jax.Array,       # (B, P) local labels in [0,k)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-atom signatures ``(B, k, q)`` and member counts ``(B, k)``.
+
+    ``feats[b, p]`` is point ``p``'s restriction to the globally shared
+    anchor set (for row atoms: ``A[row, anchor_cols]``). The signature is
+    the member mean, centered and unit-normalized.
+
+    Centering (subtracting the per-block feature mean) matters: raw cluster
+    means are dominated by the shared grand-mean direction (pairwise cosine
+    ~0.9 between *different* clusters), which destroys separability;
+    centered signatures isolate the cluster-specific deviation and are
+    near-orthogonal across clusters (measured in tests/test_merging.py).
+    """
+    feats = feats - jnp.mean(feats, axis=1, keepdims=True)       # center
+    onehot = jax.nn.one_hot(labels, k, dtype=feats.dtype)        # (B, P, k)
+    sums = jnp.einsum("bpk,bpq->bkq", onehot, feats)             # (B, k, q)
+    counts = jnp.sum(onehot, axis=1)                             # (B, k)
+    sig = sums / jnp.maximum(counts[..., None], 1.0)
+    # unit-normalize: scale-invariant alignment across blocks
+    norm = jnp.linalg.norm(sig, axis=-1, keepdims=True)
+    return sig / jnp.maximum(norm, 1e-12), counts
+
+
+def _cluster_atoms(key, sigs, counts, k_global, n_iter):
+    """Small shared k-means over atom signatures, weighted by atom member
+    counts — empty atoms get zero weight and never attract centroids."""
+    flat = sigs.reshape(-1, sigs.shape[-1])
+    w = counts.reshape(-1)
+    res = _kmeans.kmeans(key, flat, k_global, n_iter=n_iter, weights=w)
+    return res.labels  # (n_atoms,)
+
+
+def signature_merge(
+    key: jax.Array,
+    *,
+    row_sigs: jax.Array,     # (T_p, B, k, q)
+    row_counts: jax.Array,   # (T_p, B, k)
+    row_labels: jax.Array,   # (T_p, B, phi) local labels
+    row_index: jax.Array,    # (T_p, m, phi) global row ids per block-row
+    col_sigs: jax.Array,     # (T_p, B, d, q)
+    col_counts: jax.Array,
+    col_labels: jax.Array,   # (T_p, B, psi)
+    col_index: jax.Array,    # (T_p, n, psi)
+    n_rows: int,
+    n_cols: int,
+    k_row: int,
+    k_col: int,
+    m: int,
+    n: int,
+    kmeans_iters: int = 25,
+) -> MergeResult:
+    """Jittable consensus merge. See module docstring for the scheme."""
+    kr, kc = jax.random.split(key)
+    t_p, b, k, _q = row_sigs.shape
+    d = col_sigs.shape[2]
+
+    # --- rows ---
+    atom_global = _cluster_atoms(kr, row_sigs, row_counts, k_row, kmeans_iters)
+    atom_global = atom_global.reshape(t_p, b, k)             # (T_p,B,k)
+    # each point's global cluster per (resample, col-block) vote
+    point_global = jnp.take_along_axis(
+        atom_global, row_labels, axis=2
+    )                                                        # (T_p,B,phi) via labels indexing k-axis
+    # global row id of each voting point: block b = i*n + j -> row-group i
+    i_of_b = jnp.arange(b) // n                              # (B,)
+    rows_of_block = row_index[:, i_of_b, :]                  # (T_p,B,phi)
+    row_votes = jnp.zeros((n_rows, k_row), jnp.float32).at[
+        rows_of_block.reshape(-1),
+        point_global.reshape(-1),
+    ].add(1.0)
+    final_rows = jnp.argmax(row_votes, axis=1).astype(jnp.int32)
+
+    # --- cols ---
+    atom_global_c = _cluster_atoms(kc, col_sigs, col_counts, k_col, kmeans_iters)
+    atom_global_c = atom_global_c.reshape(t_p, b, d)
+    point_global_c = jnp.take_along_axis(atom_global_c, col_labels, axis=2)
+    j_of_b = jnp.arange(b) % n
+    cols_of_block = col_index[:, j_of_b, :]                  # (T_p,B,psi)
+    col_votes = jnp.zeros((n_cols, k_col), jnp.float32).at[
+        cols_of_block.reshape(-1),
+        point_global_c.reshape(-1),
+    ].add(1.0)
+    final_cols = jnp.argmax(col_votes, axis=1).astype(jnp.int32)
+
+    return MergeResult(final_rows, final_cols, row_votes, col_votes)
+
+
+# ---------------------------------------------------------------------------
+# Host-side paper-literal hierarchical merge (validation / small problems)
+# ---------------------------------------------------------------------------
+
+
+class _UnionFind:
+    def __init__(self, n: int):
+        self.parent = list(range(n))
+
+    def find(self, x: int) -> int:
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[max(ra, rb)] = min(ra, rb)
+
+
+def _jaccard(a: set, b: set) -> float:
+    if not a or not b:
+        return 0.0
+    inter = len(a & b)
+    return inter / (len(a) + len(b) - inter)
+
+
+def jaccard_merge_host(
+    atoms: list[dict],
+    n_rows: int,
+    n_cols: int,
+    tau: float = 0.3,
+    min_support: int = 1,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Greedy hierarchical union-find merge over atom co-clusters.
+
+    ``atoms``: list of {"rows": set[int], "cols": set[int], "resample": int,
+    "block": (i, j)}. Merge order follows the paper's hierarchy: same
+    row-group across column blocks (row-overlap), then across row-groups
+    (col-overlap), then across resamples (row+col overlap). Returns
+    (row_labels, col_labels) with -1 for unassigned.
+    """
+    n_atoms = len(atoms)
+    uf = _UnionFind(n_atoms)
+
+    def stage(pred, score):
+        for x in range(n_atoms):
+            for y in range(x + 1, n_atoms):
+                if uf.find(x) == uf.find(y):
+                    continue
+                if pred(atoms[x], atoms[y]) and score(atoms[x], atoms[y]) >= tau:
+                    uf.union(x, y)
+
+    # 1) same resample, same row-group, different col blocks: share rows
+    stage(
+        lambda a_, b_: a_["resample"] == b_["resample"] and a_["block"][0] == b_["block"][0],
+        lambda a_, b_: _jaccard(a_["rows"], b_["rows"]),
+    )
+    # 2) same resample, different row-groups: share cols
+    stage(
+        lambda a_, b_: a_["resample"] == b_["resample"],
+        lambda a_, b_: _jaccard(a_["cols"], b_["cols"]),
+    )
+    # 3) across resamples: share both
+    stage(
+        lambda a_, b_: True,
+        lambda a_, b_: 0.5 * (_jaccard(a_["rows"], b_["rows"]) + _jaccard(a_["cols"], b_["cols"])),
+    )
+
+    groups: dict[int, list[int]] = {}
+    for x in range(n_atoms):
+        groups.setdefault(uf.find(x), []).append(x)
+
+    row_votes = np.zeros((n_rows, len(groups)), np.int64)
+    col_votes = np.zeros((n_cols, len(groups)), np.int64)
+    for gi, members in enumerate(groups.values()):
+        if len(members) < min_support:
+            continue
+        for a_idx in members:
+            for r in atoms[a_idx]["rows"]:
+                row_votes[r, gi] += 1
+            for c in atoms[a_idx]["cols"]:
+                col_votes[c, gi] += 1
+    row_labels = np.where(row_votes.sum(1) > 0, row_votes.argmax(1), -1)
+    col_labels = np.where(col_votes.sum(1) > 0, col_votes.argmax(1), -1)
+    return row_labels, col_labels

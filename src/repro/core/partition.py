@@ -1,0 +1,135 @@
+"""Large-matrix partitioning (paper §IV-B).
+
+A :class:`PartitionPlan` describes how ``A (M x N)`` is cut into an ``m x n``
+grid of uniform ``phi x psi`` blocks, repeated for ``T_p`` independent random
+resamples. Permutations are derived from a counter-based PRNG
+(``jax.random.fold_in``) so that in the distributed runtime every device can
+re-derive its block's row/col indices from ``(seed, resample_index)`` alone —
+no index lists ever cross the interconnect (DESIGN.md §2).
+
+Rows/cols that do not fit the uniform grid (``M mod m*phi``) are simply left
+out of that resample; across ``T_p`` random resamples every index is covered
+with overwhelming probability, and the Theorem-1 budget already accounts for
+per-resample misses. ``coverage_probability`` quantifies it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import probability
+
+__all__ = ["PartitionPlan", "make_plan", "resample_indices", "extract_blocks",
+           "coverage_probability"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    n_rows: int
+    n_cols: int
+    m: int            # row-blocks per resample
+    n: int            # col-blocks per resample
+    phi: int          # rows per block
+    psi: int          # cols per block
+    t_p: int          # number of resamples
+    seed: int = 0
+    detection_p: float = 1.0  # Theorem-1 lower bound used to pick t_p
+
+    @property
+    def blocks_per_resample(self) -> int:
+        return self.m * self.n
+
+    @property
+    def total_blocks(self) -> int:
+        return self.m * self.n * self.t_p
+
+    @property
+    def rows_used(self) -> int:
+        return self.m * self.phi
+
+    @property
+    def cols_used(self) -> int:
+        return self.n * self.psi
+
+
+def make_plan(
+    n_rows: int,
+    n_cols: int,
+    *,
+    min_cocluster_rows: int,
+    min_cocluster_cols: int,
+    p_thresh: float = 0.95,
+    workers: int = 1,
+    seed: int = 0,
+    k: int = 8,
+    expected_failed_blocks: int = 0,
+    grid_candidates=(1, 2, 4, 8, 16, 32),
+    svd_method: str = "randomized",
+) -> PartitionPlan:
+    """Optimal plan via the probabilistic model (Eq. 4 + cost search)."""
+    cand = probability.plan_partition(
+        n_rows,
+        n_cols,
+        min_cocluster_rows=min_cocluster_rows,
+        min_cocluster_cols=min_cocluster_cols,
+        p_thresh=p_thresh,
+        workers=workers,
+        k=k,
+        expected_failed_blocks=expected_failed_blocks,
+        grid_candidates=grid_candidates,
+        svd_method=svd_method,
+    )
+    return PartitionPlan(
+        n_rows=n_rows,
+        n_cols=n_cols,
+        m=cand.m,
+        n=cand.n,
+        phi=cand.phi,
+        psi=cand.psi,
+        t_p=cand.t_p,
+        seed=seed,
+        detection_p=cand.detection_p,
+    )
+
+
+def coverage_probability(plan: PartitionPlan) -> float:
+    """P(a given row appears in >= 1 of the T_p resamples)."""
+    miss_row = 1.0 - plan.rows_used / plan.n_rows
+    return 1.0 - miss_row**plan.t_p
+
+
+def resample_indices(plan: PartitionPlan, resample: jax.Array | int):
+    """Row/col index groups for one resample.
+
+    Returns ``(row_idx, col_idx)`` of shapes ``(m, phi)`` / ``(n, psi)``:
+    ``row_idx[i]`` are the global row ids landing in block-row ``i``.
+    Deterministic in ``(plan.seed, resample)`` — re-derivable anywhere.
+    """
+    key = jax.random.fold_in(jax.random.key(plan.seed), resample)
+    krow, kcol = jax.random.split(key)
+    row_perm = jax.random.permutation(krow, plan.n_rows)[: plan.rows_used]
+    col_perm = jax.random.permutation(kcol, plan.n_cols)[: plan.cols_used]
+    row_idx = row_perm.reshape(plan.m, plan.phi)
+    col_idx = col_perm.reshape(plan.n, plan.psi)
+    return row_idx, col_idx
+
+
+def extract_blocks(a: jax.Array, plan: PartitionPlan, resample: jax.Array | int):
+    """Extract the ``(m*n, phi, psi)`` block stack for one resample.
+
+    Also returns the index maps so labels can be scattered back:
+    ``blocks[i * n + j] == a[row_idx[i]][:, col_idx[j]]``.
+    """
+    row_idx, col_idx = resample_indices(plan, resample)
+    # Gather rows once (m*phi, N), then columns once, then tile-split.
+    sub = a[row_idx.reshape(-1)][:, col_idx.reshape(-1)]  # (m*phi, n*psi)
+    blocks = (
+        sub.reshape(plan.m, plan.phi, plan.n, plan.psi)
+        .transpose(0, 2, 1, 3)
+        .reshape(plan.m * plan.n, plan.phi, plan.psi)
+    )
+    return blocks, row_idx, col_idx

@@ -1,0 +1,316 @@
+"""Probabilistic partition model — Theorem 1 / Eqs. (1)-(4) of the LAMC paper.
+
+The model bounds the probability of *failing* to detect a co-cluster ``C_k``
+(of size ``M_k x N_k`` inside an ``M x N`` matrix) when the matrix is
+partitioned into an ``m x n`` grid of uniform ``phi x psi`` blocks, and the
+atom co-clusterer needs at least ``T_m`` rows and ``T_n`` columns of the
+co-cluster to land inside one block.
+
+All formulas follow the paper's Appendix:
+
+    s(k) = M_k / M - (T_m - 1) / phi              (Eq. 16)
+    t(k) = N_k / N - (T_n - 1) / psi
+    P(omega_k) <= exp{-2 [phi m s^2 + psi n t^2]} (Eq. 17 / Thm. 1)
+    P_detect  >= 1 - P(omega_k)^{T_p}             (Eq. 18 / Eq. 3)
+
+and Eq. (4) is solved in closed form for the minimal number of resamples
+``T_p`` achieving a target success probability.
+
+Everything here is plain float math (host side): these quantities drive the
+*plan*, not the on-device compute, and are consumed before any jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "margin_terms",
+    "failure_exponent",
+    "failure_bound",
+    "detection_probability",
+    "min_resamples",
+    "PartitionSpec1D",
+    "PlanCandidate",
+    "plan_partition",
+    "mc_failure_estimate",
+    "resamples_for_failures",
+]
+
+
+def margin_terms(
+    cocluster_rows: float,
+    cocluster_cols: float,
+    n_rows: int,
+    n_cols: int,
+    phi: int,
+    psi: int,
+    t_m: int,
+    t_n: int,
+) -> tuple[float, float]:
+    """``(s, t)`` margins of Eq. (16).
+
+    ``s`` (resp. ``t``) is the gap between the co-cluster's row (col) density
+    and the fraction of a block the atom method needs to see. Non-positive
+    margins mean Theorem 1 gives a vacuous bound (block too small for the
+    co-cluster to be reliably caught).
+    """
+    s = cocluster_rows / n_rows - (t_m - 1) / phi
+    t = cocluster_cols / n_cols - (t_n - 1) / psi
+    return s, t
+
+
+def failure_exponent(
+    s: float, t: float, phi: int, psi: int, m: int, n: int
+) -> float:
+    """Exponent ``2[phi m s^2 + psi n t^2]`` of Theorem 1 (clamped at 0)."""
+    if s <= 0.0 or t <= 0.0:
+        return 0.0
+    return 2.0 * (phi * m * s * s + psi * n * t * t)
+
+
+def failure_bound(
+    cocluster_rows: float,
+    cocluster_cols: float,
+    n_rows: int,
+    n_cols: int,
+    m: int,
+    n: int,
+    t_m: int,
+    t_n: int,
+) -> float:
+    """Upper bound on ``P(omega_k)`` — one resample failing to expose C_k.
+
+    Uses uniform blocks ``phi = M/m``, ``psi = N/n`` (paper's final form).
+    """
+    phi = max(1, n_rows // m)
+    psi = max(1, n_cols // n)
+    s, t = margin_terms(cocluster_rows, cocluster_cols, n_rows, n_cols, phi, psi, t_m, t_n)
+    return math.exp(-failure_exponent(s, t, phi, psi, m, n))
+
+
+def detection_probability(
+    t_p: int,
+    cocluster_rows: float,
+    cocluster_cols: float,
+    n_rows: int,
+    n_cols: int,
+    m: int,
+    n: int,
+    t_m: int,
+    t_n: int,
+) -> float:
+    """Lower bound on detection probability after ``T_p`` resamples (Eq. 3)."""
+    fail = failure_bound(cocluster_rows, cocluster_cols, n_rows, n_cols, m, n, t_m, t_n)
+    return 1.0 - fail**t_p
+
+
+def min_resamples(
+    p_thresh: float,
+    cocluster_rows: float,
+    cocluster_cols: float,
+    n_rows: int,
+    n_cols: int,
+    m: int,
+    n: int,
+    t_m: int,
+    t_n: int,
+    max_resamples: int = 4096,
+) -> int:
+    """Closed-form solution of Eq. (4):
+
+    ``T_p = ceil( ln(1 - P_thresh) / ln(P(omega_k)) )``
+
+    Returns ``max_resamples`` when the Theorem-1 bound is vacuous (margin
+    <= 0) — the caller should then grow the block sizes instead.
+    """
+    if not 0.0 < p_thresh < 1.0:
+        raise ValueError(f"p_thresh must be in (0,1), got {p_thresh}")
+    fail = failure_bound(cocluster_rows, cocluster_cols, n_rows, n_cols, m, n, t_m, t_n)
+    if fail >= 1.0:  # vacuous bound
+        return max_resamples
+    if fail <= 0.0:
+        return 1
+    t_p = math.ceil(math.log(1.0 - p_thresh) / math.log(fail))
+    return int(min(max(t_p, 1), max_resamples))
+
+
+def resamples_for_failures(
+    base_t_p: int,
+    n_blocks: int,
+    expected_failed_blocks: int,
+) -> int:
+    """Fault-tolerance margin: bump ``T_p`` so that losing
+    ``expected_failed_blocks`` of ``n_blocks`` per resample keeps the same
+    detection exponent.
+
+    Losing a fraction ``f`` of blocks scales the Theorem-1 exponent by
+    ``(1 - f)`` (fewer independent block trials), so the exponent is restored
+    by ``T_p' = T_p / (1 - f)``. This is the paper's over-sampling knob
+    repurposed as a resilience budget (DESIGN.md §5).
+    """
+    if expected_failed_blocks <= 0:
+        return base_t_p
+    f = min(expected_failed_blocks / max(n_blocks, 1), 0.9)
+    return int(math.ceil(base_t_p / (1.0 - f)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec1D:
+    """Uniform split of one axis: ``count`` groups of size ``size``."""
+
+    count: int
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One evaluated (m, n, T_p) configuration with its cost estimate."""
+
+    m: int
+    n: int
+    phi: int
+    psi: int
+    t_p: int
+    detection_p: float
+    est_cost: float  # arbitrary units: block-work x blocks / workers
+
+
+def _atom_cost(phi: int, psi: int, rank: int, svd_iters: int, kmeans_iters: int,
+               k: int, svd_method: str = "randomized") -> float:
+    """Napkin cost of spectral co-clustering one ``phi x psi`` block.
+
+    ``randomized``: ``svd_iters`` passes of ``A @ Omega``-style matmuls
+    (2*phi*psi*rank each) + k-means over phi+psi points in rank dims —
+    linear in the block area, so partitioning pays off only via workers.
+    ``exact``: LAPACK-style O(phi*psi*min(phi,psi)) — superlinear, so
+    partitioning wins even serially (the paper's dense-matrix regime).
+    """
+    if svd_method == "exact":
+        svd = float(phi) * psi * min(phi, psi)
+    else:
+        svd = 4.0 * svd_iters * phi * psi * rank
+    km = 2.0 * kmeans_iters * (phi + psi) * rank * k
+    return svd + km
+
+
+def plan_partition(
+    n_rows: int,
+    n_cols: int,
+    *,
+    min_cocluster_rows: int,
+    min_cocluster_cols: int,
+    t_m: int = 2,
+    t_n: int = 2,
+    p_thresh: float = 0.95,
+    workers: int = 1,
+    rank: int = 8,
+    svd_iters: int = 4,
+    kmeans_iters: int = 16,
+    k: int = 8,
+    grid_candidates: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    max_resamples: int = 4096,
+    expected_failed_blocks: int = 0,
+    svd_method: str = "randomized",
+    min_phi: int | None = None,
+    min_psi: int | None = None,
+) -> PlanCandidate:
+    """Pick the (m, n, T_p) minimizing estimated wall-cost subject to
+    ``P_detect >= p_thresh`` (paper §IV-B.2, Eq. 4).
+
+    ``min_cocluster_{rows,cols}`` is the smallest co-cluster the caller
+    still wants to detect — the adversarial ``C_k`` of Theorem 1.
+    ``workers`` is the number of parallel processing units (devices); cost
+    is total block work divided by workers, in waves of ``m*n`` blocks.
+
+    Besides the Theorem-1 feasibility check, candidates must satisfy atom
+    *resolvability*: a block needs at least ``min_phi x min_psi`` entries
+    (default ``8k x 8k``) to host ``k`` separable clusters — degenerate
+    sliver blocks pass the detection bound but starve the atom method of
+    context, so they are pruned here.
+    """
+    if min_phi is None:
+        min_phi = max(32, 8 * k)
+    if min_psi is None:
+        min_psi = max(32, 8 * k)
+    best: PlanCandidate | None = None
+    for m in grid_candidates:
+        if m > n_rows:
+            continue
+        for n in grid_candidates:
+            if n > n_cols:
+                continue
+            phi = max(1, n_rows // m)
+            psi = max(1, n_cols // n)
+            if (m, n) != (1, 1) and (phi < min_phi or psi < min_psi):
+                continue
+            # aspect cap: sliver blocks (m >> n or n >> m) minimize the
+            # exact-SVD cost model but starve the atom method; bound the
+            # grid anisotropy to 4x.
+            if max(m, n) > 4 * min(m, n) and (m, n) != (1, 1):
+                continue
+            t_p = min_resamples(
+                p_thresh,
+                min_cocluster_rows,
+                min_cocluster_cols,
+                n_rows,
+                n_cols,
+                m,
+                n,
+                t_m,
+                t_n,
+                max_resamples=max_resamples,
+            )
+            t_p = resamples_for_failures(t_p, m * n, expected_failed_blocks)
+            p = detection_probability(
+                t_p, min_cocluster_rows, min_cocluster_cols,
+                n_rows, n_cols, m, n, t_m, t_n,
+            )
+            if p < p_thresh and (m, n) != (1, 1):
+                continue  # infeasible under the bound; (1,1) always "detects"
+            blocks = m * n * t_p
+            waves = math.ceil(blocks / max(workers, 1))
+            cost = waves * _atom_cost(phi, psi, rank, svd_iters, kmeans_iters, k,
+                                      svd_method=svd_method)
+            cand = PlanCandidate(m=m, n=n, phi=phi, psi=psi, t_p=t_p,
+                                 detection_p=p, est_cost=cost)
+            if best is None or cand.est_cost < best.est_cost:
+                best = cand
+    assert best is not None, "grid_candidates produced no feasible plan"
+    return best
+
+
+def mc_failure_estimate(
+    rng: np.random.Generator,
+    cocluster_rows: int,
+    cocluster_cols: int,
+    n_rows: int,
+    n_cols: int,
+    m: int,
+    n: int,
+    t_m: int,
+    t_n: int,
+    trials: int = 2000,
+) -> float:
+    """Monte-Carlo estimate of the true P(omega_k) for validating Theorem 1.
+
+    Samples random row/col permutations, splits into uniform blocks, and
+    checks whether *no* block receives >= T_m co-cluster rows and >= T_n
+    co-cluster cols. Used by tests to confirm the analytic bound dominates.
+    """
+    phi = n_rows // m
+    psi = n_cols // n
+    failures = 0
+    for _ in range(trials):
+        row_hits = rng.permutation(n_rows)[: m * phi].reshape(m, phi) < cocluster_rows
+        col_hits = rng.permutation(n_cols)[: n * psi].reshape(n, psi) < cocluster_cols
+        rows_per_block = row_hits.sum(axis=1)  # (m,)
+        cols_per_block = col_hits.sum(axis=1)  # (n,)
+        detected = (rows_per_block[:, None] >= t_m) & (cols_per_block[None, :] >= t_n)
+        if not detected.any():
+            failures += 1
+    return failures / trials

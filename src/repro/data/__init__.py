@@ -1,0 +1,18 @@
+from .synthetic import (
+    PlantedCoClusters,
+    amazon1000_proxy,
+    classic4_proxy,
+    planted_cocluster_matrix,
+    rcv1_proxy,
+)
+from .tokens import TokenBatchSpec, synthetic_lm_batches
+
+__all__ = [
+    "PlantedCoClusters",
+    "planted_cocluster_matrix",
+    "amazon1000_proxy",
+    "classic4_proxy",
+    "rcv1_proxy",
+    "TokenBatchSpec",
+    "synthetic_lm_batches",
+]

@@ -1,0 +1,62 @@
+"""Deterministic synthetic LM token pipeline.
+
+Provides the training/serving data path for the assigned-architecture stack:
+an infinite, restart-reproducible stream of (tokens, targets) batches. Data
+is generated with a counter-based PRNG keyed on (seed, step) so that:
+
+  * resuming from a checkpoint at step S regenerates the exact same batch
+    sequence (fault-tolerance requirement — no data-loader state to persist);
+  * every data-parallel shard derives its own slice locally — the pipeline
+    performs zero host-to-host communication.
+
+The token distribution is a Zipfian unigram mix with injected n-gram
+structure so cross-entropy actually decreases during the example training
+runs (pure-uniform tokens would make loss curves flat and tests vacuous).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["TokenBatchSpec", "synthetic_lm_batches", "make_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenBatchSpec:
+    batch_size: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+
+
+def _zipf_probs(vocab_size: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+def make_batch(spec: TokenBatchSpec, step: int) -> dict[str, np.ndarray]:
+    """One (tokens, targets) batch, deterministic in (spec.seed, step)."""
+    rng = np.random.default_rng(np.random.SeedSequence([spec.seed, step]))
+    probs = _zipf_probs(min(spec.vocab_size, 8192))
+    base = rng.choice(len(probs), size=(spec.batch_size, spec.seq_len + 1), p=probs)
+    # inject learnable bigram structure: with p=0.5, t[i+1] = f(t[i])
+    succ = (np.arange(len(probs)) * 31 + 7) % len(probs)
+    copy_mask = rng.random((spec.batch_size, spec.seq_len)) < 0.5
+    for t in range(spec.seq_len):
+        nxt = succ[base[:, t]]
+        base[:, t + 1] = np.where(copy_mask[:, t], nxt, base[:, t + 1])
+    tokens = base[:, :-1].astype(np.int32)
+    targets = base[:, 1:].astype(np.int32)
+    return {"tokens": tokens, "targets": targets}
+
+
+def synthetic_lm_batches(spec: TokenBatchSpec, start_step: int = 0) -> Iterator[dict]:
+    """Infinite restartable batch stream (see module docstring)."""
+    step = start_step
+    while True:
+        yield make_batch(spec, step)
+        step += 1

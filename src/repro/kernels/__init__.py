@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), with shared
+``ops.py`` (jit'd, shape-safe wrappers) and ``ref.py`` (pure-jnp oracles).
+On non-TPU backends ops run the kernels in interpret mode (tests) or fall
+back to the references.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused bipartite-graph normalization scale-apply.
+
+Computes ``out = A * rsqrt(max(d1,eps))[:,None] * rsqrt(max(d2,eps))[None,:]``
+(Eq. 7's ``A_n = D1^{-1/2} A D2^{-1/2}``) in a single pass: the naive jnp
+formulation materializes two broadcast intermediates (HBM traffic ~4|A|);
+the fused kernel reads A once and writes A_n once (~2|A|), with the rsqrt
+folded into the tile compute. Degree sums themselves are row/col reductions
+XLA already fuses well; they stay in jnp (see ops.bipartite_normalize).
+
+Grid: 2-D over (row tiles, col tiles). VMEM per step:
+``tile_m*tile_n + tile_m + tile_n`` floats — 256 KB at 256 x 256 f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scale_apply_pallas"]
+
+
+def _kernel(a_ref, d1_ref, d2_ref, out_ref, *, eps: float):
+    a = a_ref[...].astype(jnp.float32)                 # (TM, TN)
+    d1 = d1_ref[...].astype(jnp.float32)               # (TM,)
+    d2 = d2_ref[...].astype(jnp.float32)               # (TN,)
+    s1 = jax.lax.rsqrt(jnp.maximum(d1, eps))
+    s2 = jax.lax.rsqrt(jnp.maximum(d2, eps))
+    out_ref[...] = (a * s1[:, None] * s2[None, :]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "eps", "interpret"))
+def scale_apply_pallas(
+    a: jax.Array,    # (M, N)
+    d1: jax.Array,   # (M,) raw row degrees
+    d2: jax.Array,   # (N,) raw col degrees
+    tile_m: int = 256,
+    tile_n: int = 256,
+    eps: float = 1e-8,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = a.shape
+    grid = (pl.cdiv(m, tile_m), pl.cdiv(n, tile_n))
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_m,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, d1, d2)

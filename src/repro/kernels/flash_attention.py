@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention, forward pass.
+
+The LM substrate's compute hot spot for train/prefill. Standard flash
+recurrence: for each query tile, stream KV tiles through VMEM keeping a
+running row-max ``m``, normalizer ``l`` and output accumulator in f32
+scratch; never materializes the (Sq, Skv) score matrix.
+
+Grid: ``(B*H, Sq/tile_q, Skv/tile_k)`` — the innermost (KV) axis is
+sequential on TPU, which is exactly the flash streaming order. Causal
+tiles strictly above the diagonal are skipped via ``pl.when`` (no compute,
+no VMEM traffic for the masked region beyond the block fetch).
+
+VMEM per step: ``tile_q*d + 2*tile_k*d + tile_q*tile_k + tile_q*(d+2)``
+floats ~ 1.4 MB at (tile_q, tile_k, d) = (512, 512, 128) f32 — room for
+double buffering in 16 MB v5e VMEM. MXU contractions pinned to f32
+accumulation via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, tile_q, tile_k, nk, kv_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_k), 0)
+    k_pos = ki * tile_k + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_k), 1)
+    # skip tiles strictly above the causal diagonal (no compute for them)
+    tile_live = (qi * tile_q + tile_q - 1 >= ki * tile_k) if causal else (ki >= 0)
+
+    @pl.when(tile_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (TQ, D)
+        k = k_ref[0].astype(jnp.float32)             # (TK, D)
+        v = v_ref[0].astype(jnp.float32)             # (TK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (TQ, TK)
+        mask = k_pos < kv_len                        # padded KV tail
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]                           # (TQ,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])               # (TQ, TK)
+        corr = jnp.exp(m_prev - m_new)                # (TQ,)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "tile_q", "tile_k", "interpret", "kv_len"),
+)
+def flash_attention_pallas(
+    q: jax.Array,    # (BH, Sq, D) — heads already folded, padded by ops.py
+    k: jax.Array,    # (BH, Skv, D)
+    v: jax.Array,    # (BH, Skv, D)
+    *,
+    kv_len: int,           # true (unpadded) KV length for masking
+    causal: bool = True,
+    tile_q: int = 512,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    nq = pl.cdiv(sq, tile_q)
+    nk = pl.cdiv(skv, tile_k)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal,
+        tile_q=tile_q, tile_k=tile_k, nk=nk, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, tile_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tile_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tile_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q,), jnp.float32),
+            pltpu.VMEM((tile_q,), jnp.float32),
+            pltpu.VMEM((tile_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

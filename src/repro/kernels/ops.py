@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op:
+  * pads inputs to hardware-aligned tile multiples (MXU wants multiples of
+    128 in the contracted/lane dims; sublane multiples of 8 for f32),
+  * handles semantic edge cases the raw kernels don't (centroid-count
+    sentinels, GQA head expansion, unpadding),
+  * dispatches: real Pallas lowering on TPU, ``interpret=True`` elsewhere
+    (the kernel body executes on CPU — used by the test suite), or the
+    pure-jnp reference for very small inputs where padding overhead
+    dominates.
+
+Set ``REPRO_FORCE_INTERPRET=1`` to force interpret mode on any backend.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bipartite_normalize import scale_apply_pallas
+from .flash_attention import flash_attention_pallas
+from .kmeans_assign import kmeans_assign_pallas
+
+__all__ = ["kmeans_assign", "bipartite_normalize", "flash_attention"]
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def kmeans_assign(x: jax.Array, centroids: jax.Array,
+                  tile_p: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Tiled nearest-centroid assignment. x: (P, D); centroids: (K, D).
+
+    Padded centroids are +1e6 sentinels — farther than any real centroid,
+    so argmin never selects them; padded points are sliced off the output.
+    """
+    p, d = x.shape
+    k = centroids.shape[0]
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
+    cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
+    labels, d2 = kmeans_assign_pallas(xp, cp, tile_p=tile_p, interpret=_interpret())
+    return labels[:p], d2[:p]
+
+
+def bipartite_normalize(a: jax.Array, eps: float = 1e-8,
+                        tile_m: int = 256, tile_n: int = 256):
+    """Fused ``A_n = D1^{-1/2} A D2^{-1/2}`` (degrees on |A|).
+
+    Returns ``(a_n, d1_isqrt, d2_isqrt)`` with the same contract as
+    ``core.spectral.normalize_bipartite``.
+    """
+    m, n = a.shape
+    aa = jnp.abs(a)
+    d1 = jnp.sum(aa, axis=1)
+    d2 = jnp.sum(aa, axis=0)
+    ap = _pad_to(_pad_to(a, 0, tile_m), 1, tile_n)
+    d1p = _pad_to(d1, 0, tile_m, value=1.0)
+    d2p = _pad_to(d2, 0, tile_n, value=1.0)
+    out = scale_apply_pallas(ap, d1p, d2p, tile_m=tile_m, tile_n=tile_n,
+                             eps=eps, interpret=_interpret())
+    d1_isqrt = jax.lax.rsqrt(jnp.maximum(d1, eps))
+    d2_isqrt = jax.lax.rsqrt(jnp.maximum(d2, eps))
+    return out[:m, :n], d1_isqrt, d2_isqrt
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, tile_q: int = 512,
+                    tile_k: int = 512) -> jax.Array:
+    """Blockwise attention. q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D).
+
+    GQA: ``Hq`` must be a multiple of ``Hkv``; KV heads are expanded here
+    (the kernel sees folded (B*H, S, D)). Sequences are padded to tile
+    multiples; the kernel masks padded KV columns via ``kv_len`` and padded
+    query rows are sliced off.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, f"GQA heads mismatch: {hq} % {hkv}"
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    tq = min(tile_q, max(8, sq))
+    tk = min(tile_k, max(128, skv))
+    qf = _pad_to(q.reshape(b * hq, sq, dh), 1, tq)
+    kf = _pad_to(k.reshape(b * hq, skv, dh), 1, tk)
+    vf = _pad_to(v.reshape(b * hq, skv, dh), 1, tk)
+    out = flash_attention_pallas(
+        qf, kf, vf, kv_len=skv, causal=causal,
+        tile_q=tq, tile_k=tk, interpret=_interpret(),
+    )
+    return out[:, :sq].reshape(b, hq, sq, dh)

@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+Each function is the semantic ground truth its kernel twin is tested
+against (``tests/test_kernels_*.py`` sweeps shapes/dtypes and
+``assert_allclose``s). They are also the CPU execution path selected by
+``ops.py`` when no TPU is present.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kmeans_assign_ref", "bipartite_normalize_ref", "attention_ref"]
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
+    """Nearest-centroid assignment: (labels int32, min squared distance)."""
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.maximum(jnp.min(d2, -1), 0.0)
+
+
+def bipartite_normalize_ref(a: jax.Array, d1: jax.Array, d2: jax.Array,
+                            eps: float = 1e-8):
+    """``A * rsqrt(max(d1,eps))[:,None] * rsqrt(max(d2,eps))[None,:]``."""
+    s1 = jax.lax.rsqrt(jnp.maximum(d1.astype(jnp.float32), eps))
+    s2 = jax.lax.rsqrt(jnp.maximum(d2.astype(jnp.float32), eps))
+    return (a.astype(jnp.float32) * s1[:, None] * s2[None, :]).astype(a.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True):
+    """Exact softmax attention. q,k,v: (BH, S, D); f32 math."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

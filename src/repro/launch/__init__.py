@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import ``dryrun`` from library code — it mutates XLA_FLAGS at
+import time (by design, for its own process).
+"""
+
+from . import mesh, roofline, steps
+
+__all__ = ["mesh", "roofline", "steps"]

@@ -1,0 +1,224 @@
+"""Analytic roofline cost model — trip-count-exact FLOPs / HBM bytes /
+collective bytes per (arch x shape x mesh) cell.
+
+WHY THIS EXISTS (measured, see EXPERIMENTS.md §Roofline methodology):
+XLA's ``HloCostAnalysis`` visits each while-loop body ONCE, ignoring trip
+counts. Every layer stack here is a ``lax.scan`` (48-80 iterations) and
+several blocks contain inner scans (KV-chunk attention, xLSTM sequence
+scan, chunked cross-entropy), so ``compiled.cost_analysis()`` undercounts
+FLOPs by ~2-3 orders of magnitude (calibrated against a no-scan config
+where both agree). The dry-run still records the raw numbers; the roofline
+*terms* come from this model, which is exact for our known program
+structure (we wrote every loop, so we know every trip count).
+
+Conventions:
+  * FLOPs are global per step; 1 MAC = 2 FLOPs.
+  * Backward = 2x forward matmul FLOPs; full-unit remat adds 1x forward
+    recompute (our checkpoint policy saves nothing inside a unit).
+  * HBM bytes are per-device, converted to a global-equivalent by x chips
+    (the roofline divides by chips x BW again, so terms stay per-device
+    honest).
+  * Collective bytes are wire bytes per device (ring algorithms:
+    all-gather of an N-byte tensor over k peers moves N*(k-1)/k per
+    device; all-reduce = 2x that; all-to-all = N*(k-1)/k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+__all__ = ["analytic_cell", "AnalyticCosts"]
+
+
+@dataclasses.dataclass
+class AnalyticCosts:
+    flops_global: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    breakdown: dict
+
+
+def _ring(nbytes: float, k: int) -> float:
+    """Per-device wire bytes for an all-gather/reduce-scatter over k peers."""
+    if k <= 1:
+        return 0.0
+    return nbytes * (k - 1) / k
+
+
+def _attn_flops_fwd(cfg: ArchConfig, b: int, s: int, kv: int,
+                    causal_frac: float = 0.5) -> float:
+    """Scores + AV for one layer, forward."""
+    dh = cfg.head_dim_
+    return 4.0 * b * cfg.n_heads * s * kv * dh * causal_frac
+
+
+def _layer_matmul_params(cfg: ArchConfig, kind: str, moe_active: bool) -> float:
+    """Matmul-visible parameters of one block (what multiplies tokens)."""
+    d, dh = cfg.d_model, cfg.head_dim_
+    attn = d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2
+    ff = cfg.moe_d_ff or cfg.d_ff
+
+    def mlp_p(f):
+        return 3 * d * f
+
+    total = 0.0
+    if kind in ("attn", "local"):
+        total += attn
+    elif kind == "rglru":
+        d_rnn = d
+        total += 2 * d * d_rnn + d_rnn * d + 2 * d_rnn * d_rnn  # x/gate/out + a,i gates
+    elif kind == "mlstm":
+        total += 5 * d * d
+    elif kind == "slstm":
+        total += 6 * d * d + 4 * d * d / max(cfg.n_heads, 1)
+    if cfg.is_moe:
+        active = cfg.experts_per_token if moe_active else cfg.n_experts
+        total += active * mlp_p(ff) + cfg.n_shared_experts * mlp_p(ff)
+        total += d * cfg.n_experts  # router
+    elif cfg.d_ff > 0:
+        total += mlp_p(cfg.d_ff)
+    return total
+
+
+def _layer_kinds(cfg: ArchConfig):
+    kinds = ["attn"] * cfg.n_dense_layers
+    pat = cfg.block_pattern
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    for i in range(n_scan):
+        kinds.append(pat[i % len(pat)])
+    return kinds
+
+
+def analytic_cell(cfg: ArchConfig, shape: ShapeConfig, chips: int,
+                  model_axis: int = 16, fsdp_axis: int = 16,
+                  pod_axis: int = 1) -> AnalyticCosts:
+    b, s = shape.global_batch, shape.seq_len
+    d, v = cfg.d_model, cfg.vocab_size
+    kinds = _layer_kinds(cfg)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    # ----- FLOPs (global) -----
+    if shape.kind == "decode":
+        tokens = b
+        kv = s
+        fwd = 0.0
+        for kind in kinds:
+            fwd += 2.0 * _layer_matmul_params(cfg, kind, moe_active=True) * tokens
+            if kind == "attn":
+                fwd += _attn_flops_fwd(cfg, tokens, 1, kv, causal_frac=1.0)
+            elif kind == "local":
+                fwd += _attn_flops_fwd(cfg, tokens, 1, min(kv, cfg.window or kv),
+                                       causal_frac=1.0)
+            elif kind in ("mlstm",):
+                fwd += 10.0 * tokens * d * cfg.head_dim_
+        fwd += 2.0 * d * v * tokens  # lm head
+        if cfg.enc_dec:
+            fwd += len(kinds) * _attn_flops_fwd(cfg, tokens, 1, cfg.enc_seq_len, 1.0)
+        flops = fwd
+    else:
+        tokens = b * s
+        fwd = 0.0
+        for kind in kinds:
+            fwd += 2.0 * _layer_matmul_params(cfg, kind, moe_active=True) * tokens
+            if kind == "attn":
+                fwd += _attn_flops_fwd(cfg, b, s, s)
+            elif kind == "local":
+                w = cfg.window or s
+                fwd += _attn_flops_fwd(cfg, b, s, min(w, s), causal_frac=1.0 if w < s else 0.5)
+            elif kind == "mlstm":
+                fwd += 10.0 * tokens * d * cfg.head_dim_
+        fwd += 2.0 * d * v * tokens  # lm head
+        if cfg.enc_dec:
+            enc_tokens = b * cfg.enc_seq_len
+            enc_p = cfg.n_enc_layers * (_layer_matmul_params(
+                dataclasses.replace(cfg, n_experts=0), "attn", True))
+            fwd += 2.0 * enc_p * enc_tokens
+            fwd += cfg.n_enc_layers * _attn_flops_fwd(cfg, b, cfg.enc_seq_len,
+                                                      cfg.enc_seq_len, 1.0)
+            fwd += len(kinds) * _attn_flops_fwd(cfg, b, s, cfg.enc_seq_len, 1.0)
+        if shape.kind == "train":
+            # fwd + full-unit remat recompute + backward(2x) = 4x fwd matmuls
+            flops = 4.0 * fwd
+        else:
+            flops = fwd
+
+    # ----- HBM bytes (per device) -----
+    p_local = n_params / chips  # FSDP x TP shards across the whole mesh
+    bd = {}
+    if shape.kind == "train":
+        # weights: bf16 read fwd+remat+bwd (3x2B) + f32 master+m+v read/write
+        w_bytes = p_local * (3 * 2 + 8 * 4)
+        # activation carries: one (B,S,D) bf16 per layer, read+write ~3x,
+        # sharded over data x model (SP)
+        act_local = len(kinds) * (b * s * d * 2) / chips
+        a_bytes = 3 * act_local
+        # logits chunks: (B,S,V) f32 never materialized; chunk traffic ~
+        # 2 passes x f32, sharded over mesh
+        l_bytes = 2 * (b * s * v * 4) / chips
+        hbm = w_bytes + a_bytes + l_bytes
+        bd.update(weight_bytes=w_bytes, act_bytes=a_bytes, logit_bytes=l_bytes)
+    elif shape.kind == "prefill":
+        w_bytes = p_local * 2
+        act_local = len(kinds) * (b * s * d * 2) / chips
+        kv_local = sum(
+            (b * cfg.n_kv_heads * (min(cfg.window, s) if k == "local" and cfg.window else s)
+             * cfg.head_dim_ * 2 * 2) / chips
+            for k in kinds if k in ("attn", "local"))
+        hbm = w_bytes + 2 * act_local + kv_local
+        bd.update(weight_bytes=w_bytes, act_bytes=2 * act_local, kv_bytes=kv_local)
+    else:  # decode
+        w_bytes = (n_active if cfg.is_moe else n_params) / chips * 2
+        kv_local = sum(
+            (b * cfg.n_kv_heads * (min(cfg.window, s) if k == "local" and cfg.window else s)
+             * cfg.head_dim_ * 2 * 2) / chips
+            for k in kinds if k in ("attn", "local"))
+        state_local = 0.0
+        for k in kinds:
+            if k == "mlstm":
+                state_local += b * cfg.n_heads * cfg.head_dim_ ** 2 * 4 / chips
+            elif k in ("slstm", "rglru"):
+                state_local += b * d * 4 * 4 / chips
+        hbm = w_bytes + kv_local + state_local
+        bd.update(weight_bytes=w_bytes, kv_bytes=kv_local, state_bytes=state_local)
+
+    # ----- collective bytes (per device wire) -----
+    coll = 0.0
+    n_layers = len(kinds)
+    if shape.kind == "train":
+        # FSDP param all-gather (bf16) x3 passes + grad reduce-scatter (f32->bf16)
+        shard_after_tp = n_params * 2 / model_axis  # bytes per data-group
+        coll += 3 * _ring(shard_after_tp, fsdp_axis)
+        coll += 2 * _ring(shard_after_tp, fsdp_axis)       # grad RS+AG (AR)
+        # SP boundary AG (enter block) + RS (leave block) per layer x
+        # (fwd, remat, bwd). NOTE: the RS *is* the TP partial-sum reduction
+        # (Megatron-SP) — counting a separate TP psum would double-count.
+        x_bytes = b * s * d * 2 / (fsdp_axis * pod_axis)
+        coll += 3 * 2 * n_layers * _ring(x_bytes, model_axis)
+        if pod_axis > 1:
+            coll += 2 * _ring(n_params * 2 / (model_axis * fsdp_axis), pod_axis)
+        if cfg.is_moe:
+            # all-to-all token dispatch+combine, fwd+remat+bwd
+            moe_layers = n_layers - cfg.n_dense_layers
+            tok_bytes = b * s * d * 2 / chips * cfg.experts_per_token
+            coll += 3 * 2 * moe_layers * _ring(tok_bytes, model_axis)
+    elif shape.kind == "prefill":
+        shard_after_tp = n_params * 2 / model_axis
+        coll += _ring(shard_after_tp, fsdp_axis)
+        x_bytes = b * s * d * 2 / (fsdp_axis * pod_axis)
+        coll += 2 * n_layers * _ring(x_bytes, model_axis)  # SP AG+RS, fwd only
+        if cfg.is_moe:
+            tok_bytes = b * s * d * 2 / chips * cfg.experts_per_token
+            coll += 2 * n_layers * _ring(tok_bytes, model_axis)
+    else:  # decode: TP psums of (B,1,D) per layer + logits gather
+        x_bytes = b * d * 2 / max(fsdp_axis * pod_axis // 1, 1)
+        coll += 2 * n_layers * _ring(x_bytes, model_axis)
+        coll += _ring(b * v * 2 / (fsdp_axis * pod_axis), model_axis)
+        if cfg.is_moe:
+            coll += 2 * n_layers * _ring(x_bytes * cfg.experts_per_token, model_axis)
+    bd["coll_bytes"] = coll
+
+    return AnalyticCosts(flops_global=flops, hbm_bytes_per_dev=hbm,
+                         coll_bytes_per_dev=coll, breakdown=bd)

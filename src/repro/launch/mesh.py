@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so tests/benches see 1 CPU device while
+the dry-run process sees 512 forced host devices).
+
+Topology (TPU v5e):
+    single pod : (data=16, model=16)            = 256 chips
+    multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+The ``pod`` axis carries only small payloads (gradient all-reduce for LM
+training, LAMC signature gathers) — matching the DCN-connected reality of
+cross-pod links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.runtime.shardings import MeshAxes
+
+__all__ = ["make_production_mesh", "mesh_axes", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> MeshAxes:
+    """MeshAxes view of a mesh created by make_production_mesh."""
+    if "pod" in mesh.axis_names:
+        return MeshAxes(data=("pod", "data"), model="model")
+    return MeshAxes(data=("data",), model="model")
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many (forced) devices a test process has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,253 @@
+"""Jittable train/prefill/decode step builders shared by the dry-run,
+the training driver and the serving driver.
+
+``build_train_step`` returns the full production step: forward + backward
++ gradient all-reduce (implicit via shardings) + AdamW update — the real
+per-step cost the roofline measures. ``build_decode_step`` returns the
+single-token serve step over a KV cache.
+
+All builders also return ShapeDtypeStruct input specs and shardings so the
+dry-run can ``.lower(...).compile()`` without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import build_model
+from repro.models import transformer
+from repro.optim import AdamWConfig, adamw_init, adamw_update, wsd_schedule
+from repro.runtime import shardings as sh
+
+__all__ = ["padded_cfg", "input_specs", "build_train_step",
+           "build_prefill_step", "build_decode_step"]
+
+
+def padded_cfg(cfg: ArchConfig, mesh: Mesh | None = None) -> ArchConfig:
+    """Pad vocab to a shardable multiple (DESIGN.md §5)."""
+    v = sh.pad_vocab(cfg.vocab_size)
+    if v != cfg.vocab_size:
+        cfg = dataclasses.replace(cfg, vocab_size=v)
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.frontend == "patches":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), dtype)
+        if cfg.enc_dec:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq_len, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend == "patches":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), dtype)
+        if cfg.enc_dec:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq_len, cfg.d_model), dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    specs = {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.enc_dec:
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), dtype)
+    return specs
+
+
+def _param_struct(cfg: ArchConfig, model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def _auto_microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Gradient-accumulation factor for train cells whose activation
+    footprint would exceed the 16 GB/device budget (qwen2-vl / llama4 /
+    whisper at global_batch=256; §Perf G1). Napkin: per-device activation
+    temp ~ layers x (B,S,D) x ~6 bytes-equivalents / chips."""
+    act_gb = (cfg.n_layers * shape.global_batch * shape.seq_len * cfg.d_model
+              * 2 * 6) / mesh.devices.size / 2**30
+    mb = 1
+    while act_gb / mb > 5.0 and mb < 8 and shape.global_batch % (2 * mb) == 0:
+        mb *= 2
+    return mb
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     opt_cfg: AdamWConfig | None = None,
+                     microbatches: int | None = None):
+    """Returns (step_fn, arg_structs, in_shardings, out_shardings).
+
+    step_fn(train_state, batch) -> (train_state, metrics); train_state is
+    {"params":…, "opt": AdamWState} — optimizer states share the param
+    shardings (co-located, update fully local). ``microbatches > 1``
+    accumulates gradients over sequential micro-steps (activation memory
+    / k at the cost of k-fold FSDP re-gathers; auto-enabled for cells over
+    the HBM budget).
+    """
+    cfg = padded_cfg(cfg, mesh)
+    from repro.launch.mesh import mesh_axes
+    axes = mesh_axes(mesh)
+    act_sharding = None
+    if shape.seq_len % mesh.shape[axes.model] == 0:
+        # enc-dec included: the constraint applies to decoder carries only
+        act_sharding = NamedSharding(mesh, P(axes.fsdp, axes.model, None))
+    # probe the param structure once to build the per-unit gather constraint
+    probe = build_model(cfg)
+    p_probe = _param_struct(cfg, probe)
+    unit_constraint = sh.unit_gather_shardings(cfg, p_probe, mesh, axes)
+    model = build_model(cfg, act_sharding=act_sharding,
+                        unit_constraint=unit_constraint)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    p_struct = _param_struct(cfg, model)
+    p_specs = sh.param_specs(cfg, p_struct, mesh, axes)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    opt_struct = jax.eval_shape(adamw_init, p_struct)
+    opt_shard = type(opt_struct)(
+        step=NamedSharding(mesh, P()),
+        m=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                       is_leaf=lambda x: isinstance(x, P)),
+        v=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                       is_leaf=lambda x: isinstance(x, P)),
+    )
+    b_specs = sh.batch_specs(cfg, mesh, axes, batch=shape.global_batch)
+    ispecs = input_specs(cfg, shape)
+    b_shard = {k: NamedSharding(mesh, b_specs[k]) for k in ispecs}
+
+    n_mb = microbatches if microbatches is not None else \
+        _auto_microbatches(cfg, shape, mesh)
+
+    def step(state, batch):
+        if n_mb > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (loss, _parts), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(state["params"], mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_mb, gsum, grads)
+                return (gsum, lsum + loss / n_mb), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+            parts = {}
+        else:
+            (loss, parts), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(state["params"], batch)
+        lr_scale = wsd_schedule(state["opt"].step, warmup_steps=200,
+                                stable_steps=10_000, decay_steps=2_000)
+        new_p, new_opt, om = adamw_update(opt_cfg, state["params"], grads,
+                                          state["opt"], lr_scale)
+        metrics = {"loss": loss, **{k: v for k, v in parts.items()}, **om}
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    state_struct = {"params": p_struct, "opt": opt_struct}
+    state_shard = {"params": p_shard, "opt": opt_shard}
+    out_shard = (state_shard, None)
+    return step, (state_struct, ispecs), (state_shard, b_shard), out_shard
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """serve prefill: (params, batch) -> (last logits, caches)."""
+    cfg = padded_cfg(cfg, mesh)
+    from repro.launch.mesh import mesh_axes
+    axes = mesh_axes(mesh)
+    # SP activation sharding matters even more for prefill than training:
+    # without it the chunked-attention f32 accumulators replicate across the
+    # model axis (measured 137 GB/dev -> 1.1 GB/dev on smollm prefill_32k;
+    # EXPERIMENTS.md §Perf).
+    act_sharding = None
+    if shape.seq_len % mesh.shape[axes.model] == 0:
+        # enc-dec included: the constraint applies to decoder carries only
+        act_sharding = NamedSharding(mesh, P(axes.fsdp, axes.model, None))
+    model = build_model(cfg, param_dtype=jnp.bfloat16, act_sharding=act_sharding)
+    p_struct = _param_struct(cfg, model)
+    p_specs = sh.param_specs(cfg, p_struct, mesh, axes)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    ispecs = input_specs(cfg, shape)
+    b_specs = sh.batch_specs(cfg, mesh, axes, batch=shape.global_batch)
+    b_shard = {k: NamedSharding(mesh, b_specs[k]) for k in ispecs}
+
+    def step(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+        logits, caches = model.prefill(params, batch["tokens"], extra)
+        return logits
+
+    return step, (p_struct, ispecs), (p_shard, b_shard), None
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """serve decode: (params, cache, token, pos) -> (logits, cache)."""
+    cfg = padded_cfg(cfg, mesh)
+    from repro.launch.mesh import mesh_axes
+    axes = mesh_axes(mesh)
+    model = build_model(cfg, param_dtype=jnp.bfloat16)
+    p_struct = _param_struct(cfg, model)
+    p_specs = sh.param_specs(cfg, p_struct, mesh, axes)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    b = shape.global_batch
+    # auto-quantize the KV cache to int8 when the bf16 cache would exceed
+    # ~25% of v5e HBM per device: the decode step scan double-buffers the
+    # cache carry, so peak ~= 2.5x cache + weights (minicpm/qwen2-vl
+    # decode_32k measured; §Perf Q1/D1)
+    n_attn = sum(1 for k in range(cfg.n_layers)
+                 if cfg.block_pattern[k % len(cfg.block_pattern)] in ("attn",))
+    cache_gb = (b * cfg.n_kv_heads * shape.seq_len * cfg.head_dim_ * 2 * 2
+                * max(n_attn, 1)) / mesh.devices.size / 2**30
+    quantized = cache_gb > 0.25 * 16
+    cache_struct = jax.eval_shape(
+        functools.partial(model.init_decode_cache, b, shape.seq_len,
+                          quantized=quantized))
+    c_specs = sh.cache_specs(cfg, cache_struct, mesh, axes, batch=b)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    ispecs = input_specs(cfg, shape)
+    i_shard = {
+        "token": NamedSharding(mesh, P(axes.fsdp if b % _n(mesh, axes.fsdp) == 0
+                                       else None)),
+        "pos": NamedSharding(mesh, P()),
+    }
+    if "enc_out" in ispecs:
+        i_shard["enc_out"] = NamedSharding(
+            mesh, P(axes.fsdp if b % _n(mesh, axes.fsdp) == 0 else None,
+                    None, None))
+
+    def step(params, cache, token, pos, enc_out=None):
+        extra = {"enc_out": enc_out} if enc_out is not None else None
+        logits, new_cache = model.decode_step(params, token, cache, pos, extra)
+        return logits, new_cache
+
+    return step, (p_struct, cache_struct, ispecs), (p_shard, c_shard, i_shard), None
+
+
+def _n(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n

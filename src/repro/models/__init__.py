@@ -1,0 +1,5 @@
+"""Assigned-architecture model zoo (pure functional JAX, scan-over-layers)."""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

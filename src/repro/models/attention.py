@@ -1,0 +1,133 @@
+"""Attention: chunked (flash-style) training/prefill path, decode path with
+KV cache, sliding-window variant, GQA throughout.
+
+The chunked path is the pure-JAX twin of ``kernels/flash_attention.py``
+(cross-checked in tests): a ``lax.scan`` over KV chunks with running
+(max, denominator, accumulator) — O(chunk) memory, so 32k-token prefill
+never materializes a (S, S) score matrix. On TPU the Pallas kernel replaces
+it via ``use_pallas=True``; XLA's fusion of this scan is the CPU/dry-run
+fallback.
+
+Shapes: q (B, Hq, Sq, Dh); k,v (B, Hkv, Skv, Dh); GQA expands Hkv -> Hq by
+repeat (Hq % Hkv == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "chunked_causal_attention",
+    "decode_attention",
+    "sliding_window_mask_attention",
+]
+
+_NEG_INF = -1e30
+
+
+def _expand_gqa(k, v, hq):
+    hkv = k.shape[1]
+    if hkv == hq:
+        return k, v
+    rep = hq // hkv
+    return jnp.repeat(k, rep, axis=1), jnp.repeat(v, rep, axis=1)
+
+
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    chunk_size: int = 1024,
+    window: int = 0,          # 0 = full causal; >0 = sliding window
+    q_offset: int = 0,        # global position of q[0] (prefill continuation)
+) -> jax.Array:
+    """Flash-style causal attention via lax.scan over KV chunks."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    k, v = _expand_gqa(k, v, hq)
+    scale = 1.0 / (dh ** 0.5)
+    nchunks = -(-skv // chunk_size)
+    pad = nchunks * chunk_size - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = k.reshape(b, hq, nchunks, chunk_size, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, nchunks, chunk_size, dh).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, k_i, v_i = inp
+        k_pos = ci * chunk_size + jnp.arange(chunk_size)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k_i.astype(jnp.float32)) * scale
+        mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] < skv)
+        if window > 0:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hq, sq), _NEG_INF, jnp.float32),
+        jnp.zeros((b, hq, sq), jnp.float32),
+        jnp.zeros((b, hq, sq, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, Hq, 1, Dh) — single new token
+    k_cache: jax.Array,      # (B, Hkv, S, Dh) bf16, or int8 with scales
+    v_cache: jax.Array,
+    *,
+    cache_len: jax.Array | int,   # number of valid cache positions
+    window: int = 0,
+    k_scale: jax.Array | None = None,  # (B, Hkv, S) f32 per-token scales
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Single-step decode attention over a (possibly sharded) KV cache.
+
+    Direct einsum: the score tensor is (B, H, 1, S) — tiny — and the
+    softmax-over-sharded-S reduction lowers to psum when the cache's S dim
+    is model-sharded (the distributed-softmax decode path; DESIGN.md §5).
+
+    With ``k_scale``/``v_scale`` the cache is int8-quantized per (token,
+    head) — halves decode HBM footprint AND bandwidth (the memory-bound
+    roofline term) at <1e-2 logit error (tests/test_models_smoke.py).
+    """
+    b, hq, _, dh = q.shape
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
+    k_cache, v_cache = _expand_gqa(k_cache, v_cache, hq)
+    s = k_cache.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, :] < cache_len
+    if window > 0:
+        mask &= pos[None, None, None, :] >= (cache_len - window)
+    logits = jnp.where(mask, logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def sliding_window_mask_attention(q, k, v, *, window: int,
+                                  chunk_size: int = 1024, q_offset: int = 0):
+    """Convenience wrapper: chunked attention with a sliding window
+    (recurrentgemma local-attention blocks)."""
+    return chunked_causal_attention(
+        q, k, v, chunk_size=chunk_size, window=window, q_offset=q_offset)

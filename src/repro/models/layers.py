@@ -1,0 +1,179 @@
+"""Common model layers — pure functional JAX (params are plain pytrees).
+
+Conventions:
+  * every ``init_*`` returns a dict pytree; every ``apply``-style function
+    takes ``(params, x, ...)``;
+  * weights are stored in ``param_dtype`` (f32 master; cast to ``dtype``
+    at use — the standard mixed-precision recipe);
+  * layers are written to be ``vmap``/``scan``-stackable: no python state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "layernorm_init",
+    "layernorm", "norm_init", "norm_apply", "embedding_init", "embed",
+    "mlp_init", "mlp", "rotary_angles", "apply_rope", "apply_rope_half",
+    "apply_mrope",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> dict:
+    scale = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+def dense(p: dict, x: jax.Array, dtype=None) -> jax.Array:
+    w = p["w"].astype(dtype or x.dtype)
+    return x @ w
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (silu/gelu)
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, d, d_ff, dtype),
+        "w_gate": dense_init(k2, d, d_ff, dtype),
+        "w_out": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = dense(p["w_in"], x)
+    g = dense(p["w_gate"], x)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return dense(p["w_out"], h * g)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings: standard, half (chatglm 2d), M-RoPE (qwen2-vl)
+# --------------------------------------------------------------------------
+
+
+def rotary_angles(positions: jax.Array, dim: int, base: float = 10_000.0):
+    """(..., dim/2) angles for ``positions`` (any int shape)."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (even, odd) of the last dim by ``angles``.
+
+    x: (B, H, S, D) or (B, S, D); angles: (B?, S, D/2) broadcastable.
+    """
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(q: jax.Array, k: jax.Array, positions: jax.Array,
+               base: float = 10_000.0):
+    """Standard RoPE over the full head dim. q,k: (B, H, S, Dh);
+    positions: (B, S) or (S,)."""
+    dh = q.shape[-1]
+    ang = rotary_angles(positions, dh, base)          # (B?, S, Dh/2)
+    if ang.ndim == 2:                                  # (S, Dh/2)
+        ang = ang[None]
+    ang = ang[:, None]                                 # (B, 1, S, Dh/2)
+    return _rotate(q, ang), _rotate(k, ang)
+
+
+def apply_rope_half(q: jax.Array, k: jax.Array, positions: jax.Array,
+                    base: float = 10_000.0):
+    """ChatGLM-style 2D RoPE: rotate only the first half of the head dim,
+    pass the second half through."""
+    dh = q.shape[-1]
+    half = dh // 2
+    ang = rotary_angles(positions, half, base)
+    if ang.ndim == 2:
+        ang = ang[None]
+    ang = ang[:, None]
+    q_rot = _rotate(q[..., :half], ang)
+    k_rot = _rotate(k[..., :half], ang)
+    return (jnp.concatenate([q_rot, q[..., half:]], -1),
+            jnp.concatenate([k_rot, k[..., half:]], -1))
+
+
+def apply_mrope(q: jax.Array, k: jax.Array, positions_3d: jax.Array,
+                sections: tuple[int, int, int] = (16, 24, 24),
+                base: float = 10_000.0):
+    """Qwen2-VL M-RoPE: the head dim is split into (temporal, height, width)
+    sections, each rotated by its own position stream.
+
+    positions_3d: (3, B, S) — for pure-text positions all three streams are
+    equal, which makes M-RoPE degenerate to standard RoPE (the property the
+    paper relies on, asserted in tests).
+    sections: half-dim sizes per stream; sum must be head_dim/2.
+    """
+    dh = q.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    # global frequency table, split contiguously across sections (Qwen2-VL):
+    # with equal position streams this reproduces standard RoPE exactly
+    # (property asserted in tests/test_models_smoke.py).
+    inv_all = 1.0 / (base ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    angs = []
+    start = 0
+    for i, sec in enumerate(sections):
+        inv = inv_all[start : start + sec]
+        start += sec
+        angs.append(positions_3d[i].astype(jnp.float32)[..., None] * inv)
+    ang = jnp.concatenate(angs, axis=-1)               # (B, S, dh/2)
+    ang = ang[:, None]                                 # (B, 1, S, dh/2)
+    return _rotate(q, ang), _rotate(k, ang)

@@ -1,0 +1,63 @@
+"""Public model API: ``build_model(cfg)`` -> init/loss/prefill/decode.
+
+This is the layer the launcher, dry-run, examples and tests consume; the
+assembly details live in ``transformer.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import transformer
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable          # (key) -> params
+    loss_fn: Callable       # (params, batch) -> (loss, aux)
+    prefill: Callable       # (params, tokens[, extra]) -> (logits, caches)
+    decode_step: Callable   # (params, token, cache, pos[, extra]) -> (logits, cache)
+    init_decode_cache: Callable  # (batch, max_len) -> cache pytree
+
+
+def build_model(cfg: ArchConfig, dtype=jnp.bfloat16,
+                param_dtype=jnp.float32, act_sharding=None,
+                unit_constraint=None) -> Model:
+    def init(key):
+        return transformer.init_params(cfg, key, dtype=param_dtype)
+
+    def loss_fn(params, batch):
+        """batch: {"tokens": (B,S) int32, "targets": (B,S) int32,
+        optional "frontend_embeds": (B,F,d)}."""
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "targets")} or None
+        hidden, _, aux = transformer.forward_full(
+            cfg, params, batch["tokens"], extra, dtype=dtype, remat=True,
+            act_sharding=act_sharding, unit_constraint=unit_constraint)
+        xent = transformer.chunked_cross_entropy(
+            cfg, params, hidden, batch["targets"])
+        return xent + 0.01 * aux, {"xent": xent, "aux": aux}
+
+    def prefill_fn(params, tokens, extra=None):
+        return transformer.prefill(cfg, params, tokens, extra, dtype=dtype,
+                                   act_sharding=act_sharding)
+
+    def decode_fn(params, token, cache, pos, extra=None):
+        return transformer.decode_step(cfg, params, token, cache, pos,
+                                       extra, dtype=dtype)
+
+    def init_cache(batch, max_len, quantized=False):
+        return transformer.init_decode_cache(cfg, batch, max_len, dtype=dtype,
+                                             quantized=quantized)
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill_fn,
+                 decode_step=decode_fn, init_decode_cache=init_cache)

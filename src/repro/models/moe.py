@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer: top-k routing, per-row capacity dispatch,
+grouped-einsum experts, shared experts, load-balance aux loss.
+
+SPMD design (DESIGN.md §5): routing/capacity math is computed *per sequence
+row* (cumsum over the S axis only), never across the token-global axis —
+so no cross-device cumsum appears when batch is data-sharded, and the
+dispatch scatter stays device-local. Experts are stacked on a leading E
+axis that shards over the ``model`` mesh axis (expert parallelism); the
+grouped einsums contract d/ff locally per expert shard.
+
+Capacity per row: ``C = ceil(S * top_k / E * capacity_factor)`` — overflow
+tokens are dropped (standard dropping MoE), which keeps every shape static.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+__all__ = ["moe_init", "moe_apply", "row_capacity"]
+
+
+def row_capacity(seq_len: int, top_k: int, n_experts: int,
+                 capacity_factor: float = 1.25) -> int:
+    return max(1, math.ceil(seq_len * top_k / n_experts * capacity_factor))
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, n_shared: int,
+             dtype=jnp.float32) -> dict:
+    kr, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": {"w": jax.random.normal(kr, (d, n_experts), jnp.float32) * scale},
+        "w_in": jax.random.normal(ke1, (n_experts, d, d_ff), dtype) * scale,
+        "w_gate": jax.random.normal(ke2, (n_experts, d, d_ff), dtype) * scale,
+        "w_out": jax.random.normal(ke3, (n_experts, d_ff, d), dtype) / math.sqrt(d_ff),
+    }
+    if n_shared > 0:
+        p["shared"] = layers.mlp_init(ks, d, d_ff * n_shared, dtype)
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, *, top_k: int, act: str = "silu",
+              capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e = p["w_in"].shape[0]
+    c = row_capacity(s, top_k, e, capacity_factor)
+
+    # --- routing (f32 for stability) ---
+    logits = x.astype(jnp.float32) @ p["router"]["w"]          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renormalize
+
+    # --- load-balance aux loss (Switch-style) ---
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # --- per-row slot assignment: position of each (token,k) in its expert ---
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (B,S,K,E)
+    flat = onehot.reshape(b, s * top_k, e)                     # row-major (s,k)
+    pos = jnp.cumsum(flat, axis=1) - 1                         # (B,S*K,E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(b, s, top_k)    # own-expert rank
+    keep = pos < c                                             # (B,S,K)
+
+    # --- dispatch/combine via one-hot einsums (GSPMD-friendly: scatter/
+    # gather ops made XLA replicate the batch axis — measured multi-GB
+    # f32 batch all-gathers on llama4 train; einsums partition cleanly
+    # over (data: B, model: E). EXPERIMENTS.md §Perf M2 ---
+    e_hot = jax.nn.one_hot(expert_idx, e, dtype=x.dtype)       # (B,S,K,E)
+    c_hot = jax.nn.one_hot(jnp.where(keep, pos, c), c, dtype=x.dtype)  # (B,S,K,C)
+    dispatch = jnp.einsum("bske,bskc->bsec", e_hot, c_hot)     # (B,S,E,C)
+    buf = jnp.einsum("bsec,bsd->becd", dispatch, x)            # (B,E,C,d)
+
+    # --- grouped expert MLP (expert axis shards over `model`) ---
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    out_buf = jnp.einsum("becf,efd->becd", h * g, p["w_out"].astype(x.dtype))
+
+    # --- combine: gate-weighted version of the dispatch mask ---
+    combine = jnp.einsum("bsk,bske,bskc->bsec",
+                         gate_vals.astype(x.dtype), e_hot, c_hot)
+    out = jnp.einsum("bsec,becd->bsd", combine, out_buf)
+
+    if "shared" in p:
+        out = out + layers.mlp(p["shared"], x, act=act)
+    return out, aux

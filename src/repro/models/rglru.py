@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the "recurrent block" of Griffin):
+    x-branch: Dense(d -> d_rnn) -> causal depthwise Conv1D(width 4) -> RG-LRU
+    gate    : Dense(d -> d_rnn) -> GeLU
+    out     : (x_branch * gate) -> Dense(d_rnn -> d)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)          input gate
+    a_t = a^(c * r_t),  a = sigmoid(Lambda)   with c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU — the hardware-adapted replacement for the
+sequential CUDA scan kernel the paper uses). Decode is a single fused step
+carrying ``(h, conv_window)`` state — O(1) memory in sequence length, which
+is what qualifies this arch for the 512k-token cell (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_block_step",
+           "rglru_init_state"]
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_block_init(key, d: int, d_rnn: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    scale = 1.0 / math.sqrt(d)
+    # Lambda init so that a = sigmoid(L)^c covers (0.9, 0.999) as in Griffin
+    u = jax.random.uniform(k6, (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / _C)) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_x": layers.dense_init(k1, d, d_rnn, dtype),
+        "w_gate": layers.dense_init(k2, d, d_rnn, dtype),
+        "w_out": layers.dense_init(k3, d_rnn, d, dtype),
+        "conv": jax.random.normal(k4, (_CONV_W, d_rnn), dtype) * scale,
+        "gates": {
+            "w_a": jax.random.normal(k5, (d_rnn, d_rnn), jnp.float32) * (1.0 / math.sqrt(d_rnn)),
+            "b_a": jnp.zeros((d_rnn,), jnp.float32),
+            "w_i": jax.random.normal(k7, (d_rnn, d_rnn), jnp.float32) * (1.0 / math.sqrt(d_rnn)),
+            "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        },
+        "lambda": lam,
+    }
+
+
+def rglru_init_state(batch: int, d_rnn: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, d_rnn), dtype),
+    }
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["gates"]["w_a"] + p["gates"]["b_a"])
+    i = jax.nn.sigmoid(uf @ p["gates"]["w_i"] + p["gates"]["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lambda"])  # (d_rnn,) broadcasts
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def _causal_conv(p, u, prefix=None):
+    """Depthwise causal conv width 4. u: (B, S, d_rnn)."""
+    w = p["conv"].astype(u.dtype)                        # (4, d_rnn)
+    if prefix is None:
+        prefix = jnp.zeros((u.shape[0], _CONV_W - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([prefix, u], axis=1)            # (B, S+3, d)
+    out = sum(up[:, i : i + u.shape[1]] * w[i] for i in range(_CONV_W))
+    return out
+
+
+def rglru_block_apply(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Full-sequence apply. x: (B, S, d). Returns (out, final_state)."""
+    u = layers.dense(p["w_x"], x)                        # (B, S, d_rnn)
+    u = _causal_conv(p, u)
+    a, b = _gates(p, u)                                  # f32 (B, S, d_rnn)
+    if h0 is not None:
+        # fold carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(layers.dense(p["w_gate"], x))
+    out = layers.dense(p["w_out"], (h.astype(x.dtype) * gate))
+    state = {
+        "h": h[:, -1],
+        "conv": jnp.concatenate(
+            [jnp.zeros((x.shape[0], _CONV_W - 1, u.shape[-1]), u.dtype),
+             layers.dense(p["w_x"], x)], axis=1)[:, -(_CONV_W - 1):],
+    }
+    return out, state
+
+
+def rglru_block_step(p: dict, x: jax.Array, state: dict):
+    """Single decode step. x: (B, 1, d). Returns (out (B,1,d), new_state)."""
+    u = layers.dense(p["w_x"], x)                        # (B, 1, d_rnn)
+    window = jnp.concatenate([state["conv"], u], axis=1)  # (B, 4, d_rnn)
+    w = p["conv"].astype(u.dtype)
+    u_c = jnp.sum(window * w[None], axis=1, keepdims=True)  # (B,1,d_rnn)
+    a, b = _gates(p, u_c)
+    h = a[:, 0] * state["h"] + b[:, 0]                   # (B, d_rnn)
+    gate = jax.nn.gelu(layers.dense(p["w_gate"], x))
+    out = layers.dense(p["w_out"], h[:, None].astype(x.dtype) * gate)
+    return out, {"h": h, "conv": window[:, 1:]}

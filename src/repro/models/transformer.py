@@ -1,0 +1,771 @@
+"""Generic block-pattern transformer: one assembly covering all 10 assigned
+architectures (dense GQA, MoE, RG-LRU hybrid, xLSTM, enc-dec, VLM backbone).
+
+Layer stacking: ``cfg.block_pattern`` is the repeating unit (e.g.
+``("attn",)`` for dense, ``("rglru", "rglru", "local")`` for
+recurrentgemma, ``("mlstm", "slstm")`` for xlstm). Full units are stacked
+and applied under ``lax.scan`` (compact HLO, O(1) compile size in depth,
+standard remat point); the ``n_layers mod unit`` remainder becomes
+unstacked tail layers.
+
+Three entry points (same params):
+    ``forward_full``  — logits for a whole sequence (train / prefill)
+    ``prefill``       — forward_full + per-layer decode caches
+    ``decode_step``   — one token through cached states
+
+Caches are pytrees mirroring the params tree. Attention caches are fixed
+``(B, Hkv, S_max, Dh)`` buffers written at ``pos`` (rolling ``pos % window``
+for local attention); recurrent blocks carry O(1) states.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import attention, layers, moe, rglru, xlstm
+
+__all__ = ["init_params", "forward_full", "prefill", "decode_step",
+           "chunked_cross_entropy", "pattern_layout"]
+
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+
+
+def pattern_layout(cfg: ArchConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_full_units, tail_kinds).
+
+    Layers = n_dense_layers (deepseek-style leading dense attn blocks)
+           + units x pattern + tail."""
+    pat = cfg.block_pattern
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    n_units = n_scan // len(pat)
+    tail_len = n_scan - n_units * len(pat)
+    return n_units, pat[:tail_len]
+
+
+def _ffn_kind(cfg: ArchConfig, layer_idx) -> str:
+    """'moe' | 'dense' | 'none' for the FFN half of a block."""
+    if cfg.d_ff == 0 and not cfg.is_moe:
+        return "none"
+    if cfg.is_moe:
+        return "moe"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(cfg: ArchConfig, key, dtype) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq, dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv, dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv, dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq, dh, d), dtype) / math.sqrt(hq * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(dh)
+        p["k_norm"] = layers.rmsnorm_init(dh)
+    return p
+
+
+def _ffn_init(cfg: ArchConfig, key, dtype, dense_override: int = 0) -> dict:
+    if dense_override:
+        return {"mlp": layers.mlp_init(key, cfg.d_model, dense_override, dtype)}
+    if cfg.is_moe:
+        return {"moe": moe.moe_init(key, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                    cfg.n_experts, cfg.n_shared_experts, dtype)}
+    if cfg.d_ff == 0:
+        return {}
+    return {"mlp": layers.mlp_init(key, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _block_init(cfg: ArchConfig, kind: str, key, dtype,
+                dense_override: int = 0, cross: bool = False) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": layers.norm_init(cfg.norm, d)}
+    if kind in ("attn", "local"):
+        p["attn"] = _attn_init(cfg, k1, dtype)
+    elif kind == "rglru":
+        p["rec"] = rglru.rglru_block_init(k1, d, _d_rnn(cfg), dtype)
+    elif kind == "mlstm":
+        p["cell"] = xlstm.mlstm_block_init(k1, d, cfg.n_heads, dtype)
+    elif kind == "slstm":
+        p["cell"] = xlstm.slstm_block_init(k1, d, cfg.n_heads, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if cross:
+        p["ln_x"] = layers.norm_init(cfg.norm, d)
+        p["xattn"] = _attn_init(cfg, k4, dtype)
+    ffn = _ffn_init(cfg, k2, dtype, dense_override)
+    if ffn:
+        p["ln2"] = layers.norm_init(cfg.norm, d)
+        p.update(ffn)
+    return p
+
+
+def _d_rnn(cfg: ArchConfig) -> int:
+    # Griffin: lru width ~ d_model (RG-2B uses 2560 = d_model)
+    return cfg.d_model
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    """``dtype`` here is the *parameter storage* dtype (f32 master copy in
+    training; bf16 directly for inference-only dry runs)."""
+    n_units, tail = pattern_layout(cfg)
+    kemb, khead, kunits, ktail, kenc, kpos = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": layers.embedding_init(kemb, cfg.vocab_size, cfg.d_model),
+        "final_norm": layers.norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": jax.random.normal(khead, (cfg.d_model, cfg.vocab_size), dtype)
+            / math.sqrt(cfg.d_model)
+        }
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(cfg.block_pattern))
+        unit = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            # deepseek-style leading dense layers are handled in the tail
+            unit[str(i)] = _block_init(cfg, kind, ks[i], dtype,
+                                       cross=cfg.enc_dec)
+        return unit
+
+    if n_units > 0:
+        params["units"] = jax.vmap(unit_init)(jax.random.split(kunits, n_units))
+    tail_params = []
+    for i, kind in enumerate(tail):
+        tail_params.append(_block_init(cfg, kind, jax.random.fold_in(ktail, i),
+                                       dtype, cross=cfg.enc_dec))
+    if cfg.n_dense_layers > 0:
+        # leading dense layers (deepseek): prepend as extra tail-style blocks
+        dense_blocks = [
+            _block_init(cfg, "attn", jax.random.fold_in(ktail, 1000 + i),
+                        dtype, dense_override=cfg.dense_d_ff or cfg.d_ff)
+            for i in range(cfg.n_dense_layers)
+        ]
+        params["head_layers"] = dense_blocks
+    if tail_params:
+        params["tail"] = tail_params
+    if cfg.enc_dec:
+        kencs = jax.random.split(kenc, cfg.n_enc_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _block_init(cfg, "attn", k, dtype)
+            )(kencs),
+            "final_norm": layers.norm_init(cfg.norm, cfg.d_model),
+            "pos": jax.random.normal(kpos, (cfg.enc_seq_len, cfg.d_model),
+                                     jnp.float32) * 0.02,
+        }
+        # learned decoder positions, sized for the largest assigned decoder
+        # shape (prefill_32k / decode_32k); whisper skips long_500k.
+        params["dec_pos"] = jax.random.normal(
+            jax.random.fold_in(kpos, 1), (65_536, cfg.d_model), jnp.float32) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg, p, h, dtype):
+    q = jnp.einsum("bsd,dhk->bhsk", h, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, p["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q)
+        k = layers.rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _apply_rope(cfg, q, k, pos_info):
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "mrope":
+        return layers.apply_mrope(q, k, pos_info["pos3d"],
+                                  sections=_mrope_sections(cfg))
+    if cfg.rope == "half":
+        return layers.apply_rope_half(q, k, pos_info["pos"])
+    return layers.apply_rope(q, k, pos_info["pos"])
+
+
+def _mrope_sections(cfg) -> tuple[int, int, int]:
+    half = cfg.head_dim_ // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def _attn_full(cfg, p, x, pos_info, *, window, causal, kv_len_cap,
+               enc_out=None, aux_dtype=jnp.float32):
+    """Full-sequence attention block. Returns (x, cache_entry, aux)."""
+    dtype = x.dtype
+    h = layers.norm_apply(cfg.norm, p["ln1"], x)
+    q, k, v = _project_qkv(cfg, p["attn"], h, dtype)
+    q, k = _apply_rope(cfg, q, k, pos_info)
+    attn_out = attention.chunked_causal_attention(
+        q, k, v, chunk_size=1024, window=window) if causal else \
+        _full_bidir_attention(q, k, v)
+    out = jnp.einsum("bhsk,hkd->bsd", attn_out, p["attn"]["wo"].astype(dtype))
+    x = x + out
+    if enc_out is not None and "xattn" in p:
+        hx = layers.norm_apply(cfg.norm, p["ln_x"], x)
+        qx = jnp.einsum("bsd,dhk->bhsk", hx, p["xattn"]["wq"].astype(dtype))
+        kx = jnp.einsum("bsd,dhk->bhsk", enc_out, p["xattn"]["wk"].astype(dtype))
+        vx = jnp.einsum("bsd,dhk->bhsk", enc_out, p["xattn"]["wv"].astype(dtype))
+        xo = _full_bidir_attention(qx, kx, vx)
+        x = x + jnp.einsum("bhsk,hkd->bsd", xo, p["xattn"]["wo"].astype(dtype))
+    aux = jnp.zeros((), aux_dtype)
+    if "mlp" in p or "moe" in p:
+        h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+        if "moe" in p:
+            f, aux = moe.moe_apply(p["moe"], h2, top_k=cfg.experts_per_token,
+                                   act=cfg.act,
+                                   capacity_factor=cfg.capacity_factor)
+        else:
+            f = layers.mlp(p["mlp"], h2, act=cfg.act)
+        x = x + f
+    # cache: keep only the last kv_len_cap positions (local attention)
+    if kv_len_cap and kv_len_cap < k.shape[2]:
+        k = k[:, :, -kv_len_cap:]
+        v = v[:, :, -kv_len_cap:]
+    return x, {"k": k, "v": v}, aux
+
+
+def _full_bidir_attention(q, k, v):
+    """Non-causal attention (encoder / cross-attn): seqs are short (<=1500)."""
+    hq = q.shape[1]
+    k, v = attention._expand_gqa(k, v, hq)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _quantize_kv(t):
+    """Per-(token, head) int8 quantization: t (B,Hkv,1,Dh) -> (q, scale)."""
+    tf = t.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(tf), axis=-1) / 127.0           # (B,Hkv,1)
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(tf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_write(cache, new, pos, axis=2):
+    """Write one token into the cache via a one-hot select.
+
+    ``dynamic_update_slice`` with a traced start on a *sharded* seq dim
+    makes GSPMD gather/rematerialize the whole cache (measured +14 GB temp
+    on minicpm decode_32k); the elementwise ``where(iota == pos)`` form
+    partitions trivially on every axis (§Perf D1, the MaxText recipe)."""
+    s = cache.shape[axis]
+    shape = [1] * cache.ndim
+    shape[axis] = s
+    mask = (jax.lax.iota(jnp.int32, s) == pos).reshape(shape)
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+def _attn_step(cfg, p, x, cache, pos, *, window, enc_out=None):
+    """Single-token attention block. cache: {"k","v"} (B,Hkv,Smax,Dh)
+    (+ {"ks","vs"} per-token scales when int8-quantized)."""
+    dtype = x.dtype
+    h = layers.norm_apply(cfg.norm, p["ln1"], x)
+    q, k, v = _project_qkv(cfg, p["attn"], h, dtype)  # (B,H,1,Dh)
+    pos_info = _step_pos_info(cfg, x.shape[0], pos)
+    q, k = _apply_rope(cfg, q, k, pos_info)
+    s_max = cache["k"].shape[2]
+    write = pos % window if window else pos
+    write = jnp.minimum(write, s_max - 1)
+    quantized = "ks" in cache
+    if quantized:
+        k_w, k_s = _quantize_kv(k)
+        v_w, v_s = _quantize_kv(v)
+        new_cache = {
+            "k": _cache_write(cache["k"], k_w, write),
+            "v": _cache_write(cache["v"], v_w, write),
+            "ks": _cache_write(cache["ks"], k_s, write),
+            "vs": _cache_write(cache["vs"], v_s, write),
+        }
+        kq = dict(k_scale=new_cache["ks"], v_scale=new_cache["vs"])
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
+    else:
+        k_cache = _cache_write(cache["k"], k, write)
+        v_cache = _cache_write(cache["v"], v, write)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kq = {}
+    if window:
+        # rolling buffer holds min(pos+1, window) valid entries; decode
+        # attention masks by slot-validity, not recency order (RoPE already
+        # encodes absolute positions so order within the buffer is irrelevant)
+        valid = jnp.minimum(pos + 1, s_max)
+        attn_out = attention.decode_attention(q, k_cache, v_cache,
+                                              cache_len=valid, **kq)
+    else:
+        attn_out = attention.decode_attention(q, k_cache, v_cache,
+                                              cache_len=pos + 1, **kq)
+    out = jnp.einsum("bhsk,hkd->bsd", attn_out, p["attn"]["wo"].astype(dtype))
+    x = x + out
+    if enc_out is not None and "xattn" in p:
+        hx = layers.norm_apply(cfg.norm, p["ln_x"], x)
+        qx = jnp.einsum("bsd,dhk->bhsk", hx, p["xattn"]["wq"].astype(dtype))
+        kx = jnp.einsum("bsd,dhk->bhsk", enc_out, p["xattn"]["wk"].astype(dtype))
+        vx = jnp.einsum("bsd,dhk->bhsk", enc_out, p["xattn"]["wv"].astype(dtype))
+        xo = _full_bidir_attention(qx, kx, vx)
+        x = x + jnp.einsum("bhsk,hkd->bsd", xo, p["xattn"]["wo"].astype(dtype))
+    if "mlp" in p or "moe" in p:
+        h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+        if "moe" in p:
+            f, _ = moe.moe_apply(p["moe"], h2, top_k=cfg.experts_per_token,
+                                 act=cfg.act,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            f = layers.mlp(p["mlp"], h2, act=cfg.act)
+        x = x + f
+    return x, new_cache
+
+
+def _recurrent_full(cfg, p, x, kind):
+    h = layers.norm_apply(cfg.norm, p["ln1"], x)
+    if kind == "rglru":
+        out, state = rglru.rglru_block_apply(p["rec"], h)
+    elif kind == "mlstm":
+        out, state = xlstm.mlstm_apply(p["cell"], h, cfg.n_heads)
+    else:
+        out, state = xlstm.slstm_apply(p["cell"], h, cfg.n_heads)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in p or "moe" in p:
+        h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+        if "moe" in p:
+            f, aux = moe.moe_apply(p["moe"], h2, top_k=cfg.experts_per_token,
+                                   act=cfg.act,
+                                   capacity_factor=cfg.capacity_factor)
+        else:
+            f = layers.mlp(p["mlp"], h2, act=cfg.act)
+        x = x + f
+    return x, state, aux
+
+
+def _recurrent_step(cfg, p, x, cache, kind):
+    h = layers.norm_apply(cfg.norm, p["ln1"], x)
+    if kind == "rglru":
+        out, state = rglru.rglru_block_step(p["rec"], h, cache)
+    elif kind == "mlstm":
+        out, state = xlstm.mlstm_step(p["cell"], h, cfg.n_heads, cache)
+    else:
+        out, state = xlstm.slstm_step(p["cell"], h, cfg.n_heads, cache)
+    x = x + out
+    if "mlp" in p or "moe" in p:
+        h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+        if "moe" in p:
+            f, _ = moe.moe_apply(p["moe"], h2, top_k=cfg.experts_per_token,
+                                 act=cfg.act,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            f = layers.mlp(p["mlp"], h2, act=cfg.act)
+        x = x + f
+    return x, state
+
+
+def _block_full(cfg, kind, p, x, pos_info, enc_out):
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        return _attn_full(cfg, p, x, pos_info, window=window, causal=True,
+                          kv_len_cap=window, enc_out=enc_out)
+    return _recurrent_full(cfg, p, x, kind)
+
+
+def _block_step(cfg, kind, p, x, cache, pos, enc_out):
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        return _attn_step(cfg, p, x, cache, pos, window=window, enc_out=enc_out)
+    return _recurrent_step(cfg, p, x, cache, kind)
+
+
+# ---------------------------------------------------------------------------
+# position info
+# ---------------------------------------------------------------------------
+
+
+def _full_pos_info(cfg, batch, seq, frontend_len=0):
+    pos = jnp.arange(seq)
+    info = {"pos": pos}
+    if cfg.rope == "mrope":
+        # text tokens: all three streams equal; patch positions get a
+        # (t=0, h, w) grid over the stub frontend span.
+        grid_w = max(1, int(math.sqrt(max(frontend_len, 1))))
+        idx = jnp.arange(seq)
+        is_patch = idx < frontend_len
+        t = jnp.where(is_patch, 0, idx)
+        h = jnp.where(is_patch, idx // grid_w, idx)
+        w = jnp.where(is_patch, idx % grid_w, idx)
+        info["pos3d"] = jnp.broadcast_to(
+            jnp.stack([t, h, w])[:, None, :], (3, batch, seq))
+    return info
+
+
+def _step_pos_info(cfg, batch, pos):
+    p = jnp.full((batch, 1), pos, jnp.int32)
+    info = {"pos": p}
+    if cfg.rope == "mrope":
+        info["pos3d"] = jnp.broadcast_to(p[None], (3, batch, 1))
+    return info
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encode(cfg, params, frames):
+    """frames: (B, enc_seq, d_model) stub embeddings (post-conv)."""
+    x = frames + params["encoder"]["pos"].astype(frames.dtype)[None]
+
+    def block(x, p):
+        h = layers.norm_apply(cfg.norm, p["ln1"], x)
+        q, k, v = _project_qkv(cfg, p["attn"], h, x.dtype)
+        out = _full_bidir_attention(q, k, v)
+        x = x + jnp.einsum("bhsk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+        h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+        x = x + layers.mlp(p["mlp"], h2, act=cfg.act)
+        return x, None
+
+    # remat the encoder blocks: without it the full (B, enc_seq, D)
+    # residuals of all 24 layers are saved for backward (whisper train_4k
+    # measured 17.5 GB/dev; §Perf G1)
+    x, _ = jax.lax.scan(jax.checkpoint(block), x, params["encoder"]["blocks"])
+    return layers.norm_apply(cfg.norm, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# full forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, tokens, extra, dtype):
+    x = layers.embed(params["embed"], tokens, dtype)
+    if (cfg.frontend != "none" and not cfg.enc_dec
+            and extra is not None and "frontend_embeds" in extra):
+        # VLM stub: the first F positions are precomputed patch embeddings
+        # (enc-dec archs route frontend embeddings to the encoder instead)
+        fe = extra["frontend_embeds"].astype(dtype)      # (B, F, d)
+        f = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, f:]], axis=1)
+    if cfg.enc_dec:
+        s = tokens.shape[1]
+        x = x + params["dec_pos"][:s].astype(dtype)[None]
+    return x
+
+
+def forward_full(cfg: ArchConfig, params, tokens, extra=None,
+                 dtype=jnp.bfloat16, remat: bool = True,
+                 collect_cache: bool = False, act_sharding=None,
+                 unit_constraint=None):
+    """Logits for the whole sequence.
+
+    Returns ``(hidden, cache, aux)`` where hidden is pre-head (B,S,D);
+    use ``logits_from_hidden``/``chunked_cross_entropy`` for the head —
+    callers choose whether full logits are ever materialized.
+    """
+    b, s = tokens.shape
+    x = _embed_inputs(cfg, params, tokens, extra, dtype)
+
+    def _constrain(t):
+        # Megatron-SP-style activation sharding: between layer units the
+        # (B, S, D) carry is sharded on the sequence axis over `model` —
+        # the dominant persistent memory (one carry per unit is saved for
+        # the rematerialized backward) drops by the model-axis width, at
+        # the cost of an all-gather/reduce-scatter pair per unit that XLA
+        # inserts around the attention/MLP compute (EXPERIMENTS.md §Perf).
+        if act_sharding is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, act_sharding)
+
+    x = _constrain(x)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encode(cfg, params, extra["frontend_embeds"].astype(dtype)) \
+            if (extra and "frontend_embeds" in extra) else None
+        if enc_out is None:
+            raise ValueError("enc_dec arch requires extra['frontend_embeds']")
+    pos_info = _full_pos_info(cfg, b, s, cfg.frontend_len)
+    n_units, tail = pattern_layout(cfg)
+
+    def unit_apply(x, unit_p):
+        if unit_constraint is not None:
+            # Force FSDP weight shards to all-gather per unit (small) rather
+            # than partial-sum + activation-sized all-reduce (runtime/
+            # shardings.unit_gather_shardings; §Perf M1). Cast float params
+            # to the compute dtype FIRST so the gather moves bf16, not the
+            # f32 master copies (2x wire; §Perf M3).
+            def _cast_constrain(w, s):
+                if hasattr(w, "dtype") and jnp.issubdtype(w.dtype, jnp.floating):
+                    w = w.astype(dtype)
+                return w if s is None else jax.lax.with_sharding_constraint(w, s)
+
+            unit_p = jax.tree.map(
+                _cast_constrain, unit_p, unit_constraint,
+                is_leaf=lambda v: v is None or hasattr(v, "shape"))
+        caches, auxes = [], []
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c, a = _block_full(cfg, kind, unit_p[str(i)], x, pos_info, enc_out)
+            caches.append(c)
+            auxes.append(a)
+        return _constrain(x), caches, sum(auxes)
+
+    unit_fn = unit_apply
+    if remat:
+        unit_fn = jax.checkpoint(
+            unit_apply,
+            policy=jax.checkpoint_policies.save_only_these_names())
+
+    aux_total = jnp.zeros((), jnp.float32)
+    all_caches: dict[str, Any] = {}
+    # deepseek-style leading dense layers
+    for i, p in enumerate(params.get("head_layers", [])):
+        x, c, a = _attn_full(cfg, p, x, pos_info, window=0, causal=True,
+                             kv_len_cap=0, enc_out=enc_out)
+        x = _constrain(x)
+        aux_total += a
+        if collect_cache:
+            all_caches[f"head_{i}"] = c
+
+    if n_units > 0:
+        def scan_body(carry, unit_p):
+            x, aux = carry
+            x, caches, a = unit_fn(x, unit_p)
+            ys = caches if collect_cache else None
+            return (x, aux + a), ys
+
+        (x, aux_total), unit_caches = jax.lax.scan(
+            scan_body, (x, aux_total), params["units"])
+        if collect_cache:
+            all_caches["units"] = unit_caches
+
+    for i, (kind, p) in enumerate(zip(tail, params.get("tail", []))):
+        x, c, a = _block_full(cfg, kind, p, x, pos_info, enc_out)
+        aux_total += a
+        if collect_cache:
+            all_caches[f"tail_{i}"] = c
+
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    return x, (all_caches if collect_cache else None), aux_total
+
+
+def logits_from_hidden(cfg, params, hidden):
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"].astype(hidden.dtype)
+        return hidden @ table.T
+    return hidden @ params["lm_head"]["w"].astype(hidden.dtype)
+
+
+def chunked_cross_entropy(cfg, params, hidden, targets, chunk: int = 512):
+    """Mean token cross-entropy without materializing (B,S,V) logits:
+    the LM head matmul + log-softmax run per sequence chunk (memory lever
+    recorded in EXPERIMENTS.md §Perf)."""
+    b, s, d = hidden.shape
+    n_chunks = s // chunk if s % chunk == 0 else -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(h, t):
+        # rematted: the (B, chunk, V) f32 logits are recomputed in backward
+        # instead of saved per chunk (saving them would reconstitute the
+        # full-logits memory footprint the chunking exists to avoid)
+        logits = logits_from_hidden(cfg, params, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(t, 0)[..., None], axis=-1)[..., 0]
+        valid = (t >= 0).astype(jnp.float32)
+        return ((logz - gold) * valid).sum(), valid.sum()
+
+    def body(carry, inp):
+        h, t = inp
+        nll, nvalid = chunk_nll(h, t)
+        return (carry[0] + nll, carry[1] + nvalid), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, tc))
+    return total / jnp.maximum(count, 1.0)
+
+
+def prefill(cfg: ArchConfig, params, tokens, extra=None, dtype=jnp.bfloat16,
+            act_sharding=None):
+    """Returns (last_token_logits, caches)."""
+    hidden, caches, _ = forward_full(cfg, params, tokens, extra, dtype,
+                                     remat=False, collect_cache=True,
+                                     act_sharding=act_sharding)
+    logits = logits_from_hidden(cfg, params, hidden[:, -1:])
+    return logits[:, 0], caches
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, quantized: bool = False):
+    """Zero caches sized for ``max_len`` decode positions.
+
+    ``quantized=True`` stores K/V as int8 with per-(token, head) f32 scales
+    — halves the cache footprint and read bandwidth of the memory-bound
+    decode cells (EXPERIMENTS.md §Perf Q1)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+    n_units, tail = pattern_layout(cfg)
+
+    def kv(s):
+        if quantized:
+            return {"k": jnp.zeros((batch, hkv, s, dh), jnp.int8),
+                    "v": jnp.zeros((batch, hkv, s, dh), jnp.int8),
+                    "ks": jnp.zeros((batch, hkv, s), jnp.float32),
+                    "vs": jnp.zeros((batch, hkv, s), jnp.float32)}
+        return {"k": jnp.zeros((batch, hkv, s, dh), dtype),
+                "v": jnp.zeros((batch, hkv, s, dh), dtype)}
+
+    def entry(kind):
+        if kind == "attn":
+            return kv(max_len)
+        if kind == "local":
+            return kv(min(cfg.window or max_len, max_len))
+        if kind == "rglru":
+            return rglru.rglru_init_state(batch, _d_rnn(cfg), dtype)
+        if kind == "mlstm":
+            return xlstm.mlstm_init_state(batch, cfg.n_heads,
+                                          cfg.d_model // cfg.n_heads)
+        if kind == "slstm":
+            return xlstm.slstm_init_state(batch, cfg.n_heads,
+                                          cfg.d_model // cfg.n_heads)
+        raise ValueError(kind)
+
+    cache: dict[str, Any] = {}
+    for i in range(cfg.n_dense_layers):
+        cache[f"head_{i}"] = entry("attn")
+    if n_units > 0:
+        def stack(e):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), e)
+        cache["units"] = [stack(entry(k)) for k in cfg.block_pattern]
+    for i, kind in enumerate(tail):
+        cache[f"tail_{i}"] = entry(kind)
+    return cache
+
+
+def grow_cache(cfg: ArchConfig, caches, prefill_len: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Adapt ``prefill`` caches into fixed decode buffers of ``max_len``.
+
+    Full-attention entries are zero-padded on the seq axis (decode masks by
+    ``pos+1``). Local-attention entries are *rolled* so that the entry for
+    absolute position ``p`` sits at slot ``p % window`` — the invariant
+    ``decode_step`` writes with (slot ordering is irrelevant to attention
+    itself since RoPE encodes absolute positions, but eviction must hit the
+    oldest slot). Recurrent states pass through unchanged.
+    """
+    window = cfg.window
+
+    def _pad_seq(x, pad):
+        widths = [(0, 0)] * x.ndim
+        widths[-2] = (0, pad)
+        return jnp.pad(x, widths)
+
+    def fix(kind, entry):
+        if kind not in ("attn", "local"):
+            return entry  # recurrent state passes through
+        k, v = entry["k"], entry["v"]  # rank 4, or rank 5 when unit-stacked
+        if kind == "local" and window:
+            # chronological [prefill_len - s .. prefill_len) -> slot p % window
+            shift = prefill_len % window if prefill_len >= window else 0
+            if shift:
+                k = jnp.roll(k, shift, axis=-2)
+                v = jnp.roll(v, shift, axis=-2)
+            target = min(window, max_len)
+        else:
+            target = max_len
+        pad = target - k.shape[-2]
+        if pad > 0:
+            k, v = _pad_seq(k, pad), _pad_seq(v, pad)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    n_units, tail = pattern_layout(cfg)
+    out = {}
+    for key, val in caches.items():
+        if key == "units":
+            # val: list over pattern elements of stacked entries
+            out["units"] = [fix(cfg.block_pattern[i], e)
+                            for i, e in enumerate(val)]
+        elif key.startswith("head_"):
+            out[key] = fix("attn", val)
+        elif key.startswith("tail_"):
+            out[key] = fix(tail[int(key.split("_")[1])], val)
+        else:
+            out[key] = val
+    return out
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos, extra=None,
+                dtype=jnp.bfloat16):
+    """One decode step. token: (B,) int32; pos: scalar int32 (same for all
+    rows — continuous batching offsets are handled a level up).
+    Returns (logits (B, V), new_cache)."""
+    b = token.shape[0]
+    x = layers.embed(params["embed"], token[:, None], dtype)
+    if cfg.enc_dec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0).astype(dtype)[None]
+    enc_out = None
+    if cfg.enc_dec:
+        if extra is None or "enc_out" not in extra:
+            raise ValueError("enc_dec decode needs extra['enc_out']")
+        enc_out = extra["enc_out"]
+
+    new_cache: dict[str, Any] = {}
+    for i in range(cfg.n_dense_layers):
+        p = params["head_layers"][i]
+        x, c = _attn_step(cfg, p, x, cache[f"head_{i}"], pos, window=0,
+                          enc_out=enc_out)
+        new_cache[f"head_{i}"] = c
+
+    n_units, tail = pattern_layout(cfg)
+    if n_units > 0:
+        def scan_body(x, inp):
+            unit_p = inp[0]
+            unit_caches = inp[1:]
+            new_cs = []
+            for i, kind in enumerate(cfg.block_pattern):
+                x, c = _block_step(cfg, kind, unit_p[str(i)], x,
+                                   unit_caches[i], pos, enc_out)
+                new_cs.append(c)
+            return x, tuple(new_cs)
+
+        x, new_unit_caches = jax.lax.scan(
+            scan_body, x, (params["units"], *cache["units"]))
+        new_cache["units"] = list(new_unit_caches)
+
+    for i, (kind, p) in enumerate(zip(tail, params.get("tail", []))):
+        x, c = _block_step(cfg, kind, p, x, cache[f"tail_{i}"], pos, enc_out)
+        new_cache[f"tail_{i}"] = c
+
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,228 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory, exponential gating), stacked alternately.
+
+mLSTM recurrence (per head, stabilized exponential gating):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (Dh x Dh matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    m_t = max(log f_t + m_{t-1}, log i_t)    (stabilizer)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+sLSTM keeps per-head scalar cell state with exponential gates and a
+recurrent (h_{t-1} -> gates) path, making it inherently sequential.
+
+Both are implemented as ``lax.scan`` over the sequence for train/prefill
+and a fused single step for decode. The constant-size state ``(C, n, m)``
+is what qualifies xlstm for the 512k cell. A chunkwise-parallel mLSTM
+(quadratic-within-chunk, recurrent-across-chunk) is the documented TPU
+perf path (EXPERIMENTS.md §Perf discusses the trade-off); the sequential
+scan is the always-correct reference implementation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+__all__ = [
+    "mlstm_block_init", "mlstm_apply", "mlstm_step", "mlstm_init_state",
+    "slstm_block_init", "slstm_apply", "slstm_step", "slstm_init_state",
+    "SEQ_CHUNK",
+]
+
+# Sequence scans are checkpointed per chunk: the backward pass stores only
+# chunk-boundary states and recomputes the in-chunk recurrence, instead of
+# saving every per-step residual (for mLSTM that residual includes the
+# (B, H, Dh, Dh) matrix memory — 4096 steps of it measured 110 GB/device
+# on the train_4k cell; chunking drops it ~S/chunk-fold at the cost of one
+# extra forward recompute. EXPERIMENTS.md §Perf iteration X1).
+SEQ_CHUNK = 256
+
+
+def _chunked_scan(cell, state, xs, chunk: int = SEQ_CHUNK):
+    """lax.scan over time with per-chunk jax.checkpoint. ``xs`` leaves have
+    leading dim S; requires S % chunk == 0 (callers fall back to chunk=S)."""
+    s = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s  # degenerate: single chunk (smoke-test sizes)
+    n_chunks = s // chunk
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(st, x_chunk):
+        return jax.lax.scan(cell, st, x_chunk)
+
+    state, ys = jax.lax.scan(chunk_body, state, xs_c)
+    return state, jax.tree.map(
+        lambda y: y.reshape((s,) + y.shape[2:]), ys)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_init(key, d: int, n_heads: int, dtype=jnp.float32) -> dict:
+    dh = d // n_heads
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_q": layers.dense_init(ks[0], d, d, dtype),
+        "w_k": layers.dense_init(ks[1], d, d, dtype),
+        "w_v": layers.dense_init(ks[2], d, d, dtype),
+        "w_i": jax.random.normal(ks[3], (d, n_heads), jnp.float32) * s,
+        "w_f": jax.random.normal(ks[4], (d, n_heads), jnp.float32) * s,
+        "b_i": jnp.zeros((n_heads,), jnp.float32),
+        "b_f": jnp.ones((n_heads,), jnp.float32) * 3.0,  # open forget gates
+        "w_o": layers.dense_init(ks[5], d, d, dtype),
+        "skip": layers.dense_init(ks[6], d, d, dtype),
+    }
+
+
+def mlstm_init_state(batch: int, n_heads: int, dh: int) -> dict:
+    return {
+        "c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, x, nh):
+    b, s, d = x.shape
+    dh = d // nh
+    q = layers.dense(p["w_q"], x).reshape(b, s, nh, dh)
+    k = layers.dense(p["w_k"], x).reshape(b, s, nh, dh) / math.sqrt(dh)
+    v = layers.dense(p["w_v"], x).reshape(b, s, nh, dh)
+    xf = x.astype(jnp.float32)
+    log_i = (xf @ p["w_i"] + p["b_i"])          # (B,S,H) pre-exp input gate
+    log_f = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"])
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_cell(state, q_t, k_t, v_t, log_i_t, log_f_t):
+    """One recurrence step; all f32. Shapes: q/k/v (B,H,Dh), gates (B,H)."""
+    m_new = jnp.maximum(log_f_t + state["m"], log_i_t)
+    f_ = jnp.exp(log_f_t + state["m"] - m_new)[..., None]        # (B,H,1)
+    i_ = jnp.exp(log_i_t - m_new)[..., None]                     # (B,H,1)
+    c_new = f_[..., None] * state["c"] + i_[..., None] * (
+        v_t[..., :, None] * k_t[..., None, :])                   # (B,H,Dh,Dh)
+    n_new = f_ * state["n"] + i_ * k_t
+    h_num = jnp.einsum("bhij,bhj->bhi", c_new, q_t)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q_t)), 1.0)
+    h = h_num / h_den[..., None]
+    return {"c": c_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_apply(p: dict, x: jax.Array, n_heads: int, state: dict | None = None):
+    """Full sequence. x: (B,S,d) -> (out, final_state)."""
+    b, s, d = x.shape
+    nh = n_heads
+    dh = d // nh
+    q, k, v, log_i, log_f = _mlstm_qkv(p, x, nh)
+    if state is None:
+        state = mlstm_init_state(b, nh, dh)
+
+    def body(st, inp):
+        q_t, k_t, v_t, li_t, lf_t = inp
+        st, h = _mlstm_cell(st, q_t.astype(jnp.float32),
+                            k_t.astype(jnp.float32),
+                            v_t.astype(jnp.float32), li_t, lf_t)
+        return st, h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+          log_f.transpose(1, 0, 2))
+    state, hs = _chunked_scan(body, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = layers.dense(p["w_o"], h) + layers.dense(p["skip"], x)
+    return out, state
+
+
+def mlstm_step(p: dict, x: jax.Array, n_heads: int, state: dict):
+    """Single decode step. x: (B,1,d)."""
+    b, _, d = x.shape
+    q, k, v, log_i, log_f = _mlstm_qkv(p, x, n_heads)
+    state, h = _mlstm_cell(
+        state, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0])
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    out = layers.dense(p["w_o"], h) + layers.dense(p["skip"], x)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_block_init(key, d: int, n_heads: int, dtype=jnp.float32) -> dict:
+    dh = d // n_heads
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sh = 1.0 / math.sqrt(dh)
+    def gate(k):
+        return {
+            "w": jax.random.normal(k, (d, n_heads, dh), jnp.float32) * s,
+            "r": jax.random.normal(jax.random.fold_in(k, 1),
+                                   (n_heads, dh, dh), jnp.float32) * sh,
+            "b": jnp.zeros((n_heads, dh), jnp.float32),
+        }
+    return {
+        "z": gate(ks[0]), "i": gate(ks[1]), "f": gate(ks[2]), "o": gate(ks[3]),
+        "w_out": layers.dense_init(ks[4], d, d, dtype),
+        "skip": layers.dense_init(ks[5], d, d, dtype),
+    }
+
+
+def slstm_init_state(batch: int, n_heads: int, dh: int) -> dict:
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full_like(z, -1e30)}
+
+
+def _slstm_cell(p, st, x_t):
+    """x_t: (B, d) f32. Recurrent gates use h_{t-1}."""
+    def pre(g):
+        return (jnp.einsum("bd,dhk->bhk", x_t, p[g]["w"])
+                + jnp.einsum("bhk,hkj->bhj", st["h"], p[g]["r"])
+                + p[g]["b"])
+    z = jnp.tanh(pre("z"))
+    o = jax.nn.sigmoid(pre("o"))
+    log_i = pre("i")
+    log_f = jax.nn.log_sigmoid(pre("f"))
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_ * st["c"] + i_ * z
+    n_new = f_ * st["n"] + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_apply(p: dict, x: jax.Array, n_heads: int, state: dict | None = None):
+    b, s, d = x.shape
+    nh = n_heads
+    dh = d // nh
+    if state is None:
+        state = slstm_init_state(b, nh, dh)
+    xf = x.astype(jnp.float32)
+
+    def body(st, x_t):
+        return _slstm_cell(p, st, x_t)
+
+    state, hs = _chunked_scan(body, state, xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = layers.dense(p["w_out"], h) + layers.dense(p["skip"], x)
+    return out, state
+
+
+def slstm_step(p: dict, x: jax.Array, n_heads: int, state: dict):
+    b, _, d = x.shape
+    state, h = _slstm_cell(p, state, x[:, 0].astype(jnp.float32))
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    out = layers.dense(p["w_out"], h) + layers.dense(p["skip"], x)
+    return out, state

@@ -1,0 +1,94 @@
+"""Gradient compression for cross-pod (DCN) data parallelism.
+
+At 1000+ nodes the pod-level gradient all-reduce crosses the slow DCN
+fabric; compressing it is the standard distributed-optimization trick.
+Two schemes, both with error feedback (the residual of what compression
+dropped is added back next step, preserving convergence — Karimireddy et
+al. 2019):
+
+  * ``topk``: keep the largest-|g| fraction per tensor (magnitude sparsify).
+  * ``int8``: per-tensor affine quantization to int8.
+
+Usage in the train step: compress(g + residual) -> communicate the compact
+form across the ``pod`` axis -> decompress; residual' = (g + residual) -
+decompressed. ``compressed_allreduce`` packages the whole pattern around
+``jax.lax.pmean``. The compression is simulated losslessly in the dry-run
+(the collective carries the already-decompressed tensor; bytes accounting
+for §Roofline uses the compact payload size).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_compress", "topk_decompress", "int8_compress",
+           "int8_decompress", "compressed_allreduce", "payload_bytes"]
+
+
+def topk_compress(g: jax.Array, fraction: float = 0.05):
+    """Keep the top-``fraction`` entries by magnitude. Returns
+    (values, flat_indices, shape)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * fraction))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx, g.shape
+
+
+def topk_decompress(vals, idx, shape):
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    flat = flat.at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+def int8_compress(g: jax.Array):
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def payload_bytes(g: jax.Array, scheme: str, fraction: float = 0.05) -> int:
+    n = g.size
+    if scheme == "topk":
+        k = max(1, int(n * fraction))
+        return k * (4 + 4)  # f32 value + i32 index
+    if scheme == "int8":
+        return n * 1 + 4
+    return n * 4
+
+
+def compressed_allreduce(grads, residuals, axis_name: str,
+                         scheme: str = "int8", fraction: float = 0.05):
+    """Error-feedback compressed mean-all-reduce over ``axis_name``.
+
+    Works per-leaf; returns (reduced_grads, new_residuals). Inside jit/
+    shard_map only — ``axis_name`` must be bound.
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, scale = int8_compress(gf)
+            approx = int8_decompress(q, scale)
+        elif scheme == "topk":
+            vals, idx, shape = topk_compress(gf, fraction)
+            approx = topk_decompress(vals, idx, shape)
+        else:
+            approx = gf
+        new_r = gf - approx
+        reduced = jax.lax.pmean(approx, axis_name)
+        return reduced, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]))

@@ -1,0 +1,38 @@
+"""LR schedules: WSD (Warmup-Stable-Decay, the MiniCPM schedule) and cosine.
+
+Schedules return a multiplicative factor on the peak LR, as a jittable
+function of the (traced) step — usable inside a compiled train step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["wsd_schedule", "cosine_schedule", "linear_warmup"]
+
+
+def linear_warmup(step, warmup_steps: int):
+    return jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def wsd_schedule(step, *, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_scale: float = 0.1):
+    """Warmup-Stable-Decay (arXiv:2404.06395 §4): linear warmup, long flat
+    stable phase at peak LR, then a fast exponential-style decay tail."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    in_decay = step > (warmup_steps + stable_steps)
+    decay_t = jnp.clip((step - warmup_steps - stable_steps)
+                       / max(decay_steps, 1), 0.0, 1.0)
+    decay = final_scale ** decay_t  # exponential interpolation 1 -> final
+    return jnp.where(in_decay, decay, warm)
+
+
+def cosine_schedule(step, *, warmup_steps: int, total_steps: int,
+                    final_scale: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = final_scale + (1 - final_scale) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)

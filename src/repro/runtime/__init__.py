@@ -1,0 +1,3 @@
+from . import fault_tolerance, shardings
+
+__all__ = ["fault_tolerance", "shardings"]

@@ -1,0 +1,129 @@
+"""Fault-tolerance runtime: failure simulation/detection, retry-from-
+checkpoint, elastic re-meshing, straggler notes.
+
+On a real pod, process failure surfaces as a collective timeout / ICI
+error; the recovery loop is always the same shape:
+
+    while step < total:
+        try:
+            step_out = train_step(...)
+        except DeviceFailure:
+            remesh if topology changed
+            restore latest checkpoint
+            continue
+
+This module provides that loop's pieces in a testable form:
+
+  * ``FailureInjector`` — deterministic step-indexed fault schedule
+    (raises ``SimulatedFailure`` inside the step callable) so tests and the
+    example driver exercise the real recovery path;
+  * ``run_with_recovery`` — the retry loop: restore-from-latest + bounded
+    retries + monotonic progress assertion;
+  * ``elastic_restore`` — re-place a checkpoint onto a different mesh
+    (shrunk/grown device count), using checkpoint.restore's sharding arg.
+
+LAMC-specific resilience is handled upstream by the probabilistic model:
+``probability.resamples_for_failures`` converts an expected block-failure
+count into extra resamples T_p (DESIGN.md §5) — a *statistical* fault
+budget no retry loop needs to see.
+
+Straggler mitigation (design note, validated by construction): every
+per-device program in this framework has static shapes and static trip
+counts — no data-dependent loop bounds anywhere (fixed k-means/SVD/NMTF
+iterations, fixed scan lengths, capacity-bounded MoE dispatch). A straggler
+can therefore only be a hardware-slow chip, which synchronous SPMD absorbs
+at the next collective; the LAMC resample margin additionally makes the
+*output* robust to a straggler's blocks being dropped entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+
+logger = logging.getLogger("repro.fault_tolerance")
+
+__all__ = ["SimulatedFailure", "FailureInjector", "run_with_recovery",
+           "elastic_restore"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a device/process failure in tests and examples."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises at the configured steps — exactly once each."""
+    fail_at_steps: tuple[int, ...] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def run_with_recovery(
+    *,
+    total_steps: int,
+    step_fn: Callable[[int, Any], Any],       # (step, state) -> state
+    state: Any,
+    ckpt_dir: str,
+    save_every: int,
+    state_for_save: Callable[[Any], Any] = lambda s: s,
+    restore_state: Callable[[int], Any] | None = None,
+    max_retries: int = 8,
+    start_step: int = 0,
+) -> tuple[Any, dict]:
+    """Drive ``step_fn`` with checkpoint/restart fault tolerance.
+
+    ``restore_state(step)`` rebuilds runtime state from checkpoint ``step``
+    (defaults to requiring the caller to capture restore in step state).
+    Returns (final_state, stats).
+    """
+    step = start_step
+    retries = 0
+    failures = 0
+    while step < total_steps:
+        try:
+            state = step_fn(step, state)
+            step += 1
+            retries = 0
+            if step % save_every == 0 or step == total_steps:
+                ckpt.save(ckpt_dir, step, state_for_save(state),
+                          extra_meta={"step": step})
+        except SimulatedFailure as e:
+            failures += 1
+            retries += 1
+            if retries > max_retries:
+                raise RuntimeError(f"exceeded {max_retries} retries") from e
+            latest = ckpt.latest_step(ckpt_dir)
+            logger.warning("step %d failed (%s); restoring from %s",
+                           step, e, latest)
+            if latest is None:
+                step = start_step  # restart from scratch
+                if restore_state is not None:
+                    state = restore_state(-1)
+            else:
+                step = latest
+                if restore_state is not None:
+                    state = restore_state(latest)
+    return state, {"failures": failures, "final_step": step}
+
+
+def elastic_restore(ckpt_dir: str, step: int, like, mesh, specs):
+    """Restore a checkpoint onto ``mesh`` with ``specs`` PartitionSpecs —
+    device count may differ from the writing mesh (elastic scaling)."""
+    from jax.sharding import NamedSharding
+
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    flat_sh = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    return ckpt.restore(ckpt_dir, step, like, shardings=flat_sh)

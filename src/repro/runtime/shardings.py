@@ -1,0 +1,230 @@
+"""Auto-sharding policy: divisibility-aware TP + FSDP PartitionSpecs for
+every parameter / activation / cache in the model zoo.
+
+Policy (DESIGN.md §5):
+  * TP over ``model`` (16): attention heads when ``H % 16 == 0``, else the
+    head axis is replicated (smollm's 15 heads, recurrentgemma's 10);
+    d_ff always (all assigned d_ff are multiples of 16); vocab (padded to a
+    multiple first — see ``pad_vocab``); experts when ``E % 16 == 0`` (EP).
+  * FSDP over ``data`` (16, and ``pod`` x ``data`` = 32 in multi-pod): the
+    largest remaining dim of every big tensor. XLA re-gathers per layer
+    under the scan — the standard FSDP schedule.
+  * Activations: batch over (``pod``,) ``data``; decode KV caches shard
+    heads over ``model`` when divisible, else the *sequence* axis
+    (distributed-softmax decode — attention reductions lower to psum).
+
+Rules are name-based over the param pytree paths, with per-tensor
+divisibility checks that relax to replication (never fail to lower).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["MeshAxes", "pad_vocab", "param_specs", "param_shardings",
+           "batch_specs", "cache_specs", "path_name"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis names present in the mesh."""
+    data: tuple[str, ...] = ("data",)      # ("pod","data") for multi-pod
+    model: str = "model"
+
+    @property
+    def fsdp(self) -> tuple[str, ...]:
+        return self.data
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def path_name(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    size = 1
+    for ax in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[ax]
+    return n % size == 0 and n >= size
+
+
+def _spec_for(name: str, shape: tuple[int, ...], mesh: Mesh, ax: MeshAxes,
+              stacked: bool) -> P:
+    """PartitionSpec for one parameter tensor.
+
+    ``stacked``: leading dim is the scan/layer axis (never sharded).
+    """
+    dims: list[Any] = [None] * len(shape)
+    core = shape[1:] if stacked else shape
+    off = 1 if stacked else 0
+
+    def set_dim(i, axis):
+        dims[off + i] = axis
+
+    model = ax.model
+    leaf = name.rsplit("/", 1)[-1]
+
+    if leaf == "table":                      # embedding (V, D)
+        if _div(core[0], mesh, model):
+            set_dim(0, model)
+        if _div(core[1], mesh, ax.fsdp):
+            set_dim(1, ax.fsdp)
+    elif leaf in ("wq", "wk", "wv"):          # (D, H, Dh)
+        if _div(core[1], mesh, model):
+            set_dim(1, model)
+        if _div(core[0], mesh, ax.fsdp):
+            set_dim(0, ax.fsdp)
+    elif leaf == "wo":                        # (H, Dh, D)
+        if _div(core[0], mesh, model):
+            set_dim(0, model)
+        if _div(core[2], mesh, ax.fsdp):
+            set_dim(2, ax.fsdp)
+    elif "w_in" in name or "w_gate" in name or "w_out" in name:
+        if len(core) == 3:                    # experts (E, D, F) / (E, F, D)
+            if _div(core[0], mesh, model):
+                set_dim(0, model)             # expert parallelism
+            if _div(core[1], mesh, ax.fsdp):
+                set_dim(1, ax.fsdp)
+        elif len(core) == 2:                  # dense mlp (D, F) / (F, D)
+            big = 0 if core[0] >= core[1] else 1
+            ff_dim = big                      # ff is the larger dim
+            if _div(core[ff_dim], mesh, model):
+                set_dim(ff_dim, model)
+            other = 1 - ff_dim
+            if _div(core[other], mesh, ax.fsdp):
+                set_dim(other, ax.fsdp)
+    elif leaf == "w" and len(core) == 2:      # router (D,E), lm head (D,V), generic
+        if _div(core[1], mesh, model):
+            set_dim(1, model)
+        if _div(core[0], mesh, ax.fsdp):
+            set_dim(0, ax.fsdp)
+    elif leaf == "w" and len(core) == 3:      # slstm gate (D, H, Dh)
+        if _div(core[1], mesh, model):
+            set_dim(1, model)
+        if _div(core[0], mesh, ax.fsdp):
+            set_dim(0, ax.fsdp)
+    elif len(core) == 2 and min(core) >= 128:  # big square-ish (rglru gates...)
+        if _div(core[1], mesh, model):
+            set_dim(1, model)
+        if _div(core[0], mesh, ax.fsdp):
+            set_dim(0, ax.fsdp)
+    # 1-D scales/biases and small tensors stay replicated
+    return P(*dims)
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh,
+                ax: MeshAxes = MeshAxes()):
+    """Pytree of PartitionSpecs matching ``params_shape`` (eval_shape out)."""
+    def one(path, leaf):
+        name = path_name(path)
+        stacked = name.startswith("units/") or name.startswith("encoder/blocks")
+        return _spec_for(name, tuple(leaf.shape), mesh, ax, stacked)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(cfg: ArchConfig, params_shape, mesh: Mesh,
+                    ax: MeshAxes = MeshAxes()):
+    specs = param_specs(cfg, params_shape, mesh, ax)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def unit_gather_shardings(cfg: ArchConfig, params_shape, mesh: Mesh,
+                          ax: MeshAxes = MeshAxes()):
+    """TP-only shardings for ONE scan unit's parameter slice.
+
+    Forces GSPMD to all-gather the (small) FSDP weight shards before each
+    unit's matmuls instead of computing partial products against
+    contraction-dim-sharded weights and all-reducing the (huge)
+    activation-sized outputs — measured 34 GB -> ~2 GB of per-unit
+    all-reduce traffic on llama4 train_4k (EXPERIMENTS.md §Perf M1).
+
+    Returns a pytree matching ``params_shape['units']`` with the leading
+    stack dim dropped and every FSDP (data) axis replaced by replication;
+    None where no constraint is needed.
+    """
+    if "units" not in params_shape:
+        return None
+    full = param_specs(cfg, params_shape, mesh, ax)["units"]
+
+    def strip(spec):
+        if not isinstance(spec, P):
+            return None
+        dims = list(spec)[1:]  # drop the stacked-unit dim
+        out = []
+        for d_ in dims:
+            if d_ is None:
+                out.append(None)
+            elif isinstance(d_, tuple):
+                kept = tuple(x for x in d_ if x not in set(ax.fsdp))
+                out.append(kept if kept else None)
+            else:
+                out.append(None if d_ in set(ax.fsdp) else d_)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(strip, full, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, ax: MeshAxes = MeshAxes(),
+                batch: int | None = None):
+    """Input batch sharding: batch over data axes when divisible."""
+    data_ax = ax.fsdp
+    ok = batch is None or _div(batch, mesh, data_ax)
+    bdim = data_ax if ok else None
+    return {
+        "tokens": P(bdim, None),
+        "targets": P(bdim, None),
+        "frontend_embeds": P(bdim, None, None),
+    }
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, mesh: Mesh,
+                ax: MeshAxes = MeshAxes(), batch: int | None = None):
+    """Decode-cache shardings: batch->data; heads->model if divisible, else
+    seq->model (distributed-softmax decode)."""
+    data_ax = ax.fsdp
+    b_ok = batch is None or _div(batch, mesh, data_ax)
+    bdim = data_ax if b_ok else None
+    heads_div = _div(cfg.n_kv_heads, mesh, ax.model)
+
+    def one(path, leaf):
+        name = path_name(path)
+        shape = tuple(leaf.shape)
+        rank = len(shape)
+        leaf_name = name.rsplit("/", 1)[-1]
+        stacked = name.startswith("units")    # leading scan-unit axis
+        off = 1 if stacked else 0
+        dims = [None] * rank
+        if leaf_name in ("k", "v"):
+            # (B, Hkv, S, Dh), + unit axis when stacked
+            dims[off + 0] = bdim
+            if heads_div:
+                dims[off + 1] = ax.model
+            elif _div(shape[off + 2], mesh, ax.model):
+                dims[off + 2] = ax.model      # shard sequence instead
+        elif leaf_name in ("ks", "vs"):
+            # int8-cache scales (B, Hkv, S): follow the k/v layout
+            dims[off + 0] = bdim
+            if heads_div:
+                dims[off + 1] = ax.model
+            elif _div(shape[off + 2], mesh, ax.model):
+                dims[off + 2] = ax.model
+        else:
+            # recurrent states: (B, ...) after the optional unit axis
+            if rank > off:
+                dims[off] = bdim
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

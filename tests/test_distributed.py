@@ -1,0 +1,61 @@
+"""Distributed LAMC: multi-device correctness via subprocess (needs its own
+XLA_FLAGS before jax init, so it cannot share this process)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import LAMCConfig
+    from repro.core.distributed import distributed_lamc
+    from repro.core.partition import PartitionPlan
+    from repro.core.metrics import cocluster_scores
+    from repro.data import planted_cocluster_matrix
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+    rng = np.random.default_rng(0)
+    data = planted_cocluster_matrix(rng, 480, 400, k=4, d=4, signal=4.0, noise=0.5)
+    a = jnp.asarray(data.matrix)
+    plan = PartitionPlan(480, 400, m=4, n=2, phi=120, psi=200, t_p=2, seed=0)
+    cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4)
+    out = distributed_lamc(mesh, a, cfg, plan)
+    s = cocluster_scores(np.array(out.row_labels), np.array(out.col_labels),
+                         data.row_labels, data.col_labels)
+    assert s["nmi"] > 0.55, s
+    # deterministic across runs
+    out2 = distributed_lamc(mesh, a, cfg, plan)
+    assert np.array_equal(np.array(out.row_labels), np.array(out2.row_labels))
+    # multiple blocks per device (16 blocks on 8 devices)
+    plan2 = PartitionPlan(480, 400, m=4, n=4, phi=120, psi=100, t_p=2, seed=0)
+    out3 = distributed_lamc(mesh, a, cfg, plan2)
+    s3 = cocluster_scores(np.array(out3.row_labels), np.array(out3.col_labels),
+                          data.row_labels, data.col_labels)
+    assert s3["nmi"] > 0.55, s3
+    print("DISTRIBUTED_OK", s["nmi"], s3["nmi"])
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_lamc_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "DISTRIBUTED_OK" in res.stdout

@@ -1,0 +1,155 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in
+Python) — this validates BlockSpec indexing, padding/masking, and the
+numerics of the in-kernel math against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestKMeansAssign:
+    @pytest.mark.parametrize("p", [8, 100, 512, 777])
+    @pytest.mark.parametrize("d", [4, 37, 128])
+    @pytest.mark.parametrize("k", [2, 7, 16])
+    def test_shape_sweep_f32(self, p, d, k):
+        rng = _rng(p * 1000 + d * 10 + k)
+        x = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        l_k, d_k = ops.kmeans_assign(x, c)
+        l_r, d_r = ref.kmeans_assign_ref(x, c)
+        np.testing.assert_array_equal(np.array(l_k), np.array(l_r))
+        np.testing.assert_allclose(np.array(d_k), np.array(d_r), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        rng = _rng(1)
+        x = jnp.asarray(rng.normal(size=(130, 64))).astype(dtype)
+        c = jnp.asarray(rng.normal(size=(5, 64))).astype(dtype)
+        l_k, _ = ops.kmeans_assign(x, c)
+        l_r, _ = ref.kmeans_assign_ref(x, c)
+        agree = float(jnp.mean((l_k == l_r).astype(jnp.float32)))
+        # bf16 rounding can flip genuinely ambiguous points; require near-total agreement
+        assert agree > 0.98, agree
+
+    def test_sentinel_centroids_never_selected(self):
+        """Padding adds sentinel centroids; labels must stay < true K."""
+        rng = _rng(2)
+        x = jnp.asarray(rng.normal(size=(50, 16)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+        labels, _ = ops.kmeans_assign(x, c)
+        assert int(labels.max()) < 3
+
+    def test_tile_boundary_exact_multiple(self):
+        rng = _rng(3)
+        x = jnp.asarray(rng.normal(size=(1024, 128)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+        l_k, _ = ops.kmeans_assign(x, c, tile_p=512)
+        l_r, _ = ref.kmeans_assign_ref(x, c)
+        np.testing.assert_array_equal(np.array(l_k), np.array(l_r))
+
+
+class TestBipartiteNormalize:
+    @pytest.mark.parametrize("m,n", [(16, 16), (100, 300), (257, 129), (512, 64)])
+    def test_shape_sweep(self, m, n):
+        rng = _rng(m + n)
+        a = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        out_k, s1_k, s2_k = ops.bipartite_normalize(a)
+        d1 = jnp.sum(jnp.abs(a), 1)
+        d2 = jnp.sum(jnp.abs(a), 0)
+        out_r = ref.bipartite_normalize_ref(a, d1, d2)
+        np.testing.assert_allclose(np.array(out_k), np.array(out_r), rtol=1e-5, atol=1e-6)
+
+    def test_matches_core_spectral(self):
+        """Kernel path must agree with the core library's normalization."""
+        from repro.core.spectral import normalize_bipartite
+
+        rng = _rng(5)
+        a = jnp.asarray(np.abs(rng.normal(size=(90, 70))).astype(np.float32))
+        out_k, s1_k, s2_k = ops.bipartite_normalize(a)
+        out_c, s1_c, s2_c = normalize_bipartite(a)
+        np.testing.assert_allclose(np.array(out_k), np.array(out_c), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.array(s1_k), np.array(s1_c), rtol=1e-6)
+
+    def test_zero_rows_finite(self):
+        a = jnp.zeros((20, 30), jnp.float32).at[0, 0].set(2.0)
+        out, _, _ = ops.bipartite_normalize(a)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype(self, dtype):
+        rng = _rng(6)
+        a = jnp.asarray(rng.normal(size=(64, 64))).astype(dtype)
+        out, _, _ = ops.bipartite_normalize(a)
+        assert out.dtype == dtype
+
+
+class TestFlashAttention:
+    def _check(self, b, hq, hkv, s, d, causal, tile, dtype=jnp.float32, tol=2e-3):
+        rng = _rng(b * 10 + s)
+        q = jnp.asarray(rng.normal(size=(b, hq, s, d))).astype(dtype)
+        k = jnp.asarray(rng.normal(size=(b, hkv, s, d))).astype(dtype)
+        v = jnp.asarray(rng.normal(size=(b, hkv, s, d))).astype(dtype)
+        o_k = ops.flash_attention(q, k, v, causal=causal, tile_q=tile, tile_k=tile)
+        rep = hq // hkv
+        kk = jnp.repeat(k, rep, 1).reshape(b * hq, s, d)
+        vv = jnp.repeat(v, rep, 1).reshape(b * hq, s, d)
+        o_r = ref.attention_ref(q.reshape(b * hq, s, d), kk, vv, causal=causal)
+        np.testing.assert_allclose(
+            np.array(o_k, np.float32),
+            np.array(o_r.reshape(b, hq, s, d), np.float32),
+            rtol=tol, atol=tol,
+        )
+
+    @pytest.mark.parametrize("s", [32, 64, 100, 160])
+    def test_seq_sweep_causal(self, s):
+        self._check(1, 2, 2, s, 32, causal=True, tile=32)
+
+    def test_non_causal(self):
+        self._check(1, 2, 2, 96, 32, causal=False, tile=32)
+
+    def test_gqa_expansion(self):
+        self._check(2, 8, 2, 64, 16, causal=True, tile=32)
+
+    def test_unaligned_seq_padding(self):
+        # 100 is not a multiple of tile 64: padded KV must be masked out
+        self._check(1, 1, 1, 100, 32, causal=True, tile=64)
+
+    def test_bf16(self):
+        self._check(1, 2, 2, 64, 32, causal=True, tile=32,
+                    dtype=jnp.bfloat16, tol=2e-2)
+
+    def test_matches_chunked_jnp_attention(self):
+        """Cross-check vs the model stack's lax.scan chunked attention."""
+        from repro.models.attention import chunked_causal_attention
+
+        rng = _rng(9)
+        q = jnp.asarray(rng.normal(size=(1, 4, 128, 32)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, 4, 128, 32)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, 4, 128, 32)).astype(np.float32))
+        o_pallas = ops.flash_attention(q, k, v, causal=True, tile_q=32, tile_k=32)
+        o_chunk = chunked_causal_attention(q, k, v, chunk_size=32)
+        np.testing.assert_allclose(np.array(o_pallas), np.array(o_chunk),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestKMeansPallasIntegration:
+    def test_kmeans_with_pallas_assign(self):
+        """core.kmeans(assign_impl='pallas') must match the jnp path."""
+        from repro.core import kmeans as km
+
+        rng = _rng(11)
+        x = jnp.asarray(rng.normal(size=(200, 24)).astype(np.float32))
+        r_jnp = km.kmeans(jax.random.key(0), x, 4, n_iter=8, assign_impl="jnp")
+        r_pls = km.kmeans(jax.random.key(0), x, 4, n_iter=8, assign_impl="pallas")
+        np.testing.assert_array_equal(np.array(r_jnp.labels), np.array(r_pls.labels))
+        np.testing.assert_allclose(float(r_jnp.inertia), float(r_pls.inertia), rtol=1e-4)

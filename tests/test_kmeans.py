@@ -1,0 +1,80 @@
+"""k-means: convergence on separable data, weighting, SPMD-static shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import kmeans as km
+from repro.core.metrics import nmi
+
+
+def _blobs(rng, n_per=50, k=4, d=8, spread=0.1):
+    centers = rng.normal(0, 1, (k, d)) * 4.0
+    pts = np.concatenate([centers[i] + rng.normal(0, spread, (n_per, d)) for i in range(k)])
+    labels = np.repeat(np.arange(k), n_per)
+    perm = rng.permutation(len(pts))
+    return pts[perm].astype(np.float32), labels[perm]
+
+
+class TestAssign:
+    def test_assign_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(40, 6)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(5, 6)).astype(np.float32))
+        labels, d2 = km.assign(x, c)
+        brute = np.argmin(((np.array(x)[:, None] - np.array(c)[None]) ** 2).sum(-1), axis=1)
+        np.testing.assert_array_equal(np.array(labels), brute)
+        brute_d = np.min(((np.array(x)[:, None] - np.array(c)[None]) ** 2).sum(-1), axis=1)
+        np.testing.assert_allclose(np.array(d2), brute_d, rtol=1e-4, atol=1e-4)
+
+
+class TestKMeans:
+    def test_recovers_separable_blobs(self):
+        rng = np.random.default_rng(1)
+        x, true = _blobs(rng)
+        res = km.kmeans(jax.random.key(0), jnp.asarray(x), 4, n_iter=20)
+        assert nmi(np.array(res.labels), true) > 0.95
+
+    def test_inertia_nonincreasing_with_iters(self):
+        rng = np.random.default_rng(2)
+        x, _ = _blobs(rng, spread=0.5)
+        xs = jnp.asarray(x)
+        inertias = [
+            float(km.kmeans(jax.random.key(0), xs, 4, n_iter=i).inertia)
+            for i in (1, 5, 20)
+        ]
+        assert inertias[1] <= inertias[0] + 1e-3
+        assert inertias[2] <= inertias[1] + 1e-3
+
+    def test_weighted_ignores_zero_weight_points(self):
+        rng = np.random.default_rng(3)
+        x, true = _blobs(rng, n_per=30, k=3)
+        # poison points far away with zero weight must not move centroids
+        poison = rng.normal(100.0, 1.0, (20, x.shape[1])).astype(np.float32)
+        xw = jnp.asarray(np.concatenate([x, poison]))
+        w = jnp.asarray(np.concatenate([np.ones(len(x)), np.zeros(20)]).astype(np.float32))
+        res = km.kmeans(jax.random.key(0), xw, 3, n_iter=20, weights=w)
+        assert nmi(np.array(res.labels[: len(x)]), true) > 0.95
+        # no centroid should be near the poison cloud
+        assert float(jnp.max(jnp.abs(res.centroids))) < 50.0
+
+    @given(k=st.integers(2, 6), n=st.integers(20, 60))
+    @settings(max_examples=10, deadline=None)
+    def test_labels_in_range_and_static_shapes(self, k, n):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+        res = km.kmeans(jax.random.key(1), x, k, n_iter=5)
+        assert res.labels.shape == (n,)
+        assert res.centroids.shape == (k, 5)
+        lab = np.array(res.labels)
+        assert lab.min() >= 0 and lab.max() < k
+
+    def test_vmappable_over_blocks(self):
+        """The LAMC hot path vmaps kmeans over a block stack."""
+        rng = np.random.default_rng(5)
+        stack = jnp.asarray(rng.normal(size=(6, 40, 5)).astype(np.float32))
+        keys = jax.random.split(jax.random.key(0), 6)
+        res = jax.vmap(lambda kk, xx: km.kmeans(kk, xx, 3, n_iter=4).labels)(keys, stack)
+        assert res.shape == (6, 40)

@@ -1,0 +1,84 @@
+"""NMI/ARI metric correctness + hypothesis invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import metrics
+
+labels = st.lists(st.integers(0, 5), min_size=5, max_size=60)
+
+
+class TestNMI:
+    def test_perfect_agreement(self):
+        a = np.array([0, 0, 1, 1, 2, 2])
+        assert metrics.nmi(a, a) == 1.0
+
+    def test_permutation_invariant(self):
+        a = np.array([0, 0, 1, 1, 2, 2])
+        b = np.array([2, 2, 0, 0, 1, 1])
+        assert abs(metrics.nmi(a, b) - 1.0) < 1e-12
+
+    def test_independent_labels_near_zero(self):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 4, 20000)
+        b = rng.integers(0, 4, 20000)
+        assert metrics.nmi(a, b) < 0.01
+
+    @given(a=labels)
+    @settings(max_examples=30, deadline=None)
+    def test_range(self, a):
+        a = np.array(a)
+        b = np.roll(a, 1)
+        v = metrics.nmi(a, b)
+        assert 0.0 <= v <= 1.0
+
+    @given(a=labels, b=labels)
+    @settings(max_examples=30, deadline=None)
+    def test_symmetry(self, a, b):
+        n = min(len(a), len(b))
+        a, b = np.array(a[:n]), np.array(b[:n])
+        assert abs(metrics.nmi(a, b) - metrics.nmi(b, a)) < 1e-10
+
+
+class TestARI:
+    def test_perfect(self):
+        a = np.array([0, 0, 1, 1])
+        assert metrics.ari(a, a) == 1.0
+
+    def test_known_value(self):
+        # classic example: sklearn-adjusted_rand_score([0,0,1,1],[0,0,1,2]) = 0.5714...
+        a = np.array([0, 0, 1, 1])
+        b = np.array([0, 0, 1, 2])
+        assert abs(metrics.ari(a, b) - 0.5714285714285714) < 1e-10
+
+    def test_independent_near_zero(self):
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, 4, 20000)
+        b = rng.integers(0, 4, 20000)
+        assert abs(metrics.ari(a, b)) < 0.01
+
+    @given(a=labels, b=labels)
+    @settings(max_examples=30, deadline=None)
+    def test_symmetry_and_range(self, a, b):
+        n = min(len(a), len(b))
+        a, b = np.array(a[:n]), np.array(b[:n])
+        v = metrics.ari(a, b)
+        assert -1.0 <= v <= 1.0
+        assert abs(v - metrics.ari(b, a)) < 1e-10
+
+
+class TestUnassigned:
+    def test_negative_labels_dropped(self):
+        a = np.array([0, 0, 1, 1, -1])
+        b = np.array([0, 0, 1, 1, 1])
+        assert metrics.nmi(a, b) == 1.0
+        assert metrics.ari(a, b) == 1.0
+
+
+class TestCoclusterScores:
+    def test_keys_and_averaging(self):
+        a = np.array([0, 0, 1, 1])
+        s = metrics.cocluster_scores(a, a, a, a)
+        assert s["nmi"] == 1.0 and s["ari"] == 1.0
+        assert set(s) == {"row_nmi", "col_nmi", "row_ari", "col_ari", "nmi", "ari"}

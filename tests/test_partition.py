@@ -1,0 +1,94 @@
+"""Partition plan + block extraction invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import partition
+
+
+def _plan(M=120, N=90, m=3, n=3, t_p=2, seed=0):
+    return partition.PartitionPlan(
+        n_rows=M, n_cols=N, m=m, n=n, phi=M // m, psi=N // n, t_p=t_p, seed=seed
+    )
+
+
+class TestResampleIndices:
+    def test_shapes(self):
+        plan = _plan()
+        row_idx, col_idx = partition.resample_indices(plan, 0)
+        assert row_idx.shape == (3, 40)
+        assert col_idx.shape == (3, 30)
+
+    def test_indices_are_disjoint_within_resample(self):
+        plan = _plan()
+        row_idx, col_idx = partition.resample_indices(plan, 0)
+        assert len(np.unique(np.array(row_idx))) == plan.rows_used
+        assert len(np.unique(np.array(col_idx))) == plan.cols_used
+
+    def test_deterministic_in_seed_and_resample(self):
+        plan = _plan()
+        r1, c1 = partition.resample_indices(plan, 3)
+        r2, c2 = partition.resample_indices(plan, 3)
+        assert np.array_equal(np.array(r1), np.array(r2))
+        r3, _ = partition.resample_indices(plan, 4)
+        assert not np.array_equal(np.array(r1), np.array(r3))
+
+    def test_traced_resample_index(self):
+        """Must work under jit with a traced resample id (scan in lamc)."""
+        plan = _plan()
+        f = jax.jit(lambda t: partition.resample_indices(plan, t)[0])
+        assert f(jnp.int32(1)).shape == (3, 40)
+
+
+class TestExtractBlocks:
+    def test_block_content_matches_indices(self):
+        plan = _plan()
+        a = jnp.arange(120 * 90, dtype=jnp.float32).reshape(120, 90)
+        blocks, row_idx, col_idx = partition.extract_blocks(a, plan, 0)
+        assert blocks.shape == (9, 40, 30)
+        a_np = np.array(a)
+        for i in range(3):
+            for j in range(3):
+                expect = a_np[np.array(row_idx[i])][:, np.array(col_idx[j])]
+                np.testing.assert_array_equal(np.array(blocks[i * 3 + j]), expect)
+
+    @given(
+        m=st.sampled_from([1, 2, 4]),
+        n=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 10),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_every_element_appears_exactly_once(self, m, n, seed):
+        M, N = 32, 24
+        plan = partition.PartitionPlan(M, N, m=m, n=n, phi=M // m, psi=N // n,
+                                       t_p=1, seed=seed)
+        a = jnp.arange(M * N, dtype=jnp.float32).reshape(M, N)
+        blocks, _, _ = partition.extract_blocks(a, plan, 0)
+        vals = np.sort(np.array(blocks).ravel())
+        np.testing.assert_array_equal(vals, np.arange(M * N, dtype=np.float32))
+
+
+class TestCoverage:
+    def test_full_grid_covers_everything(self):
+        plan = _plan()
+        assert partition.coverage_probability(plan) == 1.0
+
+    def test_partial_grid_coverage_grows_with_resamples(self):
+        # 100 rows, m=3 -> phi=33 -> 99 used, 1 dropped per resample
+        p1 = partition.PartitionPlan(100, 90, 3, 3, 33, 30, t_p=1)
+        p5 = partition.PartitionPlan(100, 90, 3, 3, 33, 30, t_p=5)
+        assert partition.coverage_probability(p5) > partition.coverage_probability(p1)
+
+
+class TestMakePlan:
+    def test_make_plan_smoke(self):
+        plan = partition.make_plan(
+            2048, 2048, min_cocluster_rows=256, min_cocluster_cols=256,
+            p_thresh=0.95, workers=8, k=8,
+        )
+        assert plan.detection_p >= 0.95
+        assert plan.rows_used <= 2048 and plan.cols_used <= 2048

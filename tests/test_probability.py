@@ -1,0 +1,109 @@
+"""Theorem-1 probabilistic model: bound validity, monotonicity, Eq.4 solver."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import probability as P
+
+
+class TestTheorem1Bound:
+    def test_failure_bound_in_unit_interval(self):
+        b = P.failure_bound(100, 100, 1000, 1000, 4, 4, 2, 2)
+        assert 0.0 <= b <= 1.0
+
+    def test_bound_dominates_monte_carlo(self):
+        """The analytic bound must upper-bound the true failure probability."""
+        rng = np.random.default_rng(0)
+        cases = [
+            # (Mk, Nk, M, N, m, n, Tm, Tn)
+            (100, 100, 1000, 1000, 4, 4, 2, 2),
+            (50, 80, 500, 800, 2, 4, 2, 2),
+            (200, 150, 1000, 600, 8, 4, 4, 4),
+        ]
+        for Mk, Nk, M, N, m, n, Tm, Tn in cases:
+            mc = P.mc_failure_estimate(rng, Mk, Nk, M, N, m, n, Tm, Tn, trials=500)
+            bound = P.failure_bound(Mk, Nk, M, N, m, n, Tm, Tn)
+            assert mc <= bound + 0.05, (
+                f"MC {mc} exceeded bound {bound} for case {(Mk, Nk, M, N, m, n)}"
+            )
+
+    def test_vacuous_when_margin_nonpositive(self):
+        # co-cluster so small the block can't be required to catch it
+        b = P.failure_bound(2, 2, 1000, 1000, 32, 32, 8, 8)
+        assert b == 1.0
+
+    @given(
+        tp1=st.integers(1, 50),
+        tp2=st.integers(1, 50),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_detection_monotone_in_resamples(self, tp1, tp2):
+        lo, hi = min(tp1, tp2), max(tp1, tp2)
+        p_lo = P.detection_probability(lo, 100, 100, 1000, 1000, 4, 4, 2, 2)
+        p_hi = P.detection_probability(hi, 100, 100, 1000, 1000, 4, 4, 2, 2)
+        assert p_hi >= p_lo - 1e-12
+
+    @given(scale=st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_detection_monotone_in_cocluster_size(self, scale):
+        base = P.detection_probability(4, 50, 50, 1000, 1000, 4, 4, 2, 2)
+        bigger = P.detection_probability(4, 50 * scale, 50 * scale, 1000, 1000, 4, 4, 2, 2)
+        assert bigger >= base - 1e-12
+
+
+class TestEq4Solver:
+    @given(p_thresh=st.floats(0.5, 0.999))
+    @settings(max_examples=30, deadline=None)
+    def test_min_resamples_achieves_threshold(self, p_thresh):
+        tp = P.min_resamples(p_thresh, 100, 100, 1000, 1000, 4, 4, 2, 2)
+        achieved = P.detection_probability(tp, 100, 100, 1000, 1000, 4, 4, 2, 2)
+        assert achieved >= p_thresh - 1e-9
+
+    def test_min_resamples_is_minimal(self):
+        tp = P.min_resamples(0.99, 60, 60, 1000, 1000, 8, 8, 4, 4)
+        if tp > 1:
+            below = P.detection_probability(tp - 1, 60, 60, 1000, 1000, 8, 8, 4, 4)
+            assert below < 0.99
+
+    def test_invalid_threshold_raises(self):
+        with pytest.raises(ValueError):
+            P.min_resamples(1.5, 100, 100, 1000, 1000, 4, 4, 2, 2)
+
+
+class TestFaultMargin:
+    def test_resamples_for_failures_monotone(self):
+        base = 10
+        assert P.resamples_for_failures(base, 64, 0) == base
+        bumped = P.resamples_for_failures(base, 64, 8)
+        assert bumped >= base
+        assert P.resamples_for_failures(base, 64, 16) >= bumped
+
+
+class TestPlanner:
+    def test_plan_feasible_and_constrained(self):
+        cand = P.plan_partition(
+            4096, 4096, min_cocluster_rows=512, min_cocluster_cols=512,
+            p_thresh=0.95, workers=16, k=8,
+        )
+        assert cand.detection_p >= 0.95
+        assert cand.phi >= 64 and cand.psi >= 64
+        assert max(cand.m, cand.n) <= 4 * min(cand.m, cand.n) or (cand.m, cand.n) == (1, 1)
+
+    def test_exact_svd_planner_partitions_serially(self):
+        """With a superlinear atom cost, partitioning should win at 1 worker."""
+        cand = P.plan_partition(
+            8192, 8192, min_cocluster_rows=1024, min_cocluster_cols=1024,
+            p_thresh=0.9, workers=1, k=8, svd_method="exact",
+        )
+        assert cand.m * cand.n > 1
+
+    def test_more_workers_never_increases_cost(self):
+        c1 = P.plan_partition(4096, 4096, min_cocluster_rows=512,
+                              min_cocluster_cols=512, workers=1, k=8)
+        c16 = P.plan_partition(4096, 4096, min_cocluster_rows=512,
+                               min_cocluster_cols=512, workers=16, k=8)
+        assert c16.est_cost <= c1.est_cost

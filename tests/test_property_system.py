@@ -1,0 +1,175 @@
+"""Hypothesis property tests on system-level invariants (beyond the
+per-module suites): MoE conservation, signature invariances, sharding
+policy totality, analytic-model sanity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.core import merging
+from repro.launch.analytic import analytic_cell
+from repro.launch.roofline import collective_bytes_from_hlo
+from repro.models import moe as moe_mod
+
+
+class TestMoEInvariants:
+    @given(top_k=st.integers(1, 3), seed=st.integers(0, 5))
+    @settings(max_examples=8, deadline=None)
+    def test_identity_experts_preserve_input(self, top_k, seed):
+        """With all experts = identity-ish zero mapping, output must be the
+        shared-expert response only; with zero shared too, output ~ 0 —
+        i.e. dispatch/combine conserve and never hallucinate mass."""
+        d, e, ff = 16, 4, 8
+        key = jax.random.key(seed)
+        p = moe_mod.moe_init(key, d, ff, e, 0)
+        p = jax.tree.map(jnp.zeros_like, p)  # zero experts + router
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(2, 8, d)).astype(np.float32))
+        out, aux = moe_mod.moe_apply(p, x, top_k=top_k)
+        assert float(jnp.max(jnp.abs(out))) < 1e-5
+
+    @given(cf=st.sampled_from([0.5, 1.0, 2.0]))
+    @settings(max_examples=6, deadline=None)
+    def test_combine_weights_bounded_by_gates(self, cf):
+        """Dropped tokens contribute zero; kept tokens' gate weights sum
+        to at most 1 (renormalized top-k)."""
+        d, e, ff = 12, 4, 8
+        p = moe_mod.moe_init(jax.random.key(0), d, ff, e, 0)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(1, 16, d)).astype(np.float32))
+        out, _ = moe_mod.moe_apply(p, x, top_k=2, capacity_factor=cf)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestSignatureInvariances:
+    @given(scale=st.floats(0.5, 4.0), seed=st.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_scale_invariance(self, scale, seed):
+        """Signatures are unit-normalized: scaling the data must not change
+        them (the cross-block alignment relies on this)."""
+        rng = np.random.default_rng(seed)
+        feats = jnp.asarray(rng.normal(size=(2, 20, 8)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, 3, (2, 20)), jnp.int32)
+        s1, c1 = merging.atom_signatures(feats, labels, 3)
+        s2, c2 = merging.atom_signatures(feats * scale, labels, 3)
+        np.testing.assert_allclose(np.array(s1), np.array(s2),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_array_equal(np.array(c1), np.array(c2))
+
+    @given(shift=st.floats(-5.0, 5.0))
+    @settings(max_examples=10, deadline=None)
+    def test_feature_shift_invariance(self, shift):
+        """Per-block centering: adding a constant to all features must not
+        change signatures (grand-mean direction removal)."""
+        rng = np.random.default_rng(3)
+        feats = jnp.asarray(rng.normal(size=(1, 30, 6)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, 2, (1, 30)), jnp.int32)
+        s1, _ = merging.atom_signatures(feats, labels, 2)
+        s2, _ = merging.atom_signatures(feats + shift, labels, 2)
+        np.testing.assert_allclose(np.array(s1), np.array(s2),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestAnalyticModel:
+    @pytest.mark.parametrize("arch", [a for a in list_archs()
+                                      if a != "lamc-coclustering"])
+    def test_all_cells_finite_positive(self, arch):
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                continue
+            ac = analytic_cell(cfg, shape, chips=256)
+            assert ac.flops_global > 0
+            assert ac.hbm_bytes_per_dev > 0
+            assert ac.coll_bytes_per_dev >= 0
+            assert np.isfinite(ac.flops_global)
+
+    def test_train_flops_exceed_prefill(self):
+        cfg = get_arch("qwen3-4b")
+        tr = analytic_cell(cfg, SHAPES["train_4k"], 256)
+        # same tokens forward-only would be 1/4 of train (remat + backward)
+        pf_like = dataclasses.replace(SHAPES["train_4k"], kind="prefill")
+        pf = analytic_cell(cfg, pf_like, 256)
+        assert tr.flops_global > 3.5 * pf.flops_global
+
+
+class TestHLOCensusParser:
+    def test_parses_collective_shapes(self):
+        hlo = """
+  %ag = f32[16,128]{1,0} all-gather(f32[16,8]{1,0} %x), replica_groups={}
+  %ar.1 = bf16[4,4]{1,0} all-reduce(bf16[4,4]{1,0} %y), to_apply=%add
+  %a2a = (f32[2,2]{1,0}) all-to-all(f32[2,2]{1,0} %z)
+"""
+        out = collective_bytes_from_hlo(hlo)
+        assert out["all-gather"] == 16 * 128 * 4
+        assert out["all-reduce"] == 4 * 4 * 2 * 2  # 2x for ring AR
+        assert out["all-to-all"] == 2 * 2 * 4
+        assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+    def test_ignores_done_halves(self):
+        hlo = """
+  %s = f32[8]{0} all-gather-start(f32[1]{0} %x)
+  %d = f32[8]{0} all-gather-done(f32[8]{0} %s)
+"""
+        out = collective_bytes_from_hlo(hlo)
+        assert out.get("all-gather", 0) == 8 * 4  # counted once
+
+
+# Sharding policy totality: every arch's param tree gets a valid spec
+# (runs in a subprocess: needs its own multi-device XLA_FLAGS).
+@pytest.mark.slow
+def test_sharding_policy_total_subprocess():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        from repro.configs.base import get_arch, list_archs
+        from repro.launch.steps import padded_cfg
+        from repro.models import build_model
+        from repro.runtime import shardings as sh
+        from repro.runtime.shardings import MeshAxes
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ax = MeshAxes(data=("data",), model="model")
+        for name in list_archs():
+            if name == "lamc-coclustering":
+                continue
+            cfg = padded_cfg(get_arch(name))
+            m = build_model(cfg)
+            ps = jax.eval_shape(lambda m=m: m.init(jax.random.key(0)))
+            specs = sh.param_specs(cfg, ps, mesh, ax)
+            # every spec must be applicable: dims divide or are None
+            import jax.tree_util as jtu
+            for (path, leaf), (_, spec) in zip(
+                    jtu.tree_flatten_with_path(ps)[0],
+                    jtu.tree_flatten_with_path(
+                        specs, is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))[0]):
+                for dim, s in zip(leaf.shape, tuple(spec) + (None,) * 9):
+                    if s is None:
+                        continue
+                    size = 1
+                    for a in (s if isinstance(s, tuple) else (s,)):
+                        size *= mesh.shape[a]
+                    assert dim % size == 0, (name, path, leaf.shape, spec)
+        print("SHARDING_TOTAL_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "SHARDING_TOTAL_OK" in res.stdout

@@ -1,0 +1,99 @@
+"""Spectral co-clustering atom: normalization, randomized SVD, end-to-end SCC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import spectral
+from repro.core.metrics import cocluster_scores
+from repro.data import planted_cocluster_matrix
+
+
+class TestNormalize:
+    def test_matches_definition(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(np.abs(rng.normal(size=(30, 20))).astype(np.float32))
+        a_n, d1i, d2i = spectral.normalize_bipartite(a)
+        expect = np.diag(np.array(d1i)) @ np.array(a) @ np.diag(np.array(d2i))
+        np.testing.assert_allclose(np.array(a_n), expect, rtol=1e-5)
+
+    def test_zero_rows_finite(self):
+        a = jnp.zeros((5, 4), jnp.float32).at[0, 0].set(1.0)
+        a_n, _, _ = spectral.normalize_bipartite(a)
+        assert bool(jnp.all(jnp.isfinite(a_n)))
+
+
+class TestRandomizedSVD:
+    @given(
+        m=st.integers(20, 80),
+        n=st.integers(20, 80),
+        rank=st.integers(2, 6),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_recovers_lowrank_spectrum(self, m, n, rank):
+        rng = np.random.default_rng(m * 100 + n)
+        u = np.linalg.qr(rng.normal(size=(m, rank)))[0]
+        v = np.linalg.qr(rng.normal(size=(n, rank)))[0]
+        s = np.sort(rng.uniform(1.0, 5.0, rank))[::-1]
+        a = jnp.asarray((u * s) @ v.T, dtype=jnp.float32)
+        _, s_est, _ = spectral.randomized_svd(jax.random.key(0), a, rank, n_iter=6)
+        np.testing.assert_allclose(np.array(s_est), s, rtol=1e-2)
+
+    def test_singular_vectors_match_exact(self):
+        # spiked spectrum: subspace iteration resolves well-separated leading
+        # singular values; a flat Marchenko-Pastur tail is out of scope.
+        rng = np.random.default_rng(7)
+        base = rng.normal(size=(60, 40)).astype(np.float32)
+        u0, s0, vt0 = np.linalg.svd(base, full_matrices=False)
+        s0[:3] = [40.0, 25.0, 15.0]  # spike the top three
+        a = jnp.asarray((u0 * s0) @ vt0)
+        u_r, s_r, vt_r = spectral.randomized_svd(jax.random.key(0), a, 3, n_iter=12)
+        u_e, s_e, vt_e = np.linalg.svd(np.array(a), full_matrices=False)
+        np.testing.assert_allclose(np.array(s_r), s_e[:3], rtol=1e-2)
+        # vectors up to sign
+        for i in range(3):
+            dot = abs(float(np.dot(np.array(u_r[:, i]), u_e[:, i])))
+            assert dot > 0.98, f"singular vector {i} misaligned: {dot}"
+
+
+class TestSCC:
+    def test_recovers_planted_coclusters(self):
+        rng = np.random.default_rng(0)
+        data = planted_cocluster_matrix(rng, 300, 240, k=4, d=4, signal=4.0, noise=0.5)
+        res = spectral.scc(jax.random.key(0), jnp.asarray(data.matrix), 4, 4)
+        s = cocluster_scores(np.array(res.row_labels), np.array(res.col_labels),
+                             data.row_labels, data.col_labels)
+        assert s["nmi"] > 0.7, s
+
+    def test_exact_and_randomized_agree_on_easy_data(self):
+        rng = np.random.default_rng(1)
+        data = planted_cocluster_matrix(rng, 200, 160, k=3, d=3, signal=6.0, noise=0.3)
+        a = jnp.asarray(data.matrix)
+        r1 = spectral.scc(jax.random.key(0), a, 3, 3, svd_method="exact")
+        r2 = spectral.scc(jax.random.key(0), a, 3, 3, svd_method="randomized")
+        s1 = cocluster_scores(np.array(r1.row_labels), np.array(r1.col_labels),
+                              data.row_labels, data.col_labels)
+        s2 = cocluster_scores(np.array(r2.row_labels), np.array(r2.col_labels),
+                              data.row_labels, data.col_labels)
+        assert abs(s1["nmi"] - s2["nmi"]) < 0.15
+
+    def test_different_row_col_cluster_counts(self):
+        rng = np.random.default_rng(2)
+        data = planted_cocluster_matrix(rng, 240, 180, k=4, d=3, signal=5.0, noise=0.4)
+        res = spectral.scc(jax.random.key(0), jnp.asarray(data.matrix), 4, 3)
+        assert res.row_labels.shape == (240,)
+        assert res.col_labels.shape == (180,)
+        assert int(res.col_labels.max()) < 3
+
+    def test_vmappable(self):
+        rng = np.random.default_rng(3)
+        stack = jnp.asarray(rng.normal(size=(4, 50, 40)).astype(np.float32))
+        keys = jax.random.split(jax.random.key(0), 4)
+        rl, cl = jax.vmap(
+            lambda kk, b: (lambda r: (r.row_labels, r.col_labels))(
+                spectral.scc(kk, b, 3, 3)
+            )
+        )(keys, stack)
+        assert rl.shape == (4, 50) and cl.shape == (4, 40)
