@@ -2,7 +2,7 @@
 
 Not a table in the paper, but the partitioning algorithm's correctness
 rests on Eq. (3); this bench quantifies the bound's tightness across
-co-cluster sizes and grids (consumed by EXPERIMENTS.md §Dry-run notes).
+co-cluster sizes and grids (consumed by benchmarks/README.md §Dry-run notes).
 """
 
 from __future__ import annotations

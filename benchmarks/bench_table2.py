@@ -76,7 +76,7 @@ def run(report=print):
     # NMTF rows (PNMTF baseline): multiplicative updates are LINEAR per
     # iteration, so serial partitioning cannot reduce FLOPs — single-core
     # reduction ~0 or negative by design; the gain is the workers-fold
-    # parallel term carried by the dry-run cells (EXPERIMENTS.md).
+    # parallel term carried by the dry-run cells (benchmarks/README.md).
     data_n = planted_cocluster_matrix(rng, 2000, 1600, k=k, d=k,
                                       signal=4.0, noise=0.7)
     an = jnp.asarray(data_n.matrix)

@@ -2,11 +2,14 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract). Sections:
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) and, at
+exit, writes ``BENCH_atoms.json`` — a machine-readable ``{name: µs/call}``
+map of every timed row, so per-PR perf trajectories can be diffed without
+parsing stdout. Sections (described in benchmarks/README.md):
   table2_*      running-time reproduction (paper Table II)
   table3_*      NMI/ARI reproduction (paper Table III)
   prob_bound_*  Theorem-1 bound tightness (paper Eq. 3)
-  roofline_*    per-cell roofline terms (EXPERIMENTS.md §Roofline)
+  roofline_*    per-cell roofline terms (benchmarks/README.md §Roofline)
   kernel_*      Pallas kernel micro-benches (interpret-mode correctness +
                 jnp-path wall time; TPU wall time requires hardware)
 """
@@ -14,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract). Sections:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -43,6 +47,42 @@ def _kernel_micro(report):
         g().block_until_ready()
     report(f"kernel_chunked_attn_1k,{(time.perf_counter()-t0)/3*1e6:.0f},jnp_path")
 
+    _kernel_kmeans_fused(report)
+
+
+def _kernel_kmeans_fused(report):
+    """One Lloyd iteration: jnp 3-pass update vs fused one-pass kernel.
+
+    On TPU the fused path reads ``x`` from HBM once instead of three times
+    and never materializes the ``(P, K)`` one-hot (DESIGN.md §4). On CPU
+    the kernel runs in Pallas interpret mode, so its wall time here is a
+    correctness proxy only — the jnp row is the meaningful CPU number.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(1)
+    p, d, k = 4096, 64, 16
+    x = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+
+    f_jnp = jax.jit(lambda: kref.kmeans_update_ref(x, c))
+    f_fused = jax.jit(lambda: kops.kmeans_update(x, c))
+    for name, fn in (("kernel_kmeans_update_jnp", f_jnp),
+                     ("kernel_kmeans_update_fused", f_fused)):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        backend = "jnp_3pass" if name.endswith("jnp") else (
+            "fused_1pass" if jax.default_backend() == "tpu"
+            else "fused_1pass_interpret")
+        report(f"{name},{(time.perf_counter()-t0)/3*1e6:.0f},{backend}")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
@@ -52,8 +92,18 @@ def main(argv=None) -> None:
                     help="run a single section: table2|table3|prob|roofline|kernel")
     args = ap.parse_args(argv)
 
+    rows: dict[str, float] = {}
+
     def report(line: str) -> None:
         print(line, flush=True)
+        # rows follow the "name,us_per_call,derived" contract; keep every
+        # one whose second field parses as a number
+        parts = line.split(",")
+        if len(parts) >= 2:
+            try:
+                rows[parts[0]] = float(parts[1])
+            except ValueError:
+                pass
 
     sections = (args.only.split(",") if args.only
                 else ["prob", "roofline", "kernel", "table3", "table2"])
@@ -72,6 +122,20 @@ def main(argv=None) -> None:
     if "table2" in sections:
         from benchmarks import bench_table2
         bench_table2.run(report)
+
+    # merge into any existing file so `--only` runs refresh their section
+    # without clobbering the rest of the trajectory record
+    merged = {}
+    try:
+        with open("BENCH_atoms.json") as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        pass
+    merged.update(rows)
+    with open("BENCH_atoms.json", "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    print(f"wrote BENCH_atoms.json ({len(rows)} new / {len(merged)} total entries)",
+          flush=True)
 
 
 if __name__ == "__main__":

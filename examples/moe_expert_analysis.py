@@ -1,6 +1,6 @@
 """LAMC x MoE integration: co-cluster the token-type x expert affinity
 matrix of a trained MoE router to discover expert specialization groups
-(DESIGN.md §4 — the paper's technique applied to the LM stack).
+(DESIGN.md — the paper's technique applied to the LM stack).
 
     PYTHONPATH=src python examples/moe_expert_analysis.py
 """

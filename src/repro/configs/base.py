@@ -195,7 +195,7 @@ def cells(include_skipped: bool = False):
             if shape.name == "long_500k" and not cfg.sub_quadratic:
                 live, why = False, (
                     "full-attention arch: 512k decode needs sub-quadratic "
-                    "attention (DESIGN.md §4)"
+                    "attention (DESIGN.md)"
                 )
             if live or include_skipped:
                 yield cfg, shape, live, why

@@ -37,7 +37,6 @@ from jax.sharding import PartitionSpec as P
 
 from . import merging, partition
 from .lamc import LAMCConfig, LAMCResult, _atom_fn
-from .kmeans import kmeans as _kmeans_fn
 
 __all__ = ["distributed_lamc", "lamc_step_fn", "lamc_input_specs"]
 
@@ -60,7 +59,7 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
     mesh each pod runs its own subset of resamples instead of duplicating
     them (without this, every pod recomputes identical blocks and the
     signature gathers span 2x the devices for zero extra information —
-    measured collective-bound in EXPERIMENTS.md §Perf iteration L3.1).
+    measured collective-bound in benchmarks/README.md §Perf iteration L3.1).
     Requires ``plan.t_p %% mesh.shape[resample_axis] == 0``.
     Returns ``(step, in_shardings, out_shardings)``.
     """
@@ -153,16 +152,16 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
         # joint clustering across resamples AND blocks: one shared label
         # space, exactly like the single-host merge (label spaces from
         # different resamples must not be mixed unaligned).
-        atom_global_r = _kmeans_fn(
-            kr, all_row_sigs.reshape(-1, q), cfg.n_row_clusters,
-            n_iter=cfg.merge_kmeans_iters,
-            weights=all_row_counts.reshape(-1),
-        ).labels.reshape(plan.t_p, b_total, cfg.atom_k)
-        atom_global_c = _kmeans_fn(
-            kc, all_col_sigs.reshape(-1, q), cfg.n_col_clusters,
-            n_iter=cfg.merge_kmeans_iters,
-            weights=all_col_counts.reshape(-1),
-        ).labels.reshape(plan.t_p, b_total, cfg.atom_d)
+        atom_global_r = merging.cluster_atoms_best(
+            kr, all_row_sigs.reshape(-1, q), all_row_counts.reshape(-1),
+            cfg.n_row_clusters, cfg.merge_kmeans_iters,
+            n_restarts=cfg.merge_restarts,
+        ).reshape(plan.t_p, b_total, cfg.atom_k)
+        atom_global_c = merging.cluster_atoms_best(
+            kc, all_col_sigs.reshape(-1, q), all_col_counts.reshape(-1),
+            cfg.n_col_clusters, cfg.merge_kmeans_iters,
+            n_restarts=cfg.merge_restarts,
+        ).reshape(plan.t_p, b_total, cfg.atom_d)
 
         # this device's slice of the replicated global atom table
         dev_linear = jnp.int32(0)

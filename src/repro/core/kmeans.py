@@ -5,10 +5,13 @@ runs the identical program regardless of data, so block co-clustering never
 creates shape- or trip-count-stragglers. Convergence is monitored (inertia is
 returned) but never branched on.
 
-The assignment step is the hot spot (the paper's inner loop); it is
-implemented via the MXU-friendly expansion ``|x-c|^2 = |x|^2 - 2 x.c + |c|^2``
-and has a Pallas TPU kernel twin in ``repro.kernels.kmeans_assign`` (selected
-with ``assign_impl='pallas'``), validated against this reference in tests.
+The Lloyd iteration is the hot spot (the paper's inner loop). The jnp path
+implements it via the MXU-friendly expansion ``|x-c|^2 = |x|^2 - 2 x.c +
+|c|^2`` plus a materialized one-hot update; ``assign_impl='pallas'`` routes
+the whole iteration through the fused one-pass kernel
+``repro.kernels.kmeans_update`` (assignment + per-centroid sum/count
+accumulation in VMEM — one HBM read of ``x`` per iteration instead of
+three, DESIGN.md §4), validated against this reference in tests.
 """
 
 from __future__ import annotations
@@ -45,6 +48,12 @@ def _pallas_assign(x, centroids):
     return _kops.kmeans_assign(x, centroids)
 
 
+def _pallas_update(x, centroids, weights):
+    from repro.kernels import ops as _kops  # lazy: kernels are optional on CPU
+
+    return _kops.kmeans_update(x, centroids, weights=weights)
+
+
 def kmeanspp_init(key: jax.Array, x: jax.Array, k: int,
                   weights: jax.Array | None = None) -> jax.Array:
     """k-means++ seeding with a static-trip-count ``fori_loop``.
@@ -58,11 +67,12 @@ def kmeanspp_init(key: jax.Array, x: jax.Array, k: int,
     first = jax.random.choice(kfirst, p, p=w / jnp.sum(w))
     cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
 
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)            # loop-invariant
+
     def body(i, carry):
         cents, key = carry
         key, sub = jax.random.split(key)
         # distance to nearest of the first i centroids; mask out unset rows
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
         c2 = jnp.sum(cents * cents, axis=-1)
         d2 = x2 - 2.0 * (x @ cents.T) + c2[None, :]        # (P,K)
         valid = jnp.arange(k) < i
@@ -90,23 +100,37 @@ def kmeans(
     Empty clusters keep their previous centroid (standard fix that preserves
     SPMD static shapes). ``weights`` makes both seeding and centroid updates
     weighted (zero-weight points contribute nothing). ``assign_impl='pallas'``
-    routes the assignment step through the Pallas TPU kernel.
+    routes each full Lloyd iteration through the fused Pallas kernel
+    (``kernels.kmeans_update``): assignment *and* sum/count accumulation in
+    one pass over ``x``, with no materialized ``(P, K)`` one-hot.
     """
     assign_fn = _pallas_assign if assign_impl == "pallas" else assign
     w = None if weights is None else weights.astype(x.dtype)
     cents0 = kmeanspp_init(key, x, k, weights=w)
 
-    def step(cents, _):
-        labels, _d = assign_fn(x, cents)
-        onehot = jax.nn.one_hot(labels, k, dtype=x.dtype)   # (P,K)
-        if w is not None:
-            onehot = onehot * w[:, None]
-        counts = jnp.sum(onehot, axis=0)                    # (K,)
-        sums = onehot.T @ x                                 # (K,D)
-        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1e-9)[:, None], cents)
-        return new, None
+    if assign_impl == "pallas":
+        def step(cents, _):
+            _labels, _d, sums, counts = _pallas_update(x, cents, w)
+            new = jnp.where(
+                counts[:, None] > 0,
+                (sums / jnp.maximum(counts, 1e-9)[:, None]).astype(x.dtype),
+                cents,
+            )
+            return new, None
 
-    cents, _ = jax.lax.scan(step, cents0, None, length=n_iter)
+        cents, _ = jax.lax.scan(step, cents0, None, length=n_iter)
+    else:
+        def step(cents, _):
+            labels, _d = assign_fn(x, cents)
+            onehot = jax.nn.one_hot(labels, k, dtype=x.dtype)   # (P,K)
+            if w is not None:
+                onehot = onehot * w[:, None]
+            counts = jnp.sum(onehot, axis=0)                    # (K,)
+            sums = onehot.T @ x                                 # (K,D)
+            new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1e-9)[:, None], cents)
+            return new, None
+
+        cents, _ = jax.lax.scan(step, cents0, None, length=n_iter)
     labels, d2 = assign_fn(x, cents)
     if w is not None:
         d2 = d2 * w

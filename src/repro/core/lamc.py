@@ -46,11 +46,13 @@ class LAMCConfig:
     kmeans_iters: int = 16
     nmtf_iters: int = 64
     merge_kmeans_iters: int = 25
+    merge_restarts: int = 4    # best-of-N seedings for the signature k-means
     signature_dim: int = 64    # number of shared anchor rows/cols for merging
     expected_failed_blocks: int = 0
     grid_candidates: tuple = (1, 2, 4, 8, 16, 32)
     assign_impl: str = "jnp"        # "jnp" | "pallas" — k-means hot path
     svd_method: str = "randomized"  # "randomized" (TPU-adapted) | "exact" (paper)
+    qr_method: str = "qr"           # "qr" (LAPACK) | "cholesky" (Gram, batched)
 
     @property
     def atom_k(self) -> int:
@@ -76,6 +78,7 @@ def _atom_fn(cfg: LAMCConfig):
                 key, block, cfg.atom_k, cfg.atom_d,
                 svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
                 assign_impl=cfg.assign_impl, svd_method=cfg.svd_method,
+                qr_method=cfg.qr_method,
             )
             return res.row_labels, res.col_labels
     elif cfg.atom == "nmtf":
@@ -138,6 +141,7 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
         k_row=cfg.n_row_clusters, k_col=cfg.n_col_clusters,
         m=plan.m, n=plan.n,
         kmeans_iters=cfg.merge_kmeans_iters,
+        n_restarts=cfg.merge_restarts,
         **stacked,
     )
     return merged

@@ -91,13 +91,31 @@ def atom_signatures(
     return sig / jnp.maximum(norm, 1e-12), counts
 
 
-def _cluster_atoms(key, sigs, counts, k_global, n_iter):
-    """Small shared k-means over atom signatures, weighted by atom member
-    counts — empty atoms get zero weight and never attract centroids."""
+def cluster_atoms_best(key, flat, w, k_global, n_iter, n_restarts: int = 4):
+    """Weighted k-means over flattened atom signatures, best of
+    ``n_restarts`` seedings by inertia.
+
+    The signature set is tiny (``T_p*m*n*k`` points of dim ``q``), so the
+    restarts cost nothing next to the atom phase — but this k-means is the
+    single step most exposed to bad local optima: one unlucky seeding
+    scrambles the global atom alignment and visibly degrades end-to-end
+    NMI. Empty atoms carry zero weight and never attract centroids.
+    Deterministic in ``key``; vmapped restarts keep trip counts static
+    (DESIGN.md §2).
+    """
+    keys = jax.random.split(key, n_restarts)
+    res = jax.vmap(
+        lambda kk: _kmeans.kmeans(kk, flat, k_global, n_iter=n_iter, weights=w)
+    )(keys)
+    best = jnp.argmin(res.inertia)
+    return res.labels[best]  # (n_atoms,)
+
+
+def _cluster_atoms(key, sigs, counts, k_global, n_iter, n_restarts):
+    """Small shared k-means over atom signatures (see cluster_atoms_best)."""
     flat = sigs.reshape(-1, sigs.shape[-1])
     w = counts.reshape(-1)
-    res = _kmeans.kmeans(key, flat, k_global, n_iter=n_iter, weights=w)
-    return res.labels  # (n_atoms,)
+    return cluster_atoms_best(key, flat, w, k_global, n_iter, n_restarts)
 
 
 def signature_merge(
@@ -118,6 +136,7 @@ def signature_merge(
     m: int,
     n: int,
     kmeans_iters: int = 25,
+    n_restarts: int = 4,
 ) -> MergeResult:
     """Jittable consensus merge. See module docstring for the scheme."""
     kr, kc = jax.random.split(key)
@@ -125,7 +144,8 @@ def signature_merge(
     d = col_sigs.shape[2]
 
     # --- rows ---
-    atom_global = _cluster_atoms(kr, row_sigs, row_counts, k_row, kmeans_iters)
+    atom_global = _cluster_atoms(kr, row_sigs, row_counts, k_row, kmeans_iters,
+                                 n_restarts)
     atom_global = atom_global.reshape(t_p, b, k)             # (T_p,B,k)
     # each point's global cluster per (resample, col-block) vote
     point_global = jnp.take_along_axis(
@@ -141,7 +161,8 @@ def signature_merge(
     final_rows = jnp.argmax(row_votes, axis=1).astype(jnp.int32)
 
     # --- cols ---
-    atom_global_c = _cluster_atoms(kc, col_sigs, col_counts, k_col, kmeans_iters)
+    atom_global_c = _cluster_atoms(kc, col_sigs, col_counts, k_col, kmeans_iters,
+                                   n_restarts)
     atom_global_c = atom_global_c.reshape(t_p, b, d)
     point_global_c = jnp.take_along_axis(atom_global_c, col_labels, axis=2)
     j_of_b = jnp.arange(b) % n

@@ -125,8 +125,16 @@ def extract_blocks(a: jax.Array, plan: PartitionPlan, resample: jax.Array | int)
     ``blocks[i * n + j] == a[row_idx[i]][:, col_idx[j]]``.
     """
     row_idx, col_idx = resample_indices(plan, resample)
-    # Gather rows once (m*phi, N), then columns once, then tile-split.
-    sub = a[row_idx.reshape(-1)][:, col_idx.reshape(-1)]  # (m*phi, n*psi)
+    rows, cols = row_idx.reshape(-1), col_idx.reshape(-1)
+    # Two gathers; the first one materializes an intermediate whose size
+    # depends on order — (rows_used, N) rows-first vs (M, cols_used)
+    # cols-first. Gather the axis that shrinks the matrix most first, so
+    # peak gather traffic is min(rows_used*N, M*cols_used) + blocks, not
+    # always rows_used*N (which loses badly when N >> cols_used).
+    if plan.rows_used * plan.n_cols <= plan.n_rows * plan.cols_used:
+        sub = a[rows][:, cols]                            # (m*phi, n*psi)
+    else:
+        sub = a[:, cols][rows]                            # (m*phi, n*psi)
     blocks = (
         sub.reshape(plan.m, plan.phi, plan.n, plan.psi)
         .transpose(0, 2, 1, 3)

@@ -151,7 +151,7 @@ def resamples_for_failures(
     Losing a fraction ``f`` of blocks scales the Theorem-1 exponent by
     ``(1 - f)`` (fewer independent block trials), so the exponent is restored
     by ``T_p' = T_p / (1 - f)``. This is the paper's over-sampling knob
-    repurposed as a resilience budget (DESIGN.md §5).
+    repurposed as a resilience budget (DESIGN.md §3).
     """
     if expected_failed_blocks <= 0:
         return base_t_p

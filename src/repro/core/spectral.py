@@ -51,23 +51,52 @@ def normalize_bipartite(a: jax.Array, eps: float = 1e-8):
     return a * d1_isqrt[:, None] * d2_isqrt[None, :], d1_isqrt, d2_isqrt
 
 
-def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4):
+def _cholesky_orth(y: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """Gram-based orthonormalization: ``Q = Y (YᵀY)^{-1/2}`` (CholeskyQR).
+
+    The Gram matrix is a tiny ``(r, r)`` — the only non-matmul work is its
+    Cholesky and a triangular solve, both on an ``(r, r)`` operand, so the
+    tall-skinny factor never goes through LAPACK QR. A trace-scaled ridge
+    keeps the Cholesky finite when ``Y`` is (numerically) rank-deficient;
+    see DESIGN.md §5 for the conditioning argument (squares ``cond(Y)``,
+    fine for the normalized-affinity matrices of the SCC atom).
+    """
+    yf = y.astype(jnp.float32)
+    g = yf.T @ yf                                   # (r, r) Gram — MXU
+    r = g.shape[0]
+    ridge = eps * (jnp.trace(g) / r + 1.0)
+    l = jnp.linalg.cholesky(g + ridge * jnp.eye(r, dtype=g.dtype))
+    # Solve Q @ Lᵀ = Y  =>  Q = Y L^{-T}.
+    q = jax.lax.linalg.triangular_solve(
+        l, yf, left_side=False, lower=True, transpose_a=True)
+    return q.astype(y.dtype)
+
+
+def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
+                   qr_method: str = "qr"):
     """Randomized subspace iteration for the top-``rank`` singular triplets.
 
-    ``n_iter`` QR-stabilized power iterations; all heavy ops are matmuls
-    (MXU) and a final tiny ``(rank, rank)`` exact SVD. Deterministic in
-    ``key``. Returns ``(U (M,r), S (r,), Vt (r,N))``.
+    ``n_iter`` stabilized power iterations; all heavy ops are matmuls (MXU)
+    and a final tiny ``(rank, rank)`` exact SVD. Deterministic in ``key``.
+    Returns ``(U (M,r), S (r,), Vt (r,N))``.
+
+    ``qr_method`` selects the per-iteration orthonormalization:
+      * ``"qr"`` — Householder ``jnp.linalg.qr`` (LAPACK-exact, but lowers
+        to a sequential panel algorithm per block when vmapped on TPU);
+      * ``"cholesky"`` — Gram-based CholeskyQR (``_cholesky_orth``):
+        matmul + ``(r, r)`` Cholesky only, batch-friendly, MXU-resident.
     """
     m, n = a.shape
     r = min(rank, m, n)
+    orth = _cholesky_orth if qr_method == "cholesky" else (
+        lambda y: jnp.linalg.qr(y)[0])
     omega = jax.random.normal(key, (n, r), dtype=a.dtype)
     y = a @ omega                                   # (M, r)
-    q, _ = jnp.linalg.qr(y)
+    q = orth(y)
 
     def body(_, q):
-        z, _ = jnp.linalg.qr(a.T @ q)               # (N, r)
-        q, _ = jnp.linalg.qr(a @ z)                 # (M, r)
-        return q
+        z = orth(a.T @ q)                           # (N, r)
+        return orth(a @ z)                          # (M, r)
 
     q = jax.lax.fori_loop(0, n_iter, body, q)
     b = q.T @ a                                     # (r, N)
@@ -89,7 +118,8 @@ def exact_svd(a: jax.Array, rank: int):
 @functools.partial(
     jax.jit,
     static_argnames=("n_row_clusters", "n_col_clusters", "n_singular_vectors",
-                     "svd_iters", "kmeans_iters", "assign_impl", "svd_method"),
+                     "svd_iters", "kmeans_iters", "assign_impl", "svd_method",
+                     "qr_method"),
 )
 def scc(
     key: jax.Array,
@@ -101,6 +131,7 @@ def scc(
     kmeans_iters: int = 16,
     assign_impl: str = "jnp",
     svd_method: str = "randomized",
+    qr_method: str = "qr",
 ) -> SCCResult:
     """Spectral co-clustering of one (sub)matrix.
 
@@ -121,7 +152,8 @@ def scc(
     if svd_method == "exact":
         u, s, vt = exact_svd(a_n, rank=l + 1)
     else:
-        u, s, vt = randomized_svd(ksvd, a_n, rank=l + 1, n_iter=svd_iters)
+        u, s, vt = randomized_svd(ksvd, a_n, rank=l + 1, n_iter=svd_iters,
+                                  qr_method=qr_method)
     # Drop the leading (trivial) singular pair: u_2..u_{l+1}, v_2..v_{l+1}.
     u_hat = u[:, 1 : l + 1]
     v_hat = vt[1 : l + 1, :].T

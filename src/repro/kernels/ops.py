@@ -25,8 +25,10 @@ from . import ref
 from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
 from .kmeans_assign import kmeans_assign_pallas
+from .kmeans_update import kmeans_update_pallas
 
-__all__ = ["kmeans_assign", "bipartite_normalize", "flash_attention"]
+__all__ = ["kmeans_assign", "kmeans_update", "bipartite_normalize",
+           "flash_attention"]
 
 
 def _interpret() -> bool:
@@ -58,6 +60,29 @@ def kmeans_assign(x: jax.Array, centroids: jax.Array,
     cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
     labels, d2 = kmeans_assign_pallas(xp, cp, tile_p=tile_p, interpret=_interpret())
     return labels[:p], d2[:p]
+
+
+def kmeans_update(x: jax.Array, centroids: jax.Array,
+                  weights: jax.Array | None = None,
+                  tile_p: int = 512) -> tuple[jax.Array, jax.Array,
+                                              jax.Array, jax.Array]:
+    """Fused one-pass Lloyd iteration. x: (P, D); centroids: (K, D).
+
+    Returns ``(labels (P,), d2 (P,), sums (K, D) f32, counts (K,) f32)``
+    matching ``ref.kmeans_update_ref``. Padded centroids are +1e6
+    sentinels (never argmin-selected, so their sums/counts rows stay
+    zero and are sliced off); padded points enter with weight 0, so they
+    contribute nothing to the accumulators.
+    """
+    p, d = x.shape
+    k = centroids.shape[0]
+    w = jnp.ones((p,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
+    cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
+    wp = _pad_to(w, 0, tile_p)
+    labels, d2, sums, counts = kmeans_update_pallas(
+        xp, cp, wp, tile_p=tile_p, interpret=_interpret())
+    return labels[:p], d2[:p], sums[:k, :d], counts[0, :k]
 
 
 def bipartite_normalize(a: jax.Array, eps: float = 1e-8,

@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["kmeans_assign_ref", "bipartite_normalize_ref", "attention_ref"]
+__all__ = ["kmeans_assign_ref", "kmeans_update_ref", "bipartite_normalize_ref",
+           "attention_ref"]
 
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
@@ -22,6 +23,26 @@ def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
     c2 = jnp.sum(c * c, axis=-1)
     d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
     return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.maximum(jnp.min(d2, -1), 0.0)
+
+
+def kmeans_update_ref(x: jax.Array, centroids: jax.Array,
+                      weights: jax.Array | None = None):
+    """Fused Lloyd-iteration oracle: ``(labels, d2, sums, counts)``.
+
+    ``sums[k] = sum_{i: labels[i]==k} w[i] * x[i]`` and
+    ``counts[k] = sum_{i: labels[i]==k} w[i]`` — the statistics one Lloyd
+    step needs to form new centroids. This is the deliberately-naive
+    three-pass / materialized-one-hot formulation the fused kernel is
+    measured against.
+    """
+    labels, d2 = kmeans_assign_ref(x, centroids)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)          # (P, K)
+    if weights is not None:
+        onehot = onehot * weights.astype(jnp.float32)[:, None]
+    sums = onehot.T @ x.astype(jnp.float32)                        # (K, D)
+    counts = jnp.sum(onehot, axis=0)                               # (K,)
+    return labels, d2, sums, counts
 
 
 def bipartite_normalize_ref(a: jax.Array, d1: jax.Array, d2: jax.Array,

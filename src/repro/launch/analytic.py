@@ -1,7 +1,7 @@
 """Analytic roofline cost model — trip-count-exact FLOPs / HBM bytes /
 collective bytes per (arch x shape x mesh) cell.
 
-WHY THIS EXISTS (measured, see EXPERIMENTS.md §Roofline methodology):
+WHY THIS EXISTS (measured, see benchmarks/README.md §Roofline methodology):
 XLA's ``HloCostAnalysis`` visits each while-loop body ONCE, ignoring trip
 counts. Every layer stack here is a ``lax.scan`` (48-80 iterations) and
 several blocks contain inner scans (KV-chunk attention, xLSTM sequence

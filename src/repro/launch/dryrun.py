@@ -8,7 +8,7 @@ For each live cell (see configs.base.cells): builds the appropriate step
 (train_step for train shapes, serve prefill/decode for inference shapes),
 ``jit(...).lower(*ShapeDtypeStructs)`` with explicit in/out shardings,
 ``.compile()``, then records memory_analysis + cost_analysis + the HLO
-collective-byte census into a JSONL file consumed by EXPERIMENTS.md and
+collective-byte census into a JSONL file consumed by benchmarks/README.md and
 benchmarks/bench_roofline.py.
 
 Also dry-runs the paper's own workload (distributed LAMC co-clustering,

@@ -32,7 +32,7 @@ __all__ = ["padded_cfg", "input_specs", "build_train_step",
 
 
 def padded_cfg(cfg: ArchConfig, mesh: Mesh | None = None) -> ArchConfig:
-    """Pad vocab to a shardable multiple (DESIGN.md §5)."""
+    """Pad vocab to a shardable multiple (DESIGN.md)."""
     v = sh.pad_vocab(cfg.vocab_size)
     if v != cfg.vocab_size:
         cfg = dataclasses.replace(cfg, vocab_size=v)
@@ -179,7 +179,7 @@ def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
     # SP activation sharding matters even more for prefill than training:
     # without it the chunked-attention f32 accumulators replicate across the
     # model axis (measured 137 GB/dev -> 1.1 GB/dev on smollm prefill_32k;
-    # EXPERIMENTS.md §Perf).
+    # benchmarks/README.md §Perf).
     act_sharding = None
     if shape.seq_len % mesh.shape[axes.model] == 0:
         # enc-dec included: the constraint applies to decoder carries only

@@ -1,7 +1,7 @@
 """Scan-aware collective/FLOP census by unit extrapolation.
 
 ``compiled.cost_analysis()`` and naive HLO parsing count while-loop bodies
-once (EXPERIMENTS.md §Roofline methodology). This tool compiles the SAME
+once (benchmarks/README.md §Roofline methodology). This tool compiles the SAME
 cell at ``n_layers = 0 units`` and ``n_layers = 1 unit`` and extrapolates:
 
     total(L) = cost(0) + L * (cost(1) - cost(0))

@@ -100,7 +100,7 @@ def decode_attention(
 
     Direct einsum: the score tensor is (B, H, 1, S) — tiny — and the
     softmax-over-sharded-S reduction lowers to psum when the cache's S dim
-    is model-sharded (the distributed-softmax decode path; DESIGN.md §5).
+    is model-sharded (the distributed-softmax decode path; DESIGN.md).
 
     With ``k_scale``/``v_scale`` the cache is int8-quantized per (token,
     head) — halves decode HBM footprint AND bandwidth (the memory-bound

@@ -1,7 +1,7 @@
 """Mixture-of-Experts layer: top-k routing, per-row capacity dispatch,
 grouped-einsum experts, shared experts, load-balance aux loss.
 
-SPMD design (DESIGN.md §5): routing/capacity math is computed *per sequence
+SPMD design (DESIGN.md): routing/capacity math is computed *per sequence
 row* (cumsum over the S axis only), never across the token-global axis —
 so no cross-device cumsum appears when batch is data-sharded, and the
 dispatch scatter stays device-local. Experts are stacked on a leading E
@@ -74,7 +74,7 @@ def moe_apply(p: dict, x: jax.Array, *, top_k: int, act: str = "silu",
     # --- dispatch/combine via one-hot einsums (GSPMD-friendly: scatter/
     # gather ops made XLA replicate the batch axis — measured multi-GB
     # f32 batch all-gathers on llama4 train; einsums partition cleanly
-    # over (data: B, model: E). EXPERIMENTS.md §Perf M2 ---
+    # over (data: B, model: E). benchmarks/README.md §Perf M2 ---
     e_hot = jax.nn.one_hot(expert_idx, e, dtype=x.dtype)       # (B,S,K,E)
     c_hot = jax.nn.one_hot(jnp.where(keep, pos, c), c, dtype=x.dtype)  # (B,S,K,C)
     dispatch = jnp.einsum("bske,bskc->bsec", e_hot, c_hot)     # (B,S,E,C)

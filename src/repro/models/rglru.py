@@ -15,7 +15,7 @@ Training/prefill uses ``jax.lax.associative_scan`` over the linear
 recurrence (log-depth on TPU — the hardware-adapted replacement for the
 sequential CUDA scan kernel the paper uses). Decode is a single fused step
 carrying ``(h, conv_window)`` state — O(1) memory in sequence length, which
-is what qualifies this arch for the 512k-token cell (DESIGN.md §4).
+is what qualifies this arch for the 512k-token cell (DESIGN.md).
 """
 
 from __future__ import annotations

@@ -495,7 +495,7 @@ def forward_full(cfg: ArchConfig, params, tokens, extra=None,
         # the dominant persistent memory (one carry per unit is saved for
         # the rematerialized backward) drops by the model-axis width, at
         # the cost of an all-gather/reduce-scatter pair per unit that XLA
-        # inserts around the attention/MLP compute (EXPERIMENTS.md §Perf).
+        # inserts around the attention/MLP compute (benchmarks/README.md §Perf).
         if act_sharding is None:
             return t
         return jax.lax.with_sharding_constraint(t, act_sharding)
@@ -581,7 +581,7 @@ def logits_from_hidden(cfg, params, hidden):
 def chunked_cross_entropy(cfg, params, hidden, targets, chunk: int = 512):
     """Mean token cross-entropy without materializing (B,S,V) logits:
     the LM head matmul + log-softmax run per sequence chunk (memory lever
-    recorded in EXPERIMENTS.md §Perf)."""
+    recorded in benchmarks/README.md §Perf)."""
     b, s, d = hidden.shape
     n_chunks = s // chunk if s % chunk == 0 else -(-s // chunk)
     pad = n_chunks * chunk - s
@@ -630,7 +630,7 @@ def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
 
     ``quantized=True`` stores K/V as int8 with per-(token, head) f32 scales
     — halves the cache footprint and read bandwidth of the memory-bound
-    decode cells (EXPERIMENTS.md §Perf Q1)."""
+    decode cells (benchmarks/README.md §Perf Q1)."""
     hkv, dh = cfg.n_kv_heads, cfg.head_dim_
     n_units, tail = pattern_layout(cfg)
 

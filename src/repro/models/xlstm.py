@@ -14,7 +14,7 @@ Both are implemented as ``lax.scan`` over the sequence for train/prefill
 and a fused single step for decode. The constant-size state ``(C, n, m)``
 is what qualifies xlstm for the 512k cell. A chunkwise-parallel mLSTM
 (quadratic-within-chunk, recurrent-across-chunk) is the documented TPU
-perf path (EXPERIMENTS.md §Perf discusses the trade-off); the sequential
+perf path (benchmarks/README.md §Perf discusses the trade-off); the sequential
 scan is the always-correct reference implementation.
 """
 
@@ -38,7 +38,7 @@ __all__ = [
 # saving every per-step residual (for mLSTM that residual includes the
 # (B, H, Dh, Dh) matrix memory — 4096 steps of it measured 110 GB/device
 # on the train_4k cell; chunking drops it ~S/chunk-fold at the cost of one
-# extra forward recompute. EXPERIMENTS.md §Perf iteration X1).
+# extra forward recompute. benchmarks/README.md §Perf iteration X1).
 SEQ_CHUNK = 256
 
 

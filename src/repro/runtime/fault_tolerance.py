@@ -24,7 +24,7 @@ This module provides that loop's pieces in a testable form:
 
 LAMC-specific resilience is handled upstream by the probabilistic model:
 ``probability.resamples_for_failures`` converts an expected block-failure
-count into extra resamples T_p (DESIGN.md §5) — a *statistical* fault
+count into extra resamples T_p (DESIGN.md) — a *statistical* fault
 budget no retry loop needs to see.
 
 Straggler mitigation (design note, validated by construction): every

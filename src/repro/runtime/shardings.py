@@ -1,7 +1,7 @@
 """Auto-sharding policy: divisibility-aware TP + FSDP PartitionSpecs for
 every parameter / activation / cache in the model zoo.
 
-Policy (DESIGN.md §5):
+Policy (DESIGN.md):
   * TP over ``model`` (16): attention heads when ``H % 16 == 0``, else the
     head axis is replicated (smollm's 15 heads, recurrentgemma's 10);
     d_ff always (all assigned d_ff are multiples of 16); vocab (padded to a
@@ -149,7 +149,7 @@ def unit_gather_shardings(cfg: ArchConfig, params_shape, mesh: Mesh,
     unit's matmuls instead of computing partial products against
     contraction-dim-sharded weights and all-reducing the (huge)
     activation-sized outputs — measured 34 GB -> ~2 GB of per-unit
-    all-reduce traffic on llama4 train_4k (EXPERIMENTS.md §Perf M1).
+    all-reduce traffic on llama4 train_4k (benchmarks/README.md §Perf M1).
 
     Returns a pytree matching ``params_shape['units']`` with the leading
     stack dim dropped and every FSDP (data) axis replaced by replication;

@@ -1,0 +1,53 @@
+"""Import-or-degrade shim for ``hypothesis``.
+
+Property tests use hypothesis when it is installed (it is in the ``dev``
+extras). When it is absent — minimal CI images, the bare TPU container —
+importing it at module top level used to *error the whole collection*.
+This shim keeps every non-property test running: ``@given`` tests become
+individual skips instead of collection errors.
+
+Usage in test modules::
+
+    from hypothesis_compat import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # *args so the stub fits both plain functions and methods;
+            # pytest ignores varargs during fixture resolution, so the
+            # original hypothesis parameter names never look like fixtures.
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed (dev extra)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Absorbs any strategy construction/chaining at module import."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    st = _StrategyStub()

@@ -58,6 +58,79 @@ class TestKMeansAssign:
         np.testing.assert_array_equal(np.array(l_k), np.array(l_r))
 
 
+class TestKMeansUpdate:
+    """Fused one-pass Lloyd update vs the three-pass oracle."""
+
+    def _check(self, x, c, w=None, tol=1e-4):
+        l_k, d_k, s_k, n_k = ops.kmeans_update(x, c, weights=w)
+        l_r, d_r, s_r, n_r = ref.kmeans_update_ref(x, c, weights=w)
+        np.testing.assert_array_equal(np.array(l_k), np.array(l_r))
+        np.testing.assert_allclose(np.array(d_k), np.array(d_r), rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.array(s_k), np.array(s_r), rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.array(n_k), np.array(n_r), rtol=1e-5, atol=1e-5)
+        return l_k, d_k, s_k, n_k
+
+    @pytest.mark.parametrize("p", [8, 100, 512, 777])
+    @pytest.mark.parametrize("d", [4, 37, 128])
+    @pytest.mark.parametrize("k", [2, 7, 16])
+    def test_shape_sweep_f32(self, p, d, k):
+        rng = _rng(p * 1000 + d * 10 + k)
+        x = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        self._check(x, c)
+
+    def test_weighted(self):
+        rng = _rng(21)
+        x = jnp.asarray(rng.normal(size=(300, 24)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(5, 24)).astype(np.float32))
+        w = jnp.asarray(rng.uniform(0.0, 2.0, 300).astype(np.float32))
+        self._check(x, c, w=w)
+
+    def test_zero_weight_points_contribute_nothing(self):
+        rng = _rng(22)
+        x = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+        w = jnp.zeros((64,), jnp.float32).at[:10].set(1.0)
+        _, _, sums, counts = self._check(x, c, w=w)
+        assert float(jnp.sum(counts)) == 10.0
+
+    def test_empty_cluster_rows_zero(self):
+        """A centroid no point selects must accumulate exactly zero."""
+        rng = _rng(23)
+        x = jnp.asarray(rng.normal(size=(120, 16)).astype(np.float32))
+        far = jnp.full((1, 16), 500.0, jnp.float32)
+        c = jnp.concatenate([jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32)), far])
+        labels, _, sums, counts = self._check(x, c)
+        assert int(labels.max()) < 3
+        assert float(counts[3]) == 0.0
+        np.testing.assert_array_equal(np.array(sums[3]), np.zeros(16, np.float32))
+
+    def test_padded_k_sentinels_sliced_off(self):
+        """K=3 pads to 8 with +1e6 sentinels; outputs keep true K only."""
+        rng = _rng(24)
+        x = jnp.asarray(rng.normal(size=(50, 16)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+        labels, _, sums, counts = ops.kmeans_update(x, c)
+        assert sums.shape == (3, 16) and counts.shape == (3,)
+        assert int(labels.max()) < 3
+        assert float(jnp.sum(counts)) == 50.0
+
+    def test_bf16_accumulates_f32(self):
+        rng = _rng(25)
+        x = jnp.asarray(rng.normal(size=(200, 64))).astype(jnp.bfloat16)
+        c = jnp.asarray(rng.normal(size=(4, 64))).astype(jnp.bfloat16)
+        _, _, s_k, n_k = ops.kmeans_update(x, c)
+        assert s_k.dtype == jnp.float32 and n_k.dtype == jnp.float32
+        _, _, s_r, n_r = ref.kmeans_update_ref(x, c)
+        np.testing.assert_allclose(np.array(s_k), np.array(s_r), rtol=2e-2, atol=2e-2)
+
+    def test_tile_boundary_exact_multiple(self):
+        rng = _rng(26)
+        x = jnp.asarray(rng.normal(size=(1024, 128)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+        self._check(x, c)
+
+
 class TestBipartiteNormalize:
     @pytest.mark.parametrize("m,n", [(16, 16), (100, 300), (257, 129), (512, 64)])
     def test_shape_sweep(self, m, n):
@@ -144,7 +217,8 @@ class TestFlashAttention:
 
 class TestKMeansPallasIntegration:
     def test_kmeans_with_pallas_assign(self):
-        """core.kmeans(assign_impl='pallas') must match the jnp path."""
+        """core.kmeans(assign_impl='pallas') — the fused-update fast path —
+        must match the jnp reference path."""
         from repro.core import kmeans as km
 
         rng = _rng(11)
@@ -153,3 +227,29 @@ class TestKMeansPallasIntegration:
         r_pls = km.kmeans(jax.random.key(0), x, 4, n_iter=8, assign_impl="pallas")
         np.testing.assert_array_equal(np.array(r_jnp.labels), np.array(r_pls.labels))
         np.testing.assert_allclose(float(r_jnp.inertia), float(r_pls.inertia), rtol=1e-4)
+        np.testing.assert_allclose(np.array(r_jnp.centroids), np.array(r_pls.centroids),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_weighted_kmeans_fused_matches_jnp(self):
+        from repro.core import kmeans as km
+
+        rng = _rng(12)
+        x = jnp.asarray(rng.normal(size=(150, 16)).astype(np.float32))
+        w = jnp.asarray(rng.uniform(0.0, 1.0, 150).astype(np.float32))
+        r_jnp = km.kmeans(jax.random.key(1), x, 3, n_iter=6, assign_impl="jnp", weights=w)
+        r_pls = km.kmeans(jax.random.key(1), x, 3, n_iter=6, assign_impl="pallas", weights=w)
+        np.testing.assert_array_equal(np.array(r_jnp.labels), np.array(r_pls.labels))
+        np.testing.assert_allclose(float(r_jnp.inertia), float(r_pls.inertia), rtol=1e-4)
+
+    def test_fused_vmappable_over_blocks(self):
+        """The LAMC hot path vmaps kmeans over a block stack."""
+        from repro.core import kmeans as km
+
+        rng = _rng(13)
+        stack = jnp.asarray(rng.normal(size=(5, 40, 8)).astype(np.float32))
+        keys = jax.random.split(jax.random.key(2), 5)
+        lab_j = jax.vmap(lambda kk, xx: km.kmeans(kk, xx, 3, n_iter=4,
+                                                  assign_impl="jnp").labels)(keys, stack)
+        lab_p = jax.vmap(lambda kk, xx: km.kmeans(kk, xx, 3, n_iter=4,
+                                                  assign_impl="pallas").labels)(keys, stack)
+        np.testing.assert_array_equal(np.array(lab_j), np.array(lab_p))

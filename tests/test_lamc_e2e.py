@@ -62,6 +62,35 @@ class TestLAMCEndToEnd:
         np.testing.assert_array_equal(np.array(out1.row_labels), np.array(out2.row_labels))
         np.testing.assert_array_equal(np.array(out1.col_labels), np.array(out2.col_labels))
 
+    def test_fused_pallas_path_matches_jnp(self, planted):
+        """assign_impl='pallas' (fused Lloyd kernel) must reproduce the jnp
+        path's end-to-end labels — identical up to cluster permutation."""
+        from repro.core.metrics import nmi
+
+        a = jnp.asarray(planted.matrix)
+        plan = PartitionPlan(600, 500, m=2, n=2, phi=300, psi=250, t_p=2, seed=0)
+        base = dict(n_row_clusters=5, n_col_clusters=5,
+                    min_cocluster_rows=120, min_cocluster_cols=100)
+        out_j = lamc_cocluster(a, LAMCConfig(**base, assign_impl="jnp"), plan=plan)
+        out_p = lamc_cocluster(a, LAMCConfig(**base, assign_impl="pallas"), plan=plan)
+        assert nmi(np.array(out_j.row_labels), np.array(out_p.row_labels)) > 0.999
+        assert nmi(np.array(out_j.col_labels), np.array(out_p.col_labels)) > 0.999
+
+    def test_cholesky_qr_path_quality(self, planted):
+        """qr_method='cholesky' (Gram-based batched subspace iteration) must
+        keep consensus quality on par with the LAPACK-QR path."""
+        a = jnp.asarray(planted.matrix)
+        plan = PartitionPlan(600, 500, m=2, n=2, phi=300, psi=250, t_p=3, seed=0)
+        base = dict(n_row_clusters=5, n_col_clusters=5,
+                    min_cocluster_rows=120, min_cocluster_cols=100)
+        out_q = lamc_cocluster(a, LAMCConfig(**base, qr_method="qr"), plan=plan)
+        out_c = lamc_cocluster(a, LAMCConfig(**base, qr_method="cholesky"), plan=plan)
+        s_q = cocluster_scores(np.array(out_q.row_labels), np.array(out_q.col_labels),
+                               planted.row_labels, planted.col_labels)
+        s_c = cocluster_scores(np.array(out_c.row_labels), np.array(out_c.col_labels),
+                               planted.row_labels, planted.col_labels)
+        assert s_c["nmi"] > s_q["nmi"] - 0.1, (s_c, s_q)
+
     def test_labels_in_range_no_nans(self, planted):
         a = jnp.asarray(planted.matrix)
         cfg = LAMCConfig(n_row_clusters=5, n_col_clusters=5,

@@ -1,8 +1,7 @@
 """NMI/ARI metric correctness + hypothesis invariants."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import metrics
 

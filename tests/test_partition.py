@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import partition
 
@@ -70,6 +69,23 @@ class TestExtractBlocks:
         blocks, _, _ = partition.extract_blocks(a, plan, 0)
         vals = np.sort(np.array(blocks).ravel())
         np.testing.assert_array_equal(vals, np.arange(M * N, dtype=np.float32))
+
+    @pytest.mark.parametrize("M,N,phi,psi", [
+        (40, 400, 15, 20),   # wide: cols-first gather is cheaper
+        (400, 40, 20, 15),   # tall: rows-first gather is cheaper
+    ])
+    def test_gather_order_is_content_invariant(self, M, N, phi, psi):
+        """Cheaper-axis-first gather must produce the exact same blocks."""
+        plan = partition.PartitionPlan(M, N, m=2, n=2, phi=phi, psi=psi,
+                                       t_p=1, seed=5)
+        a = jnp.asarray(np.random.default_rng(0).normal(size=(M, N)).astype(np.float32))
+        blocks, row_idx, col_idx = partition.extract_blocks(a, plan, 0)
+        rows = np.array(row_idx).reshape(-1)
+        cols = np.array(col_idx).reshape(-1)
+        expect = (np.array(a)[rows][:, cols]
+                  .reshape(2, phi, 2, psi).transpose(0, 2, 1, 3)
+                  .reshape(4, phi, psi))
+        np.testing.assert_array_equal(np.array(blocks), expect)
 
 
 class TestCoverage:

@@ -3,8 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import spectral
 from repro.core.metrics import cocluster_scores
@@ -58,6 +57,55 @@ class TestRandomizedSVD:
             assert dot > 0.98, f"singular vector {i} misaligned: {dot}"
 
 
+class TestCholeskyQR:
+    """Gram-based (CholeskyQR) subspace iteration vs the LAPACK-QR path."""
+
+    def _spiked(self, m, n, spikes, seed=7):
+        rng = np.random.default_rng(seed)
+        base = rng.normal(size=(m, n)).astype(np.float32)
+        u0, s0, vt0 = np.linalg.svd(base, full_matrices=False)
+        s0[: len(spikes)] = spikes
+        return jnp.asarray((u0 * s0) @ vt0)
+
+    def test_subspace_matches_qr_path(self):
+        a = self._spiked(120, 80, [50.0, 30.0, 20.0, 12.0])
+        u1, s1, _ = spectral.randomized_svd(jax.random.key(0), a, 4, n_iter=8,
+                                            qr_method="qr")
+        u2, s2, _ = spectral.randomized_svd(jax.random.key(0), a, 4, n_iter=8,
+                                            qr_method="cholesky")
+        np.testing.assert_allclose(np.array(s1), np.array(s2), rtol=1e-3)
+        # principal angles between the two computed subspaces
+        sv = np.linalg.svd(np.array(u1).T @ np.array(u2), compute_uv=False)
+        max_angle = float(np.max(np.arccos(np.clip(sv, -1.0, 1.0))))
+        assert max_angle <= 1e-3, max_angle
+
+    def test_q_is_orthonormal(self):
+        a = self._spiked(90, 60, [20.0, 10.0, 6.0])
+        u, _, _ = spectral.randomized_svd(jax.random.key(1), a, 3, n_iter=6,
+                                          qr_method="cholesky")
+        gram = np.array(u).T @ np.array(u)
+        np.testing.assert_allclose(gram, np.eye(3), atol=1e-4)
+
+    def test_recovers_spiked_spectrum(self):
+        a = self._spiked(60, 40, [40.0, 25.0, 15.0])
+        _, s_r, _ = spectral.randomized_svd(jax.random.key(0), a, 3, n_iter=12,
+                                            qr_method="cholesky")
+        s_e = np.linalg.svd(np.array(a), compute_uv=False)
+        np.testing.assert_allclose(np.array(s_r), s_e[:3], rtol=1e-2)
+
+    def test_vmappable_over_block_stack(self):
+        """The batched-subspace-iteration claim: no per-block LAPACK QR."""
+        rng = np.random.default_rng(3)
+        stack = jnp.asarray(rng.normal(size=(4, 50, 40)).astype(np.float32))
+        keys = jax.random.split(jax.random.key(0), 4)
+        u, s, vt = jax.vmap(
+            lambda kk, b: spectral.randomized_svd(kk, b, 3, n_iter=4,
+                                                  qr_method="cholesky")
+        )(keys, stack)
+        assert u.shape == (4, 50, 3) and s.shape == (4, 3) and vt.shape == (4, 3, 40)
+        assert bool(jnp.all(jnp.isfinite(u)))
+
+
 class TestSCC:
     def test_recovers_planted_coclusters(self):
         rng = np.random.default_rng(0)
@@ -86,6 +134,19 @@ class TestSCC:
         assert res.row_labels.shape == (240,)
         assert res.col_labels.shape == (180,)
         assert int(res.col_labels.max()) < 3
+
+    def test_cholesky_qr_method_quality(self):
+        rng = np.random.default_rng(4)
+        data = planted_cocluster_matrix(rng, 300, 240, k=4, d=4, signal=4.0, noise=0.5)
+        a = jnp.asarray(data.matrix)
+        r1 = spectral.scc(jax.random.key(0), a, 4, 4, qr_method="qr")
+        r2 = spectral.scc(jax.random.key(0), a, 4, 4, qr_method="cholesky")
+        s1 = cocluster_scores(np.array(r1.row_labels), np.array(r1.col_labels),
+                              data.row_labels, data.col_labels)
+        s2 = cocluster_scores(np.array(r2.row_labels), np.array(r2.col_labels),
+                              data.row_labels, data.col_labels)
+        assert s2["nmi"] > 0.7, s2
+        assert abs(s1["nmi"] - s2["nmi"]) < 0.15
 
     def test_vmappable(self):
         rng = np.random.default_rng(3)

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.data.tokens import TokenBatchSpec, make_batch
