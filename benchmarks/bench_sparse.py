@@ -1,0 +1,106 @@
+"""Sparse atom phase: BCOO SpMM path vs densify-then-run baseline.
+
+The paper's headline efficiency claim covers sparse inputs ("up to 30%
+for sparse matrices"); this section measures the repo's sparse execution
+path at RCV1-like densities. For each density we time the *atom phase*
+(bipartite normalization + randomized subspace SVD — the per-block hot
+loop) two ways on the same BCOO matrix:
+
+  sparse_atom_bcoo_d*    sparse path: one dual-ELL conversion (timed, it
+                         is part of the path) + normalize + SVD with
+                         gather-only SpMM products (O(nnz * rank))
+  sparse_atom_dense_d*   densify-then-run: ``todense()`` + the dense
+                         pipeline (O(M * N * rank)) — what a caller
+                         without the sparse path must do
+
+plus raw single-product SpMM microbenches (COO segment-sum vs densify;
+a single product can't amortize the ELL conversion, so the scatter
+formulation is the honest one-shot number). Rows land in
+``BENCH_sparse.json`` (see ``run.py``); the acceptance bar is bcoo <
+dense at density <= 0.05. At 0.2 the dense path may win — gathered
+products lose to a saturated MXU/BLAS matmul once nnz approaches the
+block area; that crossover is exactly the asymmetry the density-aware
+plan cost models (``probability._atom_cost``).
+"""
+
+from __future__ import annotations
+
+import time
+
+DENSITIES = (0.01, 0.05, 0.2)
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def run(report, *, quick: bool = False, densities=DENSITIES) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sparse as core_sparse
+    from repro.core.spectral import normalize_bipartite, randomized_svd
+    from repro.data import planted_cocluster_matrix, to_bcoo
+    from repro.kernels import ops as kops
+
+    m, n = (2048, 1024) if quick else (4096, 2048)
+    rank, n_iter = 9, 4
+    key = jax.random.key(0)
+
+    @jax.jit
+    def _atom_ell(ell):
+        a_n, _, _ = normalize_bipartite(ell)
+        return randomized_svd(key, a_n, rank=rank, n_iter=n_iter)
+
+    def atom_sparse(a_sp):
+        # the dual-ELL conversion is part of the sparse path and timed;
+        # it is the one-off analogue of the baseline's todense()
+        return _atom_ell(core_sparse.to_ell(a_sp))
+
+    @jax.jit
+    def atom_densify(a_sp):
+        a_n, _, _ = normalize_bipartite(a_sp.todense())
+        return randomized_svd(key, a_n, rank=rank, n_iter=n_iter)
+
+    @jax.jit
+    def spmm_bcoo(a_sp, omega):
+        return kops.spmm(a_sp, omega)
+
+    @jax.jit
+    def spmm_densify(a_sp, omega):
+        return a_sp.todense() @ omega
+
+    rng = np.random.default_rng(0)
+    omega = jnp.asarray(rng.normal(size=(n, rank)).astype(np.float32))
+    for d in densities:
+        data = planted_cocluster_matrix(rng, m, n, k=8, d=8,
+                                        signal=5.0, noise=0.4, density=d)
+        a_sp = to_bcoo(data.matrix)
+        us_sp = _time(atom_sparse, a_sp)
+        us_de = _time(atom_densify, a_sp)
+        report(f"sparse_atom_bcoo_d{d},{us_sp:.0f},spmm_path_nnz={a_sp.nse}")
+        report(f"sparse_atom_dense_d{d},{us_de:.0f},densify_then_run")
+        report(f"sparse_spmm_bcoo_d{d},{_time(spmm_bcoo, a_sp, omega):.0f},"
+               f"segment_sum")
+        report(f"sparse_spmm_dense_d{d},{_time(spmm_densify, a_sp, omega):.0f},"
+               f"densify_matmul")
+
+    # tile-level kernel: correctness-proxy timing off-TPU (interpret mode),
+    # real wall time on TPU — same caveat as kernel_kmeans_update_fused.
+    data = planted_cocluster_matrix(rng, 512, 512, k=8, d=8,
+                                    signal=5.0, noise=0.4, density=0.05)
+    a_sp = to_bcoo(data.matrix)
+    bs = kops.bcoo_to_block_sparse(a_sp, bm=128, bk=128)
+    omega_s = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
+    backend = ("tiled_kernel" if jax.default_backend() == "tpu"
+               else "tiled_kernel_interpret")
+    occupancy = bs.blocks.shape[0] / ((512 // 128) ** 2)
+    us = _time(lambda: kops.spmm_tiled(bs, omega_s))
+    report(f"sparse_spmm_tiled_512_d0.05,{us:.0f},{backend}_occ={occupancy:.2f}")

@@ -12,6 +12,8 @@ parsing stdout. Sections (described in benchmarks/README.md):
   roofline_*    per-cell roofline terms (benchmarks/README.md §Roofline)
   kernel_*      Pallas kernel micro-benches (interpret-mode correctness +
                 jnp-path wall time; TPU wall time requires hardware)
+  sparse_*      BCOO atom phase vs densify-then-run baseline — these rows
+                are additionally written to ``BENCH_sparse.json``
 """
 
 from __future__ import annotations
@@ -89,7 +91,8 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller table2/3 problem sizes")
     ap.add_argument("--only", default=None,
-                    help="run a single section: table2|table3|prob|roofline|kernel")
+                    help="run a single section: "
+                         "table2|table3|prob|roofline|kernel|sparse")
     args = ap.parse_args(argv)
 
     rows: dict[str, float] = {}
@@ -106,7 +109,7 @@ def main(argv=None) -> None:
                 pass
 
     sections = (args.only.split(",") if args.only
-                else ["prob", "roofline", "kernel", "table3", "table2"])
+                else ["prob", "roofline", "kernel", "sparse", "table3", "table2"])
 
     if "prob" in sections:
         from benchmarks import bench_probability
@@ -116,6 +119,9 @@ def main(argv=None) -> None:
         bench_roofline.run(report)
     if "kernel" in sections:
         _kernel_micro(report)
+    if "sparse" in sections:
+        from benchmarks import bench_sparse
+        bench_sparse.run(report, quick=args.quick)
     if "table3" in sections:
         from benchmarks import bench_table3
         bench_table3.run(report, rcv1_scale=0.05 if args.quick else 0.2)
@@ -124,18 +130,26 @@ def main(argv=None) -> None:
         bench_table2.run(report)
 
     # merge into any existing file so `--only` runs refresh their section
-    # without clobbering the rest of the trajectory record
-    merged = {}
-    try:
-        with open("BENCH_atoms.json") as f:
-            merged = json.load(f)
-    except (OSError, ValueError):
-        pass
-    merged.update(rows)
-    with open("BENCH_atoms.json", "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-    print(f"wrote BENCH_atoms.json ({len(rows)} new / {len(merged)} total entries)",
-          flush=True)
+    # without clobbering the rest of the trajectory record; sparse rows get
+    # their own trajectory file (the dense/sparse asymmetry is tracked
+    # per-PR on its own).
+    def _merge_write(path: str, new_rows: dict) -> None:
+        merged = {}
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            pass
+        merged.update(new_rows)
+        with open(path, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"wrote {path} ({len(new_rows)} new / {len(merged)} total entries)",
+              flush=True)
+
+    sparse_rows = {k: v for k, v in rows.items() if k.startswith("sparse_")}
+    _merge_write("BENCH_atoms.json", rows)
+    if sparse_rows:
+        _merge_write("BENCH_sparse.json", sparse_rows)
 
 
 if __name__ == "__main__":

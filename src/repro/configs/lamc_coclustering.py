@@ -7,6 +7,11 @@ Shapes (rows x cols, block grid matched to the mesh):
 
 These are NOT part of the 40 LM cells; they carry the §Roofline entry for
 the paper's technique itself (the third mandated hillclimb target).
+
+The sparse record covers the RCV1-class regime (DESIGN.md §9): same
+driver with ``LAMCConfig(input_format="bcoo")``, where the data matrix
+stays BCOO end-to-end and per-block atom cost is nnz-bound — its
+roofline compute term scales with density, not area.
 """
 
 from .base import ArchConfig, register
@@ -22,5 +27,18 @@ FULL = ArchConfig(
 )
 
 REDUCED = FULL
+
+# Not register()ed: the LM-stack smoke/analytic suites enumerate the
+# registry and exclude co-clustering records by the FULL name; the sparse
+# twin is a workload descriptor for the benchmark/roofline layer only.
+SPARSE = ArchConfig(
+    name="lamc-coclustering-sparse",
+    family="coclustering",
+    n_layers=0, d_model=0, n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=0,
+    source="this paper (SMC 2024)",
+    notes="RCV1-scale BCOO workload (input_format='bcoo', density<=0.05); "
+          "atom FLOPs scale with nnz — see DESIGN.md §9 and "
+          "benchmarks/README.md §Sparse",
+)
 
 register(FULL, REDUCED)

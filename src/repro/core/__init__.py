@@ -12,7 +12,14 @@ from .lamc import LAMCConfig, LAMCResult, lamc_cocluster
 from .merging import jaccard_merge_host, signature_merge
 from .metrics import ari, cocluster_scores, nmi
 from .nmtf import nmtf
-from .partition import PartitionPlan, extract_blocks, make_plan, resample_indices
+from .partition import (
+    PartitionPlan,
+    coverage_probability,
+    extract_blocks,
+    extract_blocks_sparse,
+    make_plan,
+    resample_indices,
+)
 from .probability import (
     detection_probability,
     failure_bound,
@@ -23,7 +30,8 @@ from .spectral import normalize_bipartite, randomized_svd, scc
 
 __all__ = [
     "LAMCConfig", "LAMCResult", "lamc_cocluster",
-    "PartitionPlan", "make_plan", "extract_blocks", "resample_indices",
+    "PartitionPlan", "make_plan", "extract_blocks", "extract_blocks_sparse",
+    "resample_indices", "coverage_probability",
     "detection_probability", "failure_bound", "min_resamples", "plan_partition",
     "scc", "nmtf", "normalize_bipartite", "randomized_svd",
     "signature_merge", "jaccard_merge_host",

@@ -36,7 +36,18 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from . import merging, partition
-from .lamc import LAMCConfig, LAMCResult, _atom_fn
+from . import sparse as _sparse
+from .lamc import LAMCConfig, LAMCResult, _atom_fn, anchor_features
+
+
+def _validate_input_format(a, cfg: LAMCConfig) -> None:
+    """Same format guard as ``lamc_cocluster`` — fail loudly before jit."""
+    if cfg.input_format == "bcoo":
+        _sparse.validate_bcoo(a)
+    elif _sparse.is_bcoo(a):
+        raise ValueError(
+            "got a BCOO matrix with input_format='dense'; set "
+            "LAMCConfig(input_format='bcoo') for the sparse path")
 
 __all__ = ["distributed_lamc", "lamc_step_fn", "lamc_input_specs"]
 
@@ -78,7 +89,13 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
             f"{mesh.shape[resample_axis]}")
     b_loc = b_total // n_dev
     axes = tuple(block_axes)
-    q = cfg.signature_dim
+    # Effective per-axis signature widths: anchor_indices clamps the anchor
+    # set to the axis length, so row signatures (means over anchor *cols*)
+    # carry min(signature_dim, n_cols) features and col signatures
+    # min(signature_dim, n_rows) — reshaping with the raw cfg.signature_dim
+    # crashed on matrices with a short axis.
+    q_row = min(cfg.signature_dim, plan.n_cols)
+    q_col = min(cfg.signature_dim, plan.n_rows)
 
     block_spec = P(axes, None, None)     # blocks sharded over all mesh axes
     rep = P()                            # replicated
@@ -153,12 +170,12 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
         # space, exactly like the single-host merge (label spaces from
         # different resamples must not be mixed unaligned).
         atom_global_r = merging.cluster_atoms_best(
-            kr, all_row_sigs.reshape(-1, q), all_row_counts.reshape(-1),
+            kr, all_row_sigs.reshape(-1, q_row), all_row_counts.reshape(-1),
             cfg.n_row_clusters, cfg.merge_kmeans_iters,
             n_restarts=cfg.merge_restarts,
         ).reshape(plan.t_p, b_total, cfg.atom_k)
         atom_global_c = merging.cluster_atoms_best(
-            kc, all_col_sigs.reshape(-1, q), all_col_counts.reshape(-1),
+            kc, all_col_sigs.reshape(-1, q_col), all_col_counts.reshape(-1),
             cfg.n_col_clusters, cfg.merge_kmeans_iters,
             n_restarts=cfg.merge_restarts,
         ).reshape(plan.t_p, b_total, cfg.atom_d)
@@ -210,22 +227,28 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
     def step(a):
         kroot = jax.random.key(plan.seed + 7)
         kar, kac, kmerge = jax.random.split(kroot, 3)
-        anchor_rows = merging.anchor_indices(kar, plan.n_rows, q)
-        anchor_cols = merging.anchor_indices(kac, plan.n_cols, q)
+        anchor_rows = merging.anchor_indices(kar, plan.n_rows, cfg.signature_dim)
+        anchor_cols = merging.anchor_indices(kac, plan.n_cols, cfg.signature_dim)
         b = plan.blocks_per_resample
         i_of_b = jnp.arange(b) // plan.n
         j_of_b = jnp.arange(b) % plan.n
+        extract_fn = (partition.extract_blocks_sparse
+                      if cfg.input_format == "bcoo" else partition.extract_blocks)
 
         def extract(t):
             # phase 1: block scatter (GSPMD all-to-all, data moves once)
-            blocks, row_idx, col_idx = partition.extract_blocks(a, plan, t)
+            blocks, row_idx, col_idx = extract_fn(a, plan, t)
             keys = jax.vmap(
                 lambda i: jax.random.fold_in(
                     jax.random.fold_in(jax.random.key(plan.seed + 1), t), i)
             )(jnp.arange(b))
-            row_feats = a[row_idx][:, :, anchor_cols][i_of_b]   # (B, phi, q)
+            # anchor slivers first ((M, q_row) / (q_col, N)) — indexing rows
+            # first would materialize an (m, phi, N) intermediate (same
+            # gather-order fix as extract_blocks).
+            row_sliver, col_sliver = anchor_features(a, anchor_rows, anchor_cols)
+            row_feats = row_sliver[row_idx][i_of_b]             # (B, phi, q_row)
             col_feats = jnp.transpose(
-                a[anchor_rows][:, col_idx], (1, 2, 0))[j_of_b]  # (B, psi, q)
+                col_sliver[:, col_idx], (1, 2, 0))[j_of_b]      # (B, psi, q_col)
             return blocks, keys, row_feats, col_feats, row_idx[i_of_b], col_idx[j_of_b]
 
         if resample_axis is None:
@@ -269,12 +292,16 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
             col_votes=col_votes,
         )
 
-    # data matrix sharded over the first two trailing mesh axes (row, col)
-    a_axes = list(block_axes)
-    if len(a_axes) >= 2:
+    # data matrix sharded over the first two trailing mesh axes (row, col);
+    # a BCOO input replicates — its (nse,)/(nse, 2) leaves have no grid
+    # layout, and the O(nnz) block scatter is re-derived per device.
+    if cfg.input_format == "bcoo":
+        a_spec = P()
+    elif len(block_axes) >= 2:
+        a_axes = list(block_axes)
         a_spec = P(tuple(a_axes[:-1]), a_axes[-1])
     else:
-        a_spec = P(a_axes[0], None)
+        a_spec = P(block_axes[0], None)
     in_shardings = NamedSharding(mesh, a_spec)
     out_shardings = NamedSharding(mesh, P())
     return step, in_shardings, out_shardings
@@ -290,6 +317,7 @@ def distributed_lamc(mesh: Mesh, a: jax.Array, cfg: LAMCConfig,
                      block_axes: Sequence[str] = ("data", "model"),
                      resample_axis: str | None = None) -> LAMCResult:
     """Run distributed LAMC on ``mesh``. See module docstring."""
+    _validate_input_format(a, cfg)
     step, in_sh, out_sh = lamc_step_fn(cfg, plan, mesh, block_axes,
                                        resample_axis=resample_axis)
     step_c = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)

@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from . import merging, nmtf, partition, spectral
+from . import sparse as _sparse
 
-__all__ = ["LAMCConfig", "LAMCResult", "lamc_cocluster", "run_resample"]
+__all__ = ["LAMCConfig", "LAMCResult", "lamc_cocluster", "run_resample",
+           "anchor_features"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +55,7 @@ class LAMCConfig:
     assign_impl: str = "jnp"        # "jnp" | "pallas" — k-means hot path
     svd_method: str = "randomized"  # "randomized" (TPU-adapted) | "exact" (paper)
     qr_method: str = "qr"           # "qr" (LAPACK) | "cholesky" (Gram, batched)
+    input_format: str = "dense"     # "dense" | "bcoo" — sparse execution path
 
     @property
     def atom_k(self) -> int:
@@ -90,14 +93,33 @@ def _atom_fn(cfg: LAMCConfig):
     return atom
 
 
+def anchor_features(a, anchor_rows, anchor_cols):
+    """Anchor slivers ``(A[:, anchor_cols] (M, q), A[anchor_rows] (q, N))``.
+
+    Gather order matters on the dense path: restricting to the ``q``
+    anchor columns *first* keeps the intermediate at ``(M, q)`` — indexing
+    rows first would materialize an ``(m, phi, N)`` tensor, the same
+    gather-order bug ``extract_blocks`` fixed for blocks. A BCOO input
+    scatters its nonzeros straight into the slivers, O(nnz).
+    """
+    if _sparse.is_bcoo(a):
+        return (_sparse.gather_cols_dense(a, anchor_cols),
+                _sparse.gather_rows_dense(a, anchor_rows))
+    return a[:, anchor_cols], a[anchor_rows]
+
+
 def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
     """One resample: extract blocks, co-cluster them (vmapped), summarize.
 
     ``anchor_rows`` / ``anchor_cols`` are the globally shared anchor index
     sets (see ``merging.anchor_indices``). Returns the per-resample tensors
-    consumed by ``merging.signature_merge``.
+    consumed by ``merging.signature_merge``. ``a`` may be dense or BCOO
+    (``cfg.input_format``); the block stack and anchor slivers the atom
+    phase consumes are identical either way.
     """
-    blocks, row_idx, col_idx = partition.extract_blocks(a, plan, t)
+    extract = (partition.extract_blocks_sparse if cfg.input_format == "bcoo"
+               else partition.extract_blocks)
+    blocks, row_idx, col_idx = extract(a, plan, t)
     b = plan.blocks_per_resample
     keys = jax.vmap(
         lambda i: jax.random.fold_in(jax.random.fold_in(jax.random.key(plan.seed + 1), t), i)
@@ -107,8 +129,9 @@ def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
     # anchor features: every block's points restricted to the shared anchors
     j_of_b = jnp.arange(b) % plan.n
     i_of_b = jnp.arange(b) // plan.n
-    row_feats = a[row_idx][:, :, anchor_cols]          # (m, phi, q)
-    col_feats = a[anchor_rows][:, col_idx]             # (q, n, psi)
+    row_sliver, col_sliver = anchor_features(a, anchor_rows, anchor_cols)
+    row_feats = row_sliver[row_idx]                    # (m, phi, q)
+    col_feats = col_sliver[:, col_idx]                 # (q, n, psi)
     col_feats = jnp.transpose(col_feats, (1, 2, 0))    # (n, psi, q)
     row_sigs, row_counts = merging.atom_signatures(
         row_feats[i_of_b], row_labels, cfg.atom_k)
@@ -147,10 +170,25 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
     return merged
 
 
-def lamc_cocluster(a: jax.Array, cfg: LAMCConfig,
+def lamc_cocluster(a, cfg: LAMCConfig,
                    plan: partition.PartitionPlan | None = None) -> LAMCResult:
     """Full LAMC pipeline (Algorithm 1). ``plan=None`` derives the optimal
-    plan from the probabilistic model."""
+    plan from the probabilistic model.
+
+    ``cfg.input_format='bcoo'`` runs the sparse execution path: ``a`` must
+    be a 2-D BCOO matrix, which is never densified — blocks and anchor
+    slivers are scattered out of the nonzeros, and the auto-plan is priced
+    against the matrix's actual density.
+    """
+    if cfg.input_format == "bcoo":
+        _sparse.validate_bcoo(a)
+        density = _sparse.density(a)
+    elif _sparse.is_bcoo(a):
+        raise ValueError(
+            "got a BCOO matrix with input_format='dense'; set "
+            "LAMCConfig(input_format='bcoo') for the sparse path")
+    else:
+        density = 1.0
     n_rows, n_cols = a.shape
     if plan is None:
         plan = partition.make_plan(
@@ -164,6 +202,7 @@ def lamc_cocluster(a: jax.Array, cfg: LAMCConfig,
             expected_failed_blocks=cfg.expected_failed_blocks,
             grid_candidates=cfg.grid_candidates,
             svd_method=cfg.svd_method,
+            density=density,
         )
     merged = _lamc_jit(a, cfg, plan)
     return LAMCResult(merged.row_labels, merged.col_labels,

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from . import probability
 
 __all__ = ["PartitionPlan", "make_plan", "resample_indices", "extract_blocks",
-           "coverage_probability"]
+           "extract_blocks_sparse", "coverage_probability"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +69,14 @@ def make_plan(
     expected_failed_blocks: int = 0,
     grid_candidates=(1, 2, 4, 8, 16, 32),
     svd_method: str = "randomized",
+    density: float = 1.0,
 ) -> PartitionPlan:
-    """Optimal plan via the probabilistic model (Eq. 4 + cost search)."""
+    """Optimal plan via the probabilistic model (Eq. 4 + cost search).
+
+    ``density`` (nnz fraction) feeds the sparse-aware atom cost model —
+    the SpMM subspace iteration scales with nnz, not block area
+    (``probability._atom_cost``).
+    """
     cand = probability.plan_partition(
         n_rows,
         n_cols,
@@ -82,6 +88,7 @@ def make_plan(
         expected_failed_blocks=expected_failed_blocks,
         grid_candidates=grid_candidates,
         svd_method=svd_method,
+        density=density,
     )
     return PartitionPlan(
         n_rows=n_rows,
@@ -96,10 +103,25 @@ def make_plan(
     )
 
 
-def coverage_probability(plan: PartitionPlan) -> float:
-    """P(a given row appears in >= 1 of the T_p resamples)."""
+def coverage_probability(plan: PartitionPlan, axis: str | None = None) -> float:
+    """P(a given index appears in >= 1 of the T_p resamples).
+
+    ``axis='row'`` / ``'col'`` gives the per-axis coverage; the default
+    (``None``) returns their min — the guarantee that holds for *every*
+    index of the matrix. (The row-only form silently overstated coverage
+    whenever the column grid dropped more of its axis than the row grid.)
+    """
     miss_row = 1.0 - plan.rows_used / plan.n_rows
-    return 1.0 - miss_row**plan.t_p
+    miss_col = 1.0 - plan.cols_used / plan.n_cols
+    row_cov = 1.0 - miss_row**plan.t_p
+    col_cov = 1.0 - miss_col**plan.t_p
+    if axis == "row":
+        return row_cov
+    if axis == "col":
+        return col_cov
+    if axis is not None:
+        raise ValueError(f"axis must be 'row', 'col' or None, got {axis!r}")
+    return min(row_cov, col_cov)
 
 
 def resample_indices(plan: PartitionPlan, resample: jax.Array | int):
@@ -140,4 +162,45 @@ def extract_blocks(a: jax.Array, plan: PartitionPlan, resample: jax.Array | int)
         .transpose(0, 2, 1, 3)
         .reshape(plan.m * plan.n, plan.phi, plan.psi)
     )
+    return blocks, row_idx, col_idx
+
+
+def extract_blocks_sparse(a, plan: PartitionPlan, resample: jax.Array | int):
+    """``extract_blocks`` for a BCOO matrix — O(nnz), never densifies A.
+
+    Instead of gathering a ``(m*phi, n*psi)`` dense submatrix, every
+    stored nonzero computes its own destination through the *inverse*
+    resample permutation — ``(block, row-in-block, col-in-block)`` — and
+    scatters straight into the dense block stack. Nonzeros whose row or
+    column misses this resample's uniform grid map to an out-of-range
+    block id and are dropped (``mode='drop'``), mirroring the dense
+    path's "rows that don't fit are left out". The blocks themselves
+    densify (they are the atom work unit and must be MXU-shaped), but
+    peak memory is ``m*n*phi*psi + O(nnz)`` — the dense ``M x N`` matrix
+    never exists.
+
+    Bit-exact vs ``extract_blocks`` on the densified input: each block
+    cell receives exactly one stored value or stays zero (BCOO indices
+    are unique), so there is no summation-order drift.
+    """
+    from . import sparse as _sparse  # local: keep partition importable sans jax.experimental
+
+    _sparse.validate_bcoo(a)
+    row_idx, col_idx = resample_indices(plan, resample)
+    inv_row = jnp.full((plan.n_rows,), plan.rows_used, jnp.int32).at[
+        row_idx.reshape(-1)].set(jnp.arange(plan.rows_used, dtype=jnp.int32))
+    inv_col = jnp.full((plan.n_cols,), plan.cols_used, jnp.int32).at[
+        col_idx.reshape(-1)].set(jnp.arange(plan.cols_used, dtype=jnp.int32))
+    pr = inv_row[a.indices[:, 0]]                 # position among used rows
+    pc = inv_col[a.indices[:, 1]]
+    i, p = pr // plan.phi, pr % plan.phi          # block-row, row-in-block
+    j, s = pc // plan.psi, pc % plan.psi
+    bid = i * plan.n + j
+    # The row sentinel alone lands out of range (i == m -> bid >= m*n), but
+    # the col sentinel gives j == n which can alias a valid block id for
+    # i < m - 1 — force every dropped nonzero out of range explicitly.
+    valid = (pr < plan.rows_used) & (pc < plan.cols_used)
+    bid = jnp.where(valid, bid, plan.m * plan.n)
+    blocks = jnp.zeros((plan.m * plan.n, plan.phi, plan.psi), a.data.dtype)
+    blocks = blocks.at[bid, p, s].add(a.data, mode="drop")
     return blocks, row_idx, col_idx

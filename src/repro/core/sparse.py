@@ -1,0 +1,216 @@
+"""BCOO utilities for the sparse LAMC path (DESIGN.md §9).
+
+The sparse execution path keeps the full ``M x N`` data matrix in
+``jax.experimental.sparse`` BCOO form end-to-end; only *block-sized*
+dense tensors (``phi x psi`` blocks, ``M x q`` anchor features) are ever
+materialized. Everything here is O(nnz) gather/scatter work with static
+shapes (``nse`` is static in a BCOO), so it composes with jit and
+``lax.scan`` exactly like the dense path.
+
+The inverse-permutation scatters use ``mode="drop"``: indices that fall
+outside a resample's uniform grid (or outside the anchor set) are mapped
+to an out-of-range sentinel and silently dropped — the same semantics as
+the dense path's "rows that don't fit the grid are left out".
+
+Assumes canonical 2-D BCOO (``n_batch == n_dense == 0``) with unique
+index pairs, which is what ``BCOO.fromdense`` / ``data.synthetic.to_bcoo``
+produce. Duplicate indices would sum (matching ``todense``) but break the
+bit-exact dense/sparse parity contract, so ``validate_bcoo`` documents
+the requirement.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import sparse as jsparse
+
+__all__ = [
+    "is_bcoo",
+    "validate_bcoo",
+    "density",
+    "abs_degree_sums",
+    "scale_rows_cols",
+    "gather_cols_dense",
+    "gather_rows_dense",
+    "EllOperator",
+    "to_ell",
+    "is_ell",
+    "ell_matvec",
+    "ell_rmatvec",
+    "ell_abs_degree_sums",
+    "ell_scale_rows_cols",
+]
+
+
+def is_bcoo(a) -> bool:
+    """True if ``a`` is a ``jax.experimental.sparse`` BCOO matrix."""
+    return isinstance(a, jsparse.BCOO)
+
+
+def validate_bcoo(a: jsparse.BCOO) -> jsparse.BCOO:
+    """Check the sparse path's input contract (2-D BCOO, no batch/dense dims)."""
+    if not is_bcoo(a):
+        raise ValueError(
+            f"sparse path needs a jax.experimental.sparse BCOO matrix, got "
+            f"{type(a).__name__}")
+    if a.ndim != 2:
+        raise ValueError(f"sparse path needs a 2-D BCOO matrix, got shape {a.shape}")
+    if a.n_batch != 0 or a.n_dense != 0:
+        raise ValueError(
+            f"sparse path needs canonical BCOO (n_batch=n_dense=0), got "
+            f"n_batch={a.n_batch}, n_dense={a.n_dense}")
+    return a
+
+
+def density(a: jsparse.BCOO) -> float:
+    """Static nnz fraction (``nse`` is static, so this is a python float)."""
+    m, n = a.shape
+    return a.nse / float(m * n)
+
+
+def abs_degree_sums(a: jsparse.BCOO) -> tuple[jax.Array, jax.Array]:
+    """Row/col sums of ``|A|`` — the bipartite degrees of Eq. 5, O(nnz)."""
+    rows, cols = a.indices[:, 0], a.indices[:, 1]
+    av = jnp.abs(a.data)
+    d1 = jax.ops.segment_sum(av, rows, num_segments=a.shape[0])
+    d2 = jax.ops.segment_sum(av, cols, num_segments=a.shape[1])
+    return d1, d2
+
+
+def scale_rows_cols(a: jsparse.BCOO, s1: jax.Array, s2: jax.Array) -> jsparse.BCOO:
+    """``diag(s1) @ A @ diag(s2)`` without leaving BCOO (same sparsity)."""
+    rows, cols = a.indices[:, 0], a.indices[:, 1]
+    data = a.data * s1[rows] * s2[cols]
+    return jsparse.BCOO((data, a.indices), shape=a.shape,
+                        indices_sorted=a.indices_sorted,
+                        unique_indices=a.unique_indices)
+
+
+def gather_cols_dense(a: jsparse.BCOO, cols: jax.Array) -> jax.Array:
+    """Dense ``A[:, cols]`` of shape ``(M, q)`` from a BCOO, O(nnz).
+
+    This is the anchor-feature gather of the merge phase: ``q`` is tiny
+    (``signature_dim``), so the output is a sliver — the full matrix is
+    never densified. Columns outside ``cols`` scatter to an out-of-range
+    sentinel and are dropped.
+    """
+    m, n = a.shape
+    q = cols.shape[0]
+    inv = jnp.full((n,), q, jnp.int32).at[cols].set(
+        jnp.arange(q, dtype=jnp.int32))
+    pc = inv[a.indices[:, 1]]
+    out = jnp.zeros((m, q), a.data.dtype)
+    return out.at[a.indices[:, 0], pc].add(a.data, mode="drop")
+
+
+def gather_rows_dense(a: jsparse.BCOO, rows: jax.Array) -> jax.Array:
+    """Dense ``A[rows, :]`` of shape ``(q, N)`` from a BCOO, O(nnz)."""
+    m, n = a.shape
+    q = rows.shape[0]
+    inv = jnp.full((m,), q, jnp.int32).at[rows].set(
+        jnp.arange(q, dtype=jnp.int32))
+    pr = inv[a.indices[:, 0]]
+    out = jnp.zeros((q, n), a.data.dtype)
+    return out.at[pr, a.indices[:, 1]].add(a.data, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Dual-ELL operator: gather-only SpMM for repeated products
+# ---------------------------------------------------------------------------
+
+
+class EllOperator(NamedTuple):
+    """Padded-row (ELL) layout of a sparse matrix, in *both* orientations.
+
+    A COO scatter (segment-sum) pays the scatter unit on every product;
+    the subspace iteration multiplies by the same matrix ~10 times per
+    SVD, so the sparse atom phase converts once and makes every product
+    gather-only: ``out[i] = sum_w vals[i, w] * x[cols[i, w]]`` — dense
+    einsum over a ``(M, W)`` layout, W = max nonzeros per row. Padding
+    slots carry value 0 / index 0, contributing exactly nothing. The
+    transpose orientation is precomputed (``col_*``) so ``A.T @ Q`` is
+    the same gather-only product; nothing is resorted at product time.
+
+    Built host-side (``to_ell``) because W is data-dependent; the arrays
+    are an ordinary pytree, so the operator passes straight into jitted
+    code (retracing only when W changes). Skewed rows inflate W toward N
+    — ELL is the right layout for the quasi-uniform document-term
+    sparsity the benchmarks model, not for power-law adjacency.
+    """
+
+    row_vals: jax.Array    # (M, W)  values, 0-padded
+    row_cols: jax.Array    # (M, W)  column of each value, 0-padded
+    col_vals: jax.Array    # (N, Wt) transpose orientation
+    col_rows: jax.Array    # (N, Wt)
+
+    # shape is derived, not a field: NamedTuple fields are pytree leaves,
+    # and a (m, n) int tuple would turn into tracers under jit.
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.row_vals.shape[0], self.col_vals.shape[0]
+
+    @property
+    def dtype(self):
+        return self.row_vals.dtype
+
+
+def is_ell(a) -> bool:
+    return isinstance(a, EllOperator)
+
+
+def _ell_side(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              m: int) -> tuple[np.ndarray, np.ndarray]:
+    counts = np.bincount(rows, minlength=m)
+    width = max(int(counts.max()) if counts.size else 0, 1)
+    order = np.argsort(rows, kind="stable")
+    r_sorted = rows[order]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(len(rows)) - starts[r_sorted]
+    ell_vals = np.zeros((m, width), np.float32)
+    ell_idx = np.zeros((m, width), np.int32)
+    ell_vals[r_sorted, slot] = vals[order]
+    ell_idx[r_sorted, slot] = cols[order]
+    return ell_vals, ell_idx
+
+
+def to_ell(a: jsparse.BCOO) -> EllOperator:
+    """One-time host-side conversion BCOO -> dual-ELL (O(nnz))."""
+    validate_bcoo(a)
+    m, n = a.shape
+    rows = np.asarray(a.indices[:, 0])
+    cols = np.asarray(a.indices[:, 1])
+    vals = np.asarray(a.data, dtype=np.float32)
+    row_vals, row_cols = _ell_side(rows, cols, vals, m)
+    col_vals, col_rows = _ell_side(cols, rows, vals, n)
+    return EllOperator(
+        row_vals=jnp.asarray(row_vals), row_cols=jnp.asarray(row_cols),
+        col_vals=jnp.asarray(col_vals), col_rows=jnp.asarray(col_rows),
+    )
+
+
+def ell_matvec(a: EllOperator, x: jax.Array) -> jax.Array:
+    """``A @ x`` — gather rows of ``x``, one fused multiply-reduce."""
+    return jnp.einsum("mw,mwr->mr", a.row_vals, x[a.row_cols])
+
+
+def ell_rmatvec(a: EllOperator, x: jax.Array) -> jax.Array:
+    """``A.T @ x`` via the precomputed transpose orientation."""
+    return jnp.einsum("nw,nwr->nr", a.col_vals, x[a.col_rows])
+
+
+def ell_abs_degree_sums(a: EllOperator) -> tuple[jax.Array, jax.Array]:
+    """Bipartite degrees — padding is exact zero, so plain row sums."""
+    return jnp.sum(jnp.abs(a.row_vals), 1), jnp.sum(jnp.abs(a.col_vals), 1)
+
+
+def ell_scale_rows_cols(a: EllOperator, s1: jax.Array,
+                        s2: jax.Array) -> EllOperator:
+    """``diag(s1) @ A @ diag(s2)`` in ELL form (both orientations)."""
+    return a._replace(
+        row_vals=a.row_vals * s1[:, None] * s2[a.row_cols],
+        col_vals=a.col_vals * s2[:, None] * s1[a.col_rows],
+    )

@@ -11,6 +11,13 @@ randomized subspace iteration — pure matmul/QR, MXU-aligned, identical trip
 count on every device. ``l = n_singular_vectors`` defaults to
 ``ceil(log2(k)) + 1`` per Dhillon's analysis but is configurable.
 
+Sparse inputs (DESIGN.md §9): ``normalize_bipartite``, ``randomized_svd``
+and ``scc`` all accept a BCOO matrix. Normalization stays in BCOO (degree
+segment-sums + a data rescale, same sparsity pattern); the subspace
+iteration's heavy ops become SpMM (``A @ Omega``, ``A.T @ Q`` via
+``kernels.ops.spmm``) — cost O(nnz * rank) per pass instead of
+O(M * N * rank). Only the (M, l)/(N, l) embeddings densify.
+
 The normalization has a fused Pallas twin (``repro.kernels.bipartite_normalize``)
 used on TPU; this file is also its reference oracle.
 """
@@ -24,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import kmeans as _kmeans
+from . import sparse as _sparse
 
 __all__ = ["normalize_bipartite", "randomized_svd", "scc", "SCCResult"]
 
@@ -41,8 +49,20 @@ def normalize_bipartite(a: jax.Array, eps: float = 1e-8):
 
     Degrees are taken on |A| so the construction tolerates signed data
     (the bipartite-graph weights of Eq. 5 assume non-negative affinities).
-    Returns ``(a_n, d1_isqrt, d2_isqrt)``.
+    Returns ``(a_n, d1_isqrt, d2_isqrt)``; a BCOO input yields a BCOO
+    ``a_n`` with the same sparsity pattern (zeros contribute nothing to
+    degrees, and the rescale is elementwise on the stored data).
     """
+    if _sparse.is_bcoo(a) or _sparse.is_ell(a):
+        if _sparse.is_ell(a):
+            d1, d2 = _sparse.ell_abs_degree_sums(a)
+            scale = _sparse.ell_scale_rows_cols
+        else:
+            d1, d2 = _sparse.abs_degree_sums(a)
+            scale = _sparse.scale_rows_cols
+        d1_isqrt = jax.lax.rsqrt(jnp.maximum(d1, eps))
+        d2_isqrt = jax.lax.rsqrt(jnp.maximum(d2, eps))
+        return scale(a, d1_isqrt, d2_isqrt), d1_isqrt, d2_isqrt
     aa = jnp.abs(a)
     d1 = jnp.sum(aa, axis=1)
     d2 = jnp.sum(aa, axis=0)
@@ -85,21 +105,39 @@ def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
         to a sequential panel algorithm per block when vmapped on TPU);
       * ``"cholesky"`` — Gram-based CholeskyQR (``_cholesky_orth``):
         matmul + ``(r, r)`` Cholesky only, batch-friendly, MXU-resident.
+
+    A BCOO ``a`` routes every product through SpMM (``kernels.ops.spmm``):
+    the power iteration touches only the stored nonzeros, O(nnz * r) per
+    pass; the sketch/projection operands stay dense tall-skinny.
     """
     m, n = a.shape
     r = min(rank, m, n)
     orth = _cholesky_orth if qr_method == "cholesky" else (
         lambda y: jnp.linalg.qr(y)[0])
+    if _sparse.is_ell(a):
+        # gather-only dual-ELL products — the amortized repeated-product
+        # path (converted once per matrix, see sparse.EllOperator)
+        matvec = lambda x: _sparse.ell_matvec(a, x)
+        rmatvec = lambda x: _sparse.ell_rmatvec(a, x)
+    elif _sparse.is_bcoo(a):
+        from repro.kernels import ops as _kops  # lazy: kernels optional on CPU
+
+        matvec = lambda x: _kops.spmm(a, x)                  # A @ x
+        rmatvec = lambda x: _kops.spmm(a, x, transpose=True)  # A.T @ x
+    else:
+        matvec = lambda x: a @ x
+        rmatvec = lambda x: a.T @ x
     omega = jax.random.normal(key, (n, r), dtype=a.dtype)
-    y = a @ omega                                   # (M, r)
+    y = matvec(omega)                               # (M, r)
     q = orth(y)
 
     def body(_, q):
-        z = orth(a.T @ q)                           # (N, r)
-        return orth(a @ z)                          # (M, r)
+        z = orth(rmatvec(q))                        # (N, r)
+        return orth(matvec(z))                      # (M, r)
 
     q = jax.lax.fori_loop(0, n_iter, body, q)
-    b = q.T @ a                                     # (r, N)
+    sparse_in = _sparse.is_bcoo(a) or _sparse.is_ell(a)
+    b = rmatvec(q).T if sparse_in else q.T @ a      # (r, N)
     # exact SVD of the small projected matrix
     ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
     u = q @ ub
@@ -147,6 +185,10 @@ def scc(
     # and is a static python int so jit sees a fixed SVD rank.
     l = n_singular_vectors if n_singular_vectors is not None else max(k, d).bit_length()
 
+    if (_sparse.is_bcoo(a) or _sparse.is_ell(a)) and svd_method == "exact":
+        raise ValueError(
+            "svd_method='exact' (LAPACK) requires a dense matrix; the sparse "
+            "path supports svd_method='randomized' (SpMM subspace iteration)")
     a_n, d1_isqrt, d2_isqrt = normalize_bipartite(a)
     ksvd, kkm1, kkm2 = jax.random.split(key, 3)
     if svd_method == "exact":

@@ -4,12 +4,14 @@ from .synthetic import (
     classic4_proxy,
     planted_cocluster_matrix,
     rcv1_proxy,
+    to_bcoo,
 )
 from .tokens import TokenBatchSpec, synthetic_lm_batches
 
 __all__ = [
     "PlantedCoClusters",
     "planted_cocluster_matrix",
+    "to_bcoo",
     "amazon1000_proxy",
     "classic4_proxy",
     "rcv1_proxy",

@@ -23,10 +23,30 @@ import numpy as np
 __all__ = [
     "PlantedCoClusters",
     "planted_cocluster_matrix",
+    "to_bcoo",
     "amazon1000_proxy",
     "classic4_proxy",
     "rcv1_proxy",
 ]
+
+
+def to_bcoo(matrix: np.ndarray):
+    """Dense (planted) matrix -> canonical 2-D jax BCOO.
+
+    Built from ``np.nonzero`` triplets (row-major sorted, unique indices)
+    rather than ``BCOO.fromdense`` so ``nse`` is exact and no jax scan
+    runs over the dense array. The proxies are generated dense (the
+    planting model needs the full checkerboard), but downstream the
+    sparse pipeline only ever sees this BCOO.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import sparse as jsparse
+
+    mat = np.asarray(matrix)
+    r, c = np.nonzero(mat)
+    indices = jnp.asarray(np.stack([r, c], axis=1).astype(np.int32))
+    return jsparse.BCOO((jnp.asarray(mat[r, c]), indices), shape=mat.shape,
+                        indices_sorted=True, unique_indices=True)
 
 
 @dataclasses.dataclass
@@ -41,6 +61,10 @@ class PlantedCoClusters:
     @property
     def shape(self):
         return self.matrix.shape
+
+    def bcoo(self):
+        """The planted matrix as a jax BCOO (see ``to_bcoo``)."""
+        return to_bcoo(self.matrix)
 
 
 def planted_cocluster_matrix(

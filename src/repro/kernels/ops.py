@@ -26,9 +26,11 @@ from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
 from .kmeans_assign import kmeans_assign_pallas
 from .kmeans_update import kmeans_update_pallas
+from .spmm import BlockSparseMatrix, bcoo_to_block_sparse, spmm_pallas
 
 __all__ = ["kmeans_assign", "kmeans_update", "bipartite_normalize",
-           "flash_attention"]
+           "flash_attention", "spmm", "sddmm", "spmm_tiled",
+           "BlockSparseMatrix", "bcoo_to_block_sparse"]
 
 
 def _interpret() -> bool:
@@ -83,6 +85,54 @@ def kmeans_update(x: jax.Array, centroids: jax.Array,
     labels, d2, sums, counts = kmeans_update_pallas(
         xp, cp, wp, tile_p=tile_p, interpret=_interpret())
     return labels[:p], d2[:p], sums[:k, :d], counts[0, :k]
+
+
+def spmm(a, b: jax.Array, *, transpose: bool = False) -> jax.Array:
+    """SpMM against a BCOO matrix: ``A @ b`` (or ``A.T @ b``).
+
+    Jittable everywhere (``nse`` is static): element-level gather +
+    segment-sum, the formulation ``randomized_svd`` uses inside the
+    jitted sparse atom phase. On TPU, callers that own the matrix for
+    many products (the full-matrix sparse SCC baseline) should pre-tile
+    once with ``bcoo_to_block_sparse`` and use ``spmm_tiled`` — the
+    tile-level kernel keeps the contraction on the MXU instead of the
+    scatter unit.
+    """
+    rows, cols = a.indices[:, 0], a.indices[:, 1]
+    if transpose:
+        rows, cols = cols, rows
+    n_out = a.shape[1] if transpose else a.shape[0]
+    return ref.spmm_ref(a.data, rows, cols, n_out, b)
+
+
+def sddmm(x: jax.Array, y: jax.Array, indices: jax.Array) -> jax.Array:
+    """Sampled dense-dense matmul: values of ``x @ y.T`` at ``indices``.
+
+    ``indices``: (nnz, 2) row/col pairs (a BCOO's ``.indices``). Pure
+    gather-dot — no Pallas twin yet: it is not on the atom hot path
+    (needed for future sparse-residual / graph-regularized workloads),
+    and per-element dynamic gathers don't map onto TPU DMA without the
+    tile-level format ``spmm_tiled`` uses.
+    """
+    return ref.sddmm_ref(x, y, indices[:, 0], indices[:, 1])
+
+
+def spmm_tiled(a: BlockSparseMatrix, b: jax.Array,
+               bn: int = 128) -> jax.Array:
+    """Tile-level SpMM kernel: ``A @ b`` with ``A`` pre-tiled.
+
+    ``a`` comes from ``bcoo_to_block_sparse`` (one-time host prep). ``b``
+    is padded on both axes (rows to the tile grid's K, cols to ``bn``);
+    the padded rows multiply zero tiles only, and padded output is
+    sliced off.
+    """
+    m, k = a.shape
+    bm, bk = a.tile_shape
+    m_pad = ((m + bm - 1) // bm) * bm
+    bp = _pad_to(_pad_to(b.astype(jnp.float32), 0, bk), 1, bn)
+    out = spmm_pallas(a.block_rows, a.block_cols, a.blocks, bp,
+                      m_out=m_pad, bn=bn, interpret=_interpret())
+    return out[:m, :b.shape[1]]
 
 
 def bipartite_normalize(a: jax.Array, eps: float = 1e-8,

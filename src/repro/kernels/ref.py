@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["kmeans_assign_ref", "kmeans_update_ref", "bipartite_normalize_ref",
-           "attention_ref"]
+           "attention_ref", "spmm_ref", "sddmm_ref"]
 
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
@@ -51,6 +51,32 @@ def bipartite_normalize_ref(a: jax.Array, d1: jax.Array, d2: jax.Array,
     s1 = jax.lax.rsqrt(jnp.maximum(d1.astype(jnp.float32), eps))
     s2 = jax.lax.rsqrt(jnp.maximum(d2.astype(jnp.float32), eps))
     return (a.astype(jnp.float32) * s1[:, None] * s2[None, :]).astype(a.dtype)
+
+
+def spmm_ref(data: jax.Array, rows: jax.Array, cols: jax.Array,
+             n_out: int, b: jax.Array) -> jax.Array:
+    """Element-level SpMM oracle: ``out[r] += v * b[c]`` per nonzero.
+
+    ``(data, rows, cols)`` are the COO triplets of a sparse ``A`` whose
+    output axis has ``n_out`` entries; computes ``A @ b`` as a gather of
+    rhs rows followed by a segment-sum over the output axis — O(nnz * r),
+    fully jittable (``nse`` static). ``A.T @ b`` is the same call with
+    ``rows``/``cols`` swapped; the ops wrapper does that.
+    """
+    contrib = data.astype(jnp.float32)[:, None] * b.astype(jnp.float32)[cols]
+    return jax.ops.segment_sum(contrib, rows, num_segments=n_out)
+
+
+def sddmm_ref(x: jax.Array, y: jax.Array, rows: jax.Array,
+              cols: jax.Array) -> jax.Array:
+    """Sampled dense-dense matmul oracle: ``(x @ y.T)`` at sparse positions.
+
+    Returns the ``(nnz,)`` values ``sum_d x[rows, d] * y[cols, d]`` — the
+    building block for sparse residuals / graph-regularized variants;
+    gather-dot, never materializes the ``(M, N)`` product.
+    """
+    xf, yf = x.astype(jnp.float32), y.astype(jnp.float32)
+    return jnp.sum(xf[rows] * yf[cols], axis=-1)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: tiled block-sparse SpMM (DESIGN.md §9).
+
+The sparse atom phase's hot matmuls are ``A @ Omega`` / ``A.T @ Q`` with
+``A`` sparse and the other operand a tall-skinny dense sketch. A BCOO's
+per-element indices cannot drive TPU DMA, so the kernel consumes a
+*tile-level* sparse format: ``A`` is cut into a ``(M/bm, K/bk)`` grid
+and only tiles containing nonzeros are kept, as
+
+  * ``blocks``     (G, bm, bk) f32 — dense payload of each surviving tile
+  * ``block_rows`` (G,) i32        — tile-row of each payload, sorted
+  * ``block_cols`` (G,) i32        — tile-col of each payload
+
+Grid is ``(N/bn, G)`` — payloads innermost, so consecutive steps that
+share a tile-row revisit the *same* output block while it is resident in
+VMEM. ``block_rows``/``block_cols`` ride in as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``) so the index maps can route each
+payload's B-tile and out-tile before the body runs. The output block is
+zeroed exactly when the tile-row changes (or at g == 0); because the
+converter guarantees every tile-row owns at least one payload (zero
+padding tiles for empty rows), every output block is visited and
+initialized.
+
+Compute per grid step is one ``(bm, bk) @ (bk, bn)`` MXU contraction —
+identical to a dense matmul kernel's inner step; the win is skipping the
+empty tiles entirely: FLOPs and HBM traffic scale with the *tile-level*
+occupancy instead of ``M*K``.
+
+Like every kernel here it runs under ``interpret=True`` off-TPU; the
+semantics oracle is ``ref.spmm_ref`` (element-level segment-sum).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["BlockSparseMatrix", "bcoo_to_block_sparse", "spmm_pallas"]
+
+
+class BlockSparseMatrix(NamedTuple):
+    """Tile-level sparse operand for ``spmm_pallas`` (host-prepared)."""
+
+    blocks: jax.Array        # (G, bm, bk) dense tile payloads
+    block_rows: jax.Array    # (G,) i32 tile-row ids, sorted ascending
+    block_cols: jax.Array    # (G,) i32 tile-col ids
+    shape: tuple[int, int]   # logical (M, K) — unpadded
+
+    @property
+    def tile_shape(self) -> tuple[int, int]:
+        return self.blocks.shape[1], self.blocks.shape[2]
+
+
+def bcoo_to_block_sparse(a, bm: int = 128, bk: int = 128) -> BlockSparseMatrix:
+    """Tile a BCOO matrix, keeping only tiles with nonzeros (host-side).
+
+    One-time O(nnz) preprocessing per matrix — done *outside* jit because
+    the surviving-tile count is data-dependent. Empty tile-rows get one
+    zero payload (tile-col 0) so the kernel initializes every output
+    block. Rows are padded up to a ``bm`` multiple, cols to ``bk``.
+    """
+    m, k = a.shape
+    rows = np.asarray(a.indices[:, 0]).astype(np.int64)
+    cols = np.asarray(a.indices[:, 1]).astype(np.int64)
+    vals = np.asarray(a.data, dtype=np.float32)
+    n_tr, n_tc = -(-m // bm), -(-k // bk)
+    # linearized tile ids; seed every tile-row with (row, col 0) so each
+    # output block gets initialized even when the row is empty
+    tile_of_nnz = (rows // bm) * n_tc + cols // bk
+    tile_ids = np.union1d(tile_of_nnz, np.arange(n_tr, dtype=np.int64) * n_tc)
+    g_of = np.searchsorted(tile_ids, tile_of_nnz)
+    blocks = np.zeros((len(tile_ids), bm, bk), np.float32)
+    blocks[g_of, rows % bm, cols % bk] = vals
+    return BlockSparseMatrix(
+        blocks=jnp.asarray(blocks),
+        block_rows=jnp.asarray(tile_ids // n_tc, jnp.int32),
+        block_cols=jnp.asarray(tile_ids % n_tc, jnp.int32),
+        shape=(m, k),
+    )
+
+
+def _kernel(rows_ref, cols_ref, blk_ref, b_ref, out_ref):
+    g = pl.program_id(1)
+    # New tile-row (payloads are row-sorted) -> fresh output block.
+    first = jnp.logical_or(g == 0,
+                           rows_ref[g] != rows_ref[jnp.maximum(g - 1, 0)])
+
+    @pl.when(first)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot(
+        blk_ref[0], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_out", "bn", "interpret"))
+def spmm_pallas(
+    block_rows: jax.Array,   # (G,) i32, sorted
+    block_cols: jax.Array,   # (G,) i32
+    blocks: jax.Array,       # (G, bm, bk) f32
+    b: jax.Array,            # (K_padded, N_padded) dense rhs
+    m_out: int,              # padded output rows (n_tile_rows * bm)
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw kernel invocation: ``out (m_out, N) = A_blocksparse @ b``.
+
+    Use ``repro.kernels.ops.spmm_tiled`` for the shape-safe wrapper
+    (padding, unpadding, backend dispatch).
+    """
+    g_total, bm, bk = blocks.shape
+    _, n = b.shape
+    grid = (n // bn, g_total)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda j, g, rows, cols: (g, 0, 0)),
+            pl.BlockSpec((bk, bn), lambda j, g, rows, cols: (cols[g], j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, g, rows, cols: (rows[g], j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_out, n), jnp.float32),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, b)

@@ -46,16 +46,69 @@ _SCRIPT = textwrap.dedent(
 )
 
 
-@pytest.mark.slow
-def test_distributed_lamc_8dev():
+_SCRIPT_SMALL_AND_SPARSE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import LAMCConfig
+    from repro.core.distributed import distributed_lamc
+    from repro.core.partition import PartitionPlan
+    from repro.data import planted_cocluster_matrix, to_bcoo
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    # 1. small matrix: n_rows (48) < signature_dim (64). anchor_indices
+    # clamps the anchor set per axis, so the merge phase must reshape
+    # signatures with the *effective* per-axis q — this crashed before.
+    data = planted_cocluster_matrix(rng, 48, 400, k=3, d=3, signal=4.0, noise=0.4)
+    a = jnp.asarray(data.matrix)
+    plan = PartitionPlan(48, 400, m=4, n=2, phi=12, psi=200, t_p=2, seed=0)
+    cfg = LAMCConfig(n_row_clusters=3, n_col_clusters=3)
+    out = distributed_lamc(mesh, a, cfg, plan)
+    assert out.row_labels.shape == (48,)
+
+    # 2. bcoo input: distributed sparse path must match distributed dense
+    # labels exactly (same blocks, same anchor slivers, same seeds).
+    data2 = planted_cocluster_matrix(rng, 480, 400, k=4, d=4,
+                                     signal=4.0, noise=0.5, density=0.2)
+    a2 = jnp.asarray(data2.matrix)
+    plan2 = PartitionPlan(480, 400, m=4, n=2, phi=120, psi=200, t_p=2, seed=0)
+    out_d = distributed_lamc(mesh, a2, LAMCConfig(n_row_clusters=4, n_col_clusters=4), plan2)
+    out_s = distributed_lamc(mesh, to_bcoo(data2.matrix),
+                             LAMCConfig(n_row_clusters=4, n_col_clusters=4,
+                                        input_format="bcoo"), plan2)
+    assert np.array_equal(np.array(out_d.row_labels), np.array(out_s.row_labels))
+    assert np.array_equal(np.array(out_d.col_labels), np.array(out_s.col_labels))
+    print("DISTRIBUTED_SMALL_SPARSE_OK")
+    """
+)
+
+
+def _run_subprocess_script(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env.pop("XLA_FLAGS", None)
-    res = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
+    return subprocess.run(
+        [sys.executable, "-c", script],
         capture_output=True, text=True, timeout=900,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         env=env,
     )
+
+
+@pytest.mark.slow
+def test_distributed_lamc_8dev():
+    res = _run_subprocess_script(_SCRIPT)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "DISTRIBUTED_OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_distributed_small_matrix_and_bcoo_8dev():
+    """Regressions: signature_dim > axis length (per-axis q), bcoo parity."""
+    res = _run_subprocess_script(_SCRIPT_SMALL_AND_SPARSE)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "DISTRIBUTED_SMALL_SPARSE_OK" in res.stdout

@@ -99,6 +99,16 @@ class TestCoverage:
         p5 = partition.PartitionPlan(100, 90, 3, 3, 33, 30, t_p=5)
         assert partition.coverage_probability(p5) > partition.coverage_probability(p1)
 
+    def test_col_coverage_bounds_the_default(self):
+        # rows fully covered but cols drop 12 of 96 per resample: the
+        # default (min over axes) must report the col-side risk, which the
+        # old row-only formula hid entirely.
+        plan = partition.PartitionPlan(90, 96, 3, 4, 30, 21, t_p=2)
+        assert partition.coverage_probability(plan, axis="row") == 1.0
+        col = partition.coverage_probability(plan, axis="col")
+        assert col == pytest.approx(1.0 - (12 / 96) ** 2)
+        assert partition.coverage_probability(plan) == pytest.approx(col)
+
 
 class TestMakePlan:
     def test_make_plan_smoke(self):
