@@ -1,0 +1,72 @@
+"""Streaming subsystem benchmarks: chunked-fit throughput + assignment QPS.
+
+Two families of rows, both landing in ``BENCH_stream.json`` (see
+``run.py``):
+
+  stream_fit_chunk<r>     one full out-of-core fit of the planted matrix
+                          with ``r``-row chunks; µs per fit, derived field
+                          carries rows/s. Sweeping the chunk size exposes
+                          the fixed per-chunk cost (atom phase dispatch +
+                          fold) vs chunk-amortized work — the knee is
+                          where a deployment should size its chunks.
+  stream_assign_*         batched out-of-sample assignment against the
+                          fitted model (jitted ``assign_rows``/``assign_
+                          cols``); µs per batch, derived carries QPS
+                          (vectors assigned per second).
+
+CPU numbers are architecture proxies (the Pallas scoring kernel executes
+in interpret mode off-TPU); the per-PR trajectory is the signal, as with
+the other sections.
+"""
+
+from __future__ import annotations
+
+import time
+
+CHUNK_SIZES = (128, 256, 512)
+
+
+def run(report, *, quick: bool = False) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import streaming
+    from repro.core.metrics import nmi
+    from repro.data import planted_cocluster_matrix
+
+    m, n, k = (1024, 512, 5) if quick else (4096, 1024, 8)
+    rng = np.random.default_rng(0)
+    data = planted_cocluster_matrix(rng, m, n, k=k, d=k, signal=4.0, noise=0.6)
+    cfg = streaming.StreamConfig(n_row_clusters=k, n_col_clusters=k, seed=0)
+
+    model = None
+    for chunk_rows in CHUNK_SIZES:
+        if chunk_rows > m:
+            continue
+        # first fit warms the per-chunk-shape jit caches; the second is the
+        # steady-state throughput number a long-running ingester would see
+        streaming.fit(streaming.iter_row_chunks(data.matrix, chunk_rows), cfg)
+        t0 = time.perf_counter()
+        model, stats = streaming.fit(
+            streaming.iter_row_chunks(data.matrix, chunk_rows), cfg)
+        dt = time.perf_counter() - t0
+        quality = nmi(np.asarray(model.row_labels), data.row_labels)
+        report(f"stream_fit_chunk{chunk_rows},{dt * 1e6:.0f},"
+               f"rows_per_s={stats.rows_per_s:.0f};row_nmi={quality:.3f}")
+
+    # assignment QPS against the last fitted model
+    batch = 256
+    reqs = jnp.asarray(rng.normal(size=(batch, n)).astype(np.float32))
+    creqs = jnp.asarray(rng.normal(size=(batch, m)).astype(np.float32))
+    row_step = jax.jit(lambda x: streaming.assign_rows(model, x))
+    col_step = jax.jit(lambda y: streaming.assign_cols(model, y))
+    for name, fn, x in (("stream_assign_rows", row_step, reqs),
+                        ("stream_assign_cols", col_step, creqs)):
+        jax.block_until_ready(fn(x))
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(fn(x))
+        us = (time.perf_counter() - t0) / reps * 1e6
+        report(f"{name},{us:.0f},qps={batch / (us / 1e6):.0f}")

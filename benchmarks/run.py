@@ -14,12 +14,15 @@ parsing stdout. Sections (described in benchmarks/README.md):
                 jnp-path wall time; TPU wall time requires hardware)
   sparse_*      BCOO atom phase vs densify-then-run baseline — these rows
                 are additionally written to ``BENCH_sparse.json``
+  stream_*      out-of-core chunked-fit throughput + assignment QPS —
+                these rows are additionally written to ``BENCH_stream.json``
+
+``--list`` prints the available section names and exits.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 
@@ -86,14 +89,24 @@ def _kernel_kmeans_fused(report):
         report(f"{name},{(time.perf_counter()-t0)/3*1e6:.0f},{backend}")
 
 
+SECTIONS = ("prob", "roofline", "kernel", "sparse", "stream", "table3",
+            "table2")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller table2/3 problem sizes")
     ap.add_argument("--only", default=None,
-                    help="run a single section: "
-                         "table2|table3|prob|roofline|kernel|sparse")
+                    help="run a single section: " + "|".join(SECTIONS))
+    ap.add_argument("--list", action="store_true",
+                    help="print available section names and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for name in SECTIONS:
+            print(name)
+        return
 
     rows: dict[str, float] = {}
 
@@ -108,8 +121,10 @@ def main(argv=None) -> None:
             except ValueError:
                 pass
 
-    sections = (args.only.split(",") if args.only
-                else ["prob", "roofline", "kernel", "sparse", "table3", "table2"])
+    sections = args.only.split(",") if args.only else list(SECTIONS)
+    unknown = [s for s in sections if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; available: {', '.join(SECTIONS)}")
 
     if "prob" in sections:
         from benchmarks import bench_probability
@@ -122,6 +137,9 @@ def main(argv=None) -> None:
     if "sparse" in sections:
         from benchmarks import bench_sparse
         bench_sparse.run(report, quick=args.quick)
+    if "stream" in sections:
+        from benchmarks import bench_stream
+        bench_stream.run(report, quick=args.quick)
     if "table3" in sections:
         from benchmarks import bench_table3
         bench_table3.run(report, rcv1_scale=0.05 if args.quick else 0.2)
@@ -130,26 +148,23 @@ def main(argv=None) -> None:
         bench_table2.run(report)
 
     # merge into any existing file so `--only` runs refresh their section
-    # without clobbering the rest of the trajectory record; sparse rows get
-    # their own trajectory file (the dense/sparse asymmetry is tracked
-    # per-PR on its own).
+    # without clobbering the rest of the trajectory record; sparse/stream
+    # rows get their own trajectory files (those asymmetries are tracked
+    # per-PR on their own).
+    from repro.benchio import merge_rows
+
     def _merge_write(path: str, new_rows: dict) -> None:
-        merged = {}
-        try:
-            with open(path) as f:
-                merged = json.load(f)
-        except (OSError, ValueError):
-            pass
-        merged.update(new_rows)
-        with open(path, "w") as f:
-            json.dump(merged, f, indent=2, sort_keys=True)
-        print(f"wrote {path} ({len(new_rows)} new / {len(merged)} total entries)",
+        total = merge_rows(path, new_rows)
+        print(f"wrote {path} ({len(new_rows)} new / {total} total entries)",
               flush=True)
 
     sparse_rows = {k: v for k, v in rows.items() if k.startswith("sparse_")}
+    stream_rows = {k: v for k, v in rows.items() if k.startswith("stream_")}
     _merge_write("BENCH_atoms.json", rows)
     if sparse_rows:
         _merge_write("BENCH_sparse.json", sparse_rows)
+    if stream_rows:
+        _merge_write("BENCH_stream.json", stream_rows)
 
 
 if __name__ == "__main__":

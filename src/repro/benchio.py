@@ -1,0 +1,27 @@
+"""Shared BENCH_*.json writer.
+
+One read-merge-write helper for every producer of benchmark trajectory
+files (``benchmarks/run.py`` sections and ``launch/serve_lamc.py``), so
+partial runs refresh their own rows without clobbering the rest and the
+on-disk format cannot drift between writers.
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = ["merge_rows"]
+
+
+def merge_rows(path: str, new_rows: dict) -> int:
+    """Merge ``new_rows`` into the JSON dict at ``path``; returns total size."""
+    merged = {}
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        pass
+    merged.update(new_rows)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    return len(merged)

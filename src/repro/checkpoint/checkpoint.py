@@ -127,11 +127,17 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
         arr = data[name]
         if info["dtype"] == "bfloat16":
             arr = arr.view(jnp.bfloat16)
-        want_shape = tuple(leaf.shape)
+        # np.shape, not leaf.shape: ``like`` may carry Python int/float/bool
+        # leaves (config scalars inside a model NamedTuple) that have no
+        # .shape attribute — they save as 0-d arrays and round-trip back to
+        # Python scalars of the template's type.
+        want_shape = tuple(np.shape(leaf))
         if tuple(arr.shape) != want_shape:
             raise ValueError(
                 f"shape mismatch for {name}: ckpt {arr.shape} vs model {want_shape}")
-        if shard_list is not None:
+        if isinstance(leaf, (bool, int, float)) and not isinstance(leaf, np.ndarray):
+            out.append(type(leaf)(arr[()]))
+        elif shard_list is not None:
             out.append(jax.device_put(arr, shard_list[i]))
         else:
             out.append(jnp.asarray(arr))

@@ -9,7 +9,7 @@ Public API:
 """
 
 from .lamc import LAMCConfig, LAMCResult, lamc_cocluster
-from .merging import jaccard_merge_host, signature_merge
+from .merging import cluster_signatures, jaccard_merge_host, signature_merge
 from .metrics import ari, cocluster_scores, nmi
 from .nmtf import nmtf
 from .partition import (
@@ -34,6 +34,6 @@ __all__ = [
     "resample_indices", "coverage_probability",
     "detection_probability", "failure_bound", "min_resamples", "plan_partition",
     "scc", "nmtf", "normalize_bipartite", "randomized_svd",
-    "signature_merge", "jaccard_merge_host",
+    "signature_merge", "jaccard_merge_host", "cluster_signatures",
     "nmi", "ari", "cocluster_scores",
 ]

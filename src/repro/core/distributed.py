@@ -285,11 +285,24 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
             stk["col_sigs"], stk["col_counts"], stk["col_labels"], stk["col_pos"],
             kmerge,
         )
+        row_labels = jnp.argmax(row_votes, 1).astype(jnp.int32)
+        col_labels = jnp.argmax(col_votes, 1).astype(jnp.int32)
+        # serving signatures: cluster means over the anchor slivers under the
+        # final consensus labels — tiny (K x q), replicated; GSPMD emits the
+        # gathers for the sliver reads of the sharded matrix.
+        row_sliver, col_sliver = anchor_features(a, anchor_rows, anchor_cols)
+        row_sigs, row_mean, _ = merging.cluster_signatures(
+            row_sliver, row_labels, cfg.n_row_clusters)
+        col_sigs, col_mean, _ = merging.cluster_signatures(
+            col_sliver.T, col_labels, cfg.n_col_clusters)
         return dict(
-            row_labels=jnp.argmax(row_votes, 1).astype(jnp.int32),
-            col_labels=jnp.argmax(col_votes, 1).astype(jnp.int32),
+            row_labels=row_labels,
+            col_labels=col_labels,
             row_votes=row_votes,
             col_votes=col_votes,
+            row_sigs=row_sigs, col_sigs=col_sigs,
+            row_mean=row_mean, col_mean=col_mean,
+            anchor_rows=anchor_rows, anchor_cols=anchor_cols,
         )
 
     # data matrix sharded over the first two trailing mesh axes (row, col);
@@ -324,4 +337,8 @@ def distributed_lamc(mesh: Mesh, a: jax.Array, cfg: LAMCConfig,
     with mesh:
         out = step_c(a)
     return LAMCResult(out["row_labels"], out["col_labels"],
-                      out["row_votes"], out["col_votes"], plan)
+                      out["row_votes"], out["col_votes"], plan,
+                      row_sigs=out["row_sigs"], col_sigs=out["col_sigs"],
+                      row_mean=out["row_mean"], col_mean=out["col_mean"],
+                      anchor_rows=out["anchor_rows"],
+                      anchor_cols=out["anchor_cols"])

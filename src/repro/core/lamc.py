@@ -72,6 +72,15 @@ class LAMCResult(NamedTuple):
     row_votes: jax.Array
     col_votes: jax.Array
     plan: partition.PartitionPlan
+    # Serving artifact fields (merged cluster signatures in anchor space +
+    # the anchor index sets) — what ``streaming.model_from_result`` packs
+    # into a CoclusterModel. None only for results built by old callers.
+    row_sigs: jax.Array | None = None     # (K_row, q_row) unit rows
+    col_sigs: jax.Array | None = None     # (K_col, q_col)
+    row_mean: jax.Array | None = None     # (q_row,) centering mean
+    col_mean: jax.Array | None = None     # (q_col,)
+    anchor_rows: jax.Array | None = None  # (q_col,) int32 global row ids
+    anchor_cols: jax.Array | None = None  # (q_row,) int32 global col ids
 
 
 def _atom_fn(cfg: LAMCConfig):
@@ -158,6 +167,9 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
         return None, out
 
     _, stacked = jax.lax.scan(body, None, jnp.arange(plan.t_p))
+    # serving signatures are cluster means over the same anchor slivers the
+    # merge consumes — computed from the final consensus labels
+    row_sliver, col_sliver = anchor_features(a, anchor_rows, anchor_cols)
     merged = merging.signature_merge(
         kmerge,
         n_rows=plan.n_rows, n_cols=plan.n_cols,
@@ -165,9 +177,10 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
         m=plan.m, n=plan.n,
         kmeans_iters=cfg.merge_kmeans_iters,
         n_restarts=cfg.merge_restarts,
+        row_features=row_sliver, col_features=col_sliver.T,
         **stacked,
     )
-    return merged
+    return merged, anchor_rows, anchor_cols
 
 
 def lamc_cocluster(a, cfg: LAMCConfig,
@@ -204,6 +217,9 @@ def lamc_cocluster(a, cfg: LAMCConfig,
             svd_method=cfg.svd_method,
             density=density,
         )
-    merged = _lamc_jit(a, cfg, plan)
+    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan)
     return LAMCResult(merged.row_labels, merged.col_labels,
-                      merged.row_votes, merged.col_votes, plan)
+                      merged.row_votes, merged.col_votes, plan,
+                      row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,
+                      row_mean=merged.row_mean, col_mean=merged.col_mean,
+                      anchor_rows=anchor_rows, anchor_cols=anchor_cols)

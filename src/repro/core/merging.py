@@ -43,6 +43,7 @@ __all__ = [
     "MergeResult",
     "anchor_indices",
     "atom_signatures",
+    "cluster_signatures",
     "signature_merge",
     "jaccard_merge_host",
 ]
@@ -53,6 +54,12 @@ class MergeResult(NamedTuple):
     col_labels: jax.Array   # (N,) int32
     row_votes: jax.Array    # (M, K_row) vote counts (support/confidence)
     col_votes: jax.Array    # (N, K_col)
+    # Serving signatures (cluster_signatures over the anchor slivers) —
+    # populated when signature_merge is given the slivers; None otherwise.
+    row_sigs: jax.Array | None = None   # (K_row, q_row) unit rows
+    col_sigs: jax.Array | None = None   # (K_col, q_col)
+    row_mean: jax.Array | None = None   # (q_row,) centering mean
+    col_mean: jax.Array | None = None   # (q_col,)
 
 
 def anchor_indices(seed_key: jax.Array, length: int, q: int) -> jax.Array:
@@ -89,6 +96,33 @@ def atom_signatures(
     # unit-normalize: scale-invariant alignment across blocks
     norm = jnp.linalg.norm(sig, axis=-1, keepdims=True)
     return sig / jnp.maximum(norm, 1e-12), counts
+
+
+def cluster_signatures(
+    feats: jax.Array,        # (P, q) anchor features per point
+    labels: jax.Array,       # (P,) global cluster labels in [0, k)
+    k: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-*cluster* serving signatures ``(sigs (k, q), mean (q,), counts (k,))``.
+
+    The out-of-sample counterpart of :func:`atom_signatures`: member means
+    over the shared anchor features, centered by the **global** feature
+    mean (an out-of-sample point has no block to center against) and
+    unit-normalized. A new point is scored by the cosine between its
+    centered anchor features and these signatures (``streaming.assign``)
+    — the NEO-CC-style "score against cluster signatures instead of
+    re-running the fit". Empty clusters keep a zero signature (cosine
+    score 0: selected only if every real score is negative).
+    """
+    feats = feats.astype(jnp.float32)
+    mean = jnp.mean(feats, axis=0)                               # (q,)
+    f = feats - mean
+    onehot = jax.nn.one_hot(labels, k, dtype=f.dtype)            # (P, k)
+    sums = onehot.T @ f                                          # (k, q)
+    counts = jnp.sum(onehot, axis=0)                             # (k,)
+    sig = sums / jnp.maximum(counts[:, None], 1.0)
+    norm = jnp.linalg.norm(sig, axis=-1, keepdims=True)
+    return sig / jnp.maximum(norm, 1e-12), mean, counts
 
 
 def cluster_atoms_best(key, flat, w, k_global, n_iter, n_restarts: int = 4):
@@ -137,8 +171,17 @@ def signature_merge(
     n: int,
     kmeans_iters: int = 25,
     n_restarts: int = 4,
+    row_features: jax.Array | None = None,   # (M, q_row) anchor-col sliver
+    col_features: jax.Array | None = None,   # (N, q_col) anchor-row sliver
 ) -> MergeResult:
-    """Jittable consensus merge. See module docstring for the scheme."""
+    """Jittable consensus merge. See module docstring for the scheme.
+
+    When the anchor slivers are supplied (``row_features`` =
+    ``A[:, anchor_cols]``, ``col_features`` = ``A[anchor_rows].T``), the
+    result additionally carries the per-cluster serving signatures
+    (:func:`cluster_signatures`) so the fitted model can assign
+    out-of-sample rows/columns without the data matrix.
+    """
     kr, kc = jax.random.split(key)
     t_p, b, k, _q = row_sigs.shape
     d = col_sigs.shape[2]
@@ -173,7 +216,14 @@ def signature_merge(
     ].add(1.0)
     final_cols = jnp.argmax(col_votes, axis=1).astype(jnp.int32)
 
-    return MergeResult(final_rows, final_cols, row_votes, col_votes)
+    row_sigs = col_sigs_out = row_mean = col_mean = None
+    if row_features is not None:
+        row_sigs, row_mean, _ = cluster_signatures(row_features, final_rows, k_row)
+    if col_features is not None:
+        col_sigs_out, col_mean, _ = cluster_signatures(col_features, final_cols, k_col)
+    return MergeResult(final_rows, final_cols, row_votes, col_votes,
+                       row_sigs=row_sigs, col_sigs=col_sigs_out,
+                       row_mean=row_mean, col_mean=col_mean)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: tiled k-means assignment (distance + argmin).
+"""Pallas TPU kernels: tiled k-means assignment (distance + argmin) and
+cosine scoring (dot + argmax) against a signature table.
 
 The paper's hottest inner loop: every k-means iteration on every block
 assigns ``P`` points to ``K`` centroids. The kernel tiles points into VMEM
@@ -10,6 +11,14 @@ VMEM, and computes
 with the ``x @ c^T`` contraction on the MXU (``preferred_element_type``
 pinned to f32 so bf16 inputs accumulate in f32). Outputs are per-point
 argmin labels and min distances.
+
+``cosine_assign_pallas`` is the serving twin (online assignment of new
+rows/cols to a fitted co-clustering, DESIGN.md §10): same tiling, but the
+score is the raw dot ``x @ s^T`` against *unit-normalized* cluster
+signatures and the reduction is an argmax. For unit signatures the dot
+ordering equals the Euclidean ordering (``|x - s|^2 = |x|^2 - 2 x.s + 1``),
+so no norms are needed; padded signature rows are masked to -inf via the
+static ``k_valid`` so they can never win.
 
 VMEM budget per grid step: ``tile_p*D + K*D + tile_p*K`` floats — e.g.
 (512 x 256) + (64 x 256) + (512 x 64) ~ 0.7 MB, comfortably under the
@@ -27,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["kmeans_assign_pallas"]
+__all__ = ["kmeans_assign_pallas", "cosine_assign_pallas"]
 
 
 def _kernel(x_ref, c_ref, labels_ref, d2_ref):
@@ -74,3 +83,51 @@ def kmeans_assign_pallas(
         ],
         interpret=interpret,
     )(x, centroids)
+
+
+def _cosine_kernel(k_valid, x_ref, s_ref, labels_ref, score_ref):
+    x = x_ref[...].astype(jnp.float32)               # (TP, D)
+    s = s_ref[...].astype(jnp.float32)               # (K, D)
+    xs = jax.lax.dot_general(
+        x, s,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (TP, K) on the MXU
+    # mask padded signature rows: zero-padded rows score 0, which would
+    # beat any all-negative real row — force them unselectable instead
+    valid = jax.lax.broadcasted_iota(jnp.int32, xs.shape, 1) < k_valid
+    xs = jnp.where(valid, xs, -jnp.inf)
+    labels_ref[...] = jnp.argmax(xs, axis=-1).astype(jnp.int32)
+    score_ref[...] = jnp.max(xs, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k_valid", "tile_p", "interpret"))
+def cosine_assign_pallas(
+    x: jax.Array,           # (P, D) — P and D already padded by ops.py
+    signatures: jax.Array,  # (K, D) — K padded with zero rows
+    k_valid: int,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw kernel invocation. Use ``repro.kernels.ops.cosine_assign`` for
+    the shape-safe public wrapper (padding, CPU fallback)."""
+    p, d = x.shape
+    k, _ = signatures.shape
+    grid = (pl.cdiv(p, tile_p),)
+    return pl.pallas_call(
+        functools.partial(_cosine_kernel, k_valid),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, signatures)

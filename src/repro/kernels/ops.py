@@ -24,13 +24,13 @@ import jax.numpy as jnp
 from . import ref
 from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
-from .kmeans_assign import kmeans_assign_pallas
+from .kmeans_assign import cosine_assign_pallas, kmeans_assign_pallas
 from .kmeans_update import kmeans_update_pallas
 from .spmm import BlockSparseMatrix, bcoo_to_block_sparse, spmm_pallas
 
-__all__ = ["kmeans_assign", "kmeans_update", "bipartite_normalize",
-           "flash_attention", "spmm", "sddmm", "spmm_tiled",
-           "BlockSparseMatrix", "bcoo_to_block_sparse"]
+__all__ = ["kmeans_assign", "kmeans_update", "cosine_assign",
+           "bipartite_normalize", "flash_attention", "spmm", "sddmm",
+           "spmm_tiled", "BlockSparseMatrix", "bcoo_to_block_sparse"]
 
 
 def _interpret() -> bool:
@@ -62,6 +62,26 @@ def kmeans_assign(x: jax.Array, centroids: jax.Array,
     cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
     labels, d2 = kmeans_assign_pallas(xp, cp, tile_p=tile_p, interpret=_interpret())
     return labels[:p], d2[:p]
+
+
+def cosine_assign(x: jax.Array, signatures: jax.Array,
+                  tile_p: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Batched signature scoring: argmax of ``x @ signatures.T``.
+
+    The online-serving hot path (``streaming.assign_rows`` /
+    ``assign_cols``): score incoming vectors against the fitted model's
+    unit-normalized cluster signatures. x: (P, D); signatures: (K, D).
+    Padded signature rows are zeros and masked to -inf inside the kernel
+    (static ``k_valid``), so they can never be selected; padded points
+    are sliced off the output. Returns ``(labels (P,), score (P,))``.
+    """
+    p, d = x.shape
+    k = signatures.shape[0]
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
+    sp = _pad_to(_pad_to(signatures, 1, 128), 0, 8)
+    labels, score = cosine_assign_pallas(
+        xp, sp, k_valid=k, tile_p=tile_p, interpret=_interpret())
+    return labels[:p], score[:p]
 
 
 def kmeans_update(x: jax.Array, centroids: jax.Array,

@@ -11,8 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["kmeans_assign_ref", "kmeans_update_ref", "bipartite_normalize_ref",
-           "attention_ref", "spmm_ref", "sddmm_ref"]
+__all__ = ["kmeans_assign_ref", "kmeans_update_ref", "cosine_assign_ref",
+           "bipartite_normalize_ref", "attention_ref", "spmm_ref", "sddmm_ref"]
 
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
@@ -43,6 +43,18 @@ def kmeans_update_ref(x: jax.Array, centroids: jax.Array,
     sums = onehot.T @ x.astype(jnp.float32)                        # (K, D)
     counts = jnp.sum(onehot, axis=0)                               # (K,)
     return labels, d2, sums, counts
+
+
+def cosine_assign_ref(x: jax.Array, signatures: jax.Array):
+    """Dot-score assignment against unit signatures: (labels int32, score).
+
+    ``score[i] = max_k x[i] . signatures[k]`` — for unit-normalized
+    signature rows this orders identically to Euclidean distance
+    (``|x - s|^2 = |x|^2 - 2 x.s + 1``), so it is the serving-side scoring
+    rule of the fitted co-cluster model (DESIGN.md §10).
+    """
+    xs = x.astype(jnp.float32) @ signatures.astype(jnp.float32).T   # (P, K)
+    return jnp.argmax(xs, axis=-1).astype(jnp.int32), jnp.max(xs, axis=-1)
 
 
 def bipartite_normalize_ref(a: jax.Array, d1: jax.Array, d2: jax.Array,

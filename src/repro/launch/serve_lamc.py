@@ -1,0 +1,111 @@
+"""Online co-cluster assignment server (batched request loop).
+
+``python -m repro.launch.serve_lamc --ckpt /tmp/lamc_model --fit-demo``
+fits a small planted model out-of-core (``streaming.fit``), saves it, and
+then serves batched ``assign_rows``/``assign_cols`` requests *from the
+restored checkpoint* — proving the full fit → save → load → serve loop.
+Against an existing checkpoint, drop ``--fit-demo``.
+
+Modeled on ``launch.serve``: the assignment function is jitted once,
+warmed up, and driven by a request loop; per-batch wall-clock latencies
+are aggregated into p50/p99 and QPS (requests = rows assigned). Rows are
+merged into ``BENCH_stream.json`` (same contract as ``benchmarks/run.py``)
+so serving latency is tracked per-PR next to the chunked-fit throughput.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import streaming
+from repro.data import planted_cocluster_matrix
+
+__all__ = ["fit_demo_model", "serve", "main"]
+
+
+def fit_demo_model(ckpt_dir: str, *, n_rows: int = 1024, n_cols: int = 512,
+                   k: int = 5, chunk_rows: int = 256, seed: int = 0) -> None:
+    """Out-of-core fit on a planted matrix and save the model artifact."""
+    rng = np.random.default_rng(seed)
+    data = planted_cocluster_matrix(rng, n_rows, n_cols, k=k, d=k,
+                                    signal=4.0, noise=0.6)
+    cfg = streaming.StreamConfig(n_row_clusters=k, n_col_clusters=k, seed=seed)
+    model, stats = streaming.fit(
+        streaming.iter_row_chunks(data.matrix, chunk_rows), cfg)
+    streaming.save_model(ckpt_dir, model, extra={
+        "fit_stats": {"rows_seen": stats.rows_seen, "chunks": stats.chunks,
+                      "rows_per_s": round(stats.rows_per_s, 1)}})
+    print(f"fit-demo: {stats.rows_seen}x{stats.n_cols} in {stats.chunks} "
+          f"chunks ({stats.rows_per_s:.0f} rows/s) -> saved to {ckpt_dir}")
+
+
+def serve(ckpt_dir: str, *, batch: int = 64, requests: int = 32,
+          warmup: int = 3, axis: str = "rows", seed: int = 1) -> dict:
+    """Serve ``requests`` batches of synthetic vectors; report latency/QPS."""
+    model, meta = streaming.load_model(ckpt_dir)
+    dim = model.n_cols if axis == "rows" else model.n_rows
+    assign = streaming.assign_rows if axis == "rows" else streaming.assign_cols
+    step = jax.jit(lambda x: assign(model, x))
+
+    rng = np.random.default_rng(seed)
+    reqs = jnp.asarray(rng.normal(size=(batch, dim)).astype(np.float32))
+    for _ in range(warmup):
+        jax.block_until_ready(step(reqs))
+
+    lat_s = []
+    for i in range(requests):
+        x = reqs + jnp.float32(i)  # vary the payload; shape/program identical
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(step(x))
+        lat_s.append(time.perf_counter() - t0)
+    lat_us = np.asarray(lat_s) * 1e6
+    qps = batch * requests / max(float(np.sum(lat_s)), 1e-9)
+    return {
+        f"serve_assign_{axis}_p50_us": float(np.percentile(lat_us, 50)),
+        f"serve_assign_{axis}_p99_us": float(np.percentile(lat_us, 99)),
+        f"serve_assign_{axis}_qps": qps,
+        "_labels_sample": np.asarray(out.labels[:8]).tolist(),
+        "_model_kind": meta.get("kind"),
+        "_batch": batch,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", required=True, help="model checkpoint directory")
+    ap.add_argument("--fit-demo", action="store_true",
+                    help="fit + save a small planted model first")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--axis", choices=["rows", "cols", "both"], default="both")
+    ap.add_argument("--bench-out", default="BENCH_stream.json",
+                    help="merge latency rows into this file ('' to skip)")
+    args = ap.parse_args(argv)
+
+    if args.fit_demo:
+        fit_demo_model(args.ckpt)
+    axes = ["rows", "cols"] if args.axis == "both" else [args.axis]
+    report = {}
+    for axis in axes:
+        out = serve(args.ckpt, batch=args.batch, requests=args.requests,
+                    warmup=args.warmup, axis=axis)
+        report.update(out)
+    bench_rows = {k: round(v, 1) for k, v in report.items()
+                  if not k.startswith("_")}
+    if args.bench_out:
+        from repro.benchio import merge_rows
+
+        merge_rows(args.bench_out, bench_rows)
+    print(json.dumps({**bench_rows, "batch": args.batch,
+                      "requests": args.requests}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Streaming co-clustering subsystem (DESIGN.md §10).
+
+Turns LAMC from a one-shot batch algorithm into a fit/save/load/serve
+system:
+
+    model.py    CoclusterModel artifact + checkpoint round-trip
+    fit.py      out-of-core fit over row chunks (dense or BCOO)
+    assign.py   online out-of-sample assignment (Pallas-backed scoring)
+
+``launch/serve_lamc.py`` is the batched request-loop driver on top.
+"""
+
+from .assign import AssignResult, assign_cols, assign_rows
+from .fit import (
+    FitStats,
+    StreamConfig,
+    StreamingCocluster,
+    fit,
+    iter_row_chunks,
+    stream_config_from_lamc,
+)
+from .model import (
+    MODEL_KIND,
+    CoclusterModel,
+    ModelLoadError,
+    load_model,
+    model_from_result,
+    save_model,
+)
+
+__all__ = [
+    "CoclusterModel", "ModelLoadError", "MODEL_KIND",
+    "model_from_result", "save_model", "load_model",
+    "StreamConfig", "StreamingCocluster", "FitStats", "fit",
+    "iter_row_chunks", "stream_config_from_lamc",
+    "AssignResult", "assign_rows", "assign_cols",
+]

@@ -1,0 +1,426 @@
+"""Out-of-core streaming co-clustering fit (DESIGN.md §10).
+
+``fit(chunks, cfg)`` consumes the data matrix as a stream of **row
+chunks** (dense arrays or BCOO, each ``(r, N)``) and grows a
+:class:`~repro.streaming.model.CoclusterModel` without ever holding the
+``M x N`` matrix: peak resident data is one chunk plus model-sized state.
+
+Per chunk ``t`` (all static-shape, DESIGN.md §2 — one jit trace per chunk
+shape, keys counter-derived from ``(seed, t, block)``):
+
+  1. **Atom phase.** The chunk is cut into ``col_blocks`` column blocks
+     (``(r, psi)`` each) for each of ``chunk_resamples`` independent
+     column permutations (re-derived from ``fold_in(seed, t, resample)``
+     — the streaming analogue of the batch ``T_p``), and the atom
+     co-clusterer (SCC) runs vmapped over the block stack — the same
+     embarrassingly parallel unit as the batch pipeline, with the chunk
+     playing the role of one row-band of a resample.
+  2. **Signature fold.** Each block's atoms are reduced to anchor-column
+     signatures (``merging.atom_signatures``) with member counts and raw
+     anchor-feature sums, and those **atom summaries** — never the chunk
+     — are folded into the growing model state: ``O(B * k * q)`` floats
+     plus the ``(B, r)`` local labels per chunk. This is the hierarchy of
+     the batch merge (block -> signature local reduce) applied stream-side.
+  3. **Anchor-row reservoir.** A uniform reservoir sample (Algorithm R)
+     of ``anchor_rows`` rows is maintained with its ``(q, N)`` data
+     sliver; at finalize it is the anchor-row feature space in which
+     columns are clustered and served.
+
+``finalize()`` completes the hierarchical merge exactly as the batch
+pipeline does: one best-of-restarts signature k-means over **all** chunk
+atoms (``merging.cluster_atoms_best`` — the same global alignment the
+batch merge runs over all resample atoms), per-row votes through each
+chunk's aligned atoms, and column clustering + serving signatures in the
+reservoir sliver space. Because the global alignment sees every atom —
+not a first-chunk bootstrap — streaming consensus quality matches the
+batch merge instead of depending on the first chunk's luck.
+
+Memory audit (the O(chunk + model) claim): resident at any time are one
+chunk (``r x N``), the reservoir sliver (``anchor_rows x N``), and the
+accumulated atom summaries + local labels, which are O(atoms * q + M *
+B/r) — proportional to model/label state, never ``M x N``. ``FitStats``
+reports the measured peaks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merging as _merging
+from repro.core import sparse as _sparse
+from repro.core import spectral as _spectral
+from repro.core.lamc import LAMCConfig
+
+from .model import CoclusterModel
+
+__all__ = ["StreamConfig", "FitStats", "StreamingCocluster", "fit",
+           "iter_row_chunks", "stream_config_from_lamc"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    n_row_clusters: int
+    n_col_clusters: int
+    # block k/d: clusters the atom method looks for inside one chunk block
+    atom_row_clusters: int | None = None
+    atom_col_clusters: int | None = None
+    col_blocks: int = 4             # column blocks per chunk resample
+    chunk_resamples: int = 1        # independent column permutations per chunk
+    signature_dim: int = 64         # shared anchor columns q (row signatures)
+    anchor_rows: int = 64           # row reservoir size (column features)
+    seed: int = 0
+    svd_iters: int = 4
+    kmeans_iters: int = 16
+    merge_kmeans_iters: int = 25
+    merge_restarts: int = 4
+    assign_impl: str = "jnp"        # "jnp" | "pallas" — atom k-means hot path
+    qr_method: str = "qr"           # "qr" | "cholesky"
+
+    @property
+    def atom_k(self) -> int:
+        return self.atom_row_clusters or self.n_row_clusters
+
+    @property
+    def atom_d(self) -> int:
+        return self.atom_col_clusters or self.n_col_clusters
+
+    @property
+    def blocks_per_chunk(self) -> int:
+        return self.col_blocks * self.chunk_resamples
+
+
+def stream_config_from_lamc(cfg: LAMCConfig, **overrides) -> StreamConfig:
+    """Carry the shared knobs of a batch LAMCConfig into a StreamConfig."""
+    base = dict(
+        n_row_clusters=cfg.n_row_clusters, n_col_clusters=cfg.n_col_clusters,
+        atom_row_clusters=cfg.atom_row_clusters,
+        atom_col_clusters=cfg.atom_col_clusters,
+        signature_dim=cfg.signature_dim, seed=cfg.seed,
+        svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
+        merge_kmeans_iters=cfg.merge_kmeans_iters,
+        merge_restarts=cfg.merge_restarts, assign_impl=cfg.assign_impl,
+        qr_method=cfg.qr_method,
+    )
+    base.update(overrides)
+    return StreamConfig(**base)
+
+
+class FitStats(NamedTuple):
+    rows_seen: int
+    n_cols: int
+    chunks: int
+    fit_seconds: float
+    rows_per_s: float
+    peak_chunk_bytes: int   # largest single chunk held resident
+    state_bytes: int        # model-sized accumulator footprint at finalize
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _chunk_atoms(cfg: StreamConfig, chunk_blocks: jax.Array,
+                 feats: jax.Array, t: jax.Array):
+    """Atom phase + signature reduce for one chunk (static per (r, psi)).
+
+    ``chunk_blocks``: (blocks_per_chunk, r, psi) dense block stack;
+    ``feats``: (r, q) anchor-column features. Returns per-block row
+    labels, centered/unit atom signatures with member counts, and the
+    *raw* per-atom anchor-feature sums (for the serving signatures —
+    those are centered globally, not per block).
+    """
+    b = cfg.blocks_per_chunk
+    keys = jax.vmap(
+        lambda i: jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(cfg.seed + 1), t), i)
+    )(jnp.arange(b))
+
+    def atom(key, block):
+        res = _spectral.scc(
+            key, block, cfg.atom_k, cfg.atom_d,
+            svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
+            assign_impl=cfg.assign_impl, qr_method=cfg.qr_method)
+        return res.row_labels
+
+    row_labels = jax.vmap(atom)(keys, chunk_blocks)          # (B, r)
+    r = feats.shape[0]
+    block_feats = jnp.broadcast_to(feats[None], (b, r, feats.shape[1]))
+    sigs, counts = _merging.atom_signatures(block_feats, row_labels, cfg.atom_k)
+    onehot = jax.nn.one_hot(row_labels, cfg.atom_k, dtype=jnp.float32)
+    raw_sums = jnp.einsum("brk,rq->bkq", onehot, feats.astype(jnp.float32))
+    return row_labels, sigs, counts, raw_sums
+
+
+def _nbytes(x) -> int:
+    if _sparse.is_bcoo(x):
+        return int(x.data.size * x.data.dtype.itemsize
+                   + x.indices.size * x.indices.dtype.itemsize)
+    return int(np.asarray(x).nbytes if isinstance(x, np.ndarray)
+               else x.size * x.dtype.itemsize)
+
+
+class StreamingCocluster:
+    """Stateful out-of-core fitter: ``partial_fit`` chunks, then ``finalize``.
+
+    State is model-sized only: per-chunk atom summaries (signatures,
+    counts, anchor-feature sums — ``O(B * k * q)`` each), per-chunk local
+    labels (``(B, r)`` ints), and the ``(anchor_rows, N)`` reservoir
+    sliver. The data chunks themselves are never retained.
+    """
+
+    def __init__(self, cfg: StreamConfig):
+        self.cfg = cfg
+        self._n_cols: int | None = None
+        self._anchor_cols: jax.Array | None = None
+        self._atom_sigs: list[np.ndarray] = []       # per chunk (B*k, q)
+        self._atom_cnts: list[np.ndarray] = []       # per chunk (B*k,)
+        self._atom_sums: list[np.ndarray] = []       # per chunk (B*k, q) raw
+        self._chunk_labels: list[np.ndarray] = []    # per chunk (B, r) int32
+        self._anchor_sum: np.ndarray | None = None   # (q,)
+        self._res_rng: np.random.Generator = np.random.default_rng(cfg.seed + 13)
+        self._res_ids: np.ndarray | None = None      # (q_res,) global row ids
+        self._res_vals: np.ndarray | None = None     # (q_res, N)
+        self._res_fill = 0
+        self.rows_seen = 0
+        self.chunks = 0
+        self._t0 = time.perf_counter()
+        self._peak_chunk_bytes = 0
+
+    # ------------------------------------------------------------------ setup
+
+    def _init_state(self, n_cols: int) -> None:
+        cfg = self.cfg
+        self._n_cols = n_cols
+        kroot = jax.random.key(cfg.seed + 7)
+        _, kac, _ = jax.random.split(kroot, 3)
+        self._anchor_cols = _merging.anchor_indices(kac, n_cols, cfg.signature_dim)
+        q = int(self._anchor_cols.shape[0])
+        self._anchor_sum = np.zeros((q,), np.float32)
+        self._res_ids = np.zeros((cfg.anchor_rows,), np.int64)
+        self._res_vals = np.zeros((cfg.anchor_rows, n_cols), np.float32)
+
+    # -------------------------------------------------------------- reservoir
+
+    def _reservoir_update(self, chunk, r: int) -> None:
+        """Algorithm R over the arriving rows (uniform over the stream).
+
+        Vectorized per chunk: one RNG call draws every row's slot
+        candidate, so ingest pays no per-row Python loop. Duplicate slot
+        hits within a chunk resolve to the *last* arriving row (numpy
+        fancy assignment applies writes in index order), matching the
+        sequential formulation.
+        """
+        cap = self.cfg.anchor_rows
+        gids = self.rows_seen + np.arange(r, dtype=np.int64)
+        n_fill = min(max(cap - self._res_fill, 0), r)
+        fill_slots = np.arange(self._res_fill, self._res_fill + n_fill)
+        j = self._res_rng.integers(0, gids[n_fill:] + 1)        # (r - n_fill,)
+        keep = j < cap
+        rows = np.concatenate([np.arange(n_fill), n_fill + np.nonzero(keep)[0]])
+        slots = np.concatenate([fill_slots, j[keep]])
+        self._res_fill += n_fill
+        if rows.size == 0:
+            return
+        self._res_ids[slots] = gids[rows]
+        if _sparse.is_bcoo(chunk):
+            vals = np.asarray(_sparse.gather_rows_dense(chunk, jnp.asarray(rows)))
+        else:
+            vals = np.asarray(chunk)[rows].astype(np.float32)
+        self._res_vals[slots] = vals
+
+    # ------------------------------------------------------------------- fold
+
+    def _blocks_and_feats(self, chunk, t: int):
+        """(blocks_per_chunk, r, psi) block stack + (r, q) anchor features.
+
+        Each of the ``chunk_resamples`` local resamples cuts the chunk's
+        columns with an independent permutation (counter-derived from
+        ``(seed, t, resample)``) — the streaming analogue of the batch
+        ``T_p``: more independent atoms per row, stronger consensus.
+        """
+        cfg = self.cfg
+        n = self._n_cols
+        psi = n // cfg.col_blocks
+        key_t = jax.random.fold_in(jax.random.key(cfg.seed), t)
+        perms = [
+            jax.random.permutation(jax.random.fold_in(key_t, ri),
+                                   n)[: cfg.col_blocks * psi]
+            for ri in range(cfg.chunk_resamples)
+        ]
+        if _sparse.is_bcoo(chunk):
+            # one gather per resample: gather_cols_dense inverts the column
+            # map, so the index set must be duplicate-free — true within one
+            # permutation, not across the concatenation of several
+            sub = jnp.concatenate(
+                [_sparse.gather_cols_dense(chunk, p) for p in perms], axis=1)
+            feats = _sparse.gather_cols_dense(chunk, self._anchor_cols)
+        else:
+            dense = jnp.asarray(chunk)
+            sub = dense[:, jnp.concatenate(perms)]
+            feats = dense[:, self._anchor_cols]
+        r = sub.shape[0]
+        blocks = jnp.transpose(
+            sub.reshape(r, cfg.blocks_per_chunk, psi), (1, 0, 2))
+        return blocks, feats.astype(jnp.float32)
+
+    def partial_fit(self, chunk) -> "StreamingCocluster":
+        """Fold one ``(r, N)`` row chunk (dense or BCOO) into the model."""
+        if _sparse.is_bcoo(chunk):
+            _sparse.validate_bcoo(chunk)
+        shape = chunk.shape
+        if len(shape) != 2:
+            raise ValueError(f"chunk must be 2-D (rows, n_cols), got {shape}")
+        if self._n_cols is None:
+            self._init_state(int(shape[1]))
+        elif int(shape[1]) != self._n_cols:
+            raise ValueError(
+                f"chunk has {shape[1]} columns, stream started with "
+                f"{self._n_cols}")
+        r = int(shape[0])
+        if r == 0:
+            return self
+        t = self.chunks
+        self._peak_chunk_bytes = max(self._peak_chunk_bytes, _nbytes(chunk))
+
+        blocks, feats = self._blocks_and_feats(chunk, t)
+        row_labels, sigs, counts, raw_sums = _chunk_atoms(
+            self.cfg, blocks, feats, jnp.int32(t))
+
+        q = sigs.shape[-1]
+        self._atom_sigs.append(np.asarray(sigs).reshape(-1, q))
+        self._atom_cnts.append(np.asarray(counts).reshape(-1))
+        self._atom_sums.append(np.asarray(raw_sums).reshape(-1, q))
+        self._chunk_labels.append(np.asarray(row_labels))
+        self._anchor_sum += np.asarray(feats, dtype=np.float32).sum(axis=0)
+
+        self._reservoir_update(chunk, r)
+        self.rows_seen += r
+        self.chunks += 1
+        return self
+
+    # --------------------------------------------------------------- finalize
+
+    def finalize(self) -> tuple[CoclusterModel, FitStats]:
+        if self.rows_seen == 0:
+            raise ValueError("no chunks were fit; stream was empty")
+        cfg = self.cfg
+        k_row, k_col = cfg.n_row_clusters, cfg.n_col_clusters
+        n = self._n_cols
+        k = cfg.atom_k
+        b = cfg.blocks_per_chunk
+
+        # global atom alignment: the batch merge's signature k-means over
+        # ALL chunk atoms (count-weighted, best-of-restarts) — the top of
+        # the streaming hierarchy (block -> signature -> global clusters)
+        flat_sigs = jnp.asarray(np.concatenate(self._atom_sigs, axis=0))
+        flat_cnt = jnp.asarray(np.concatenate(self._atom_cnts, axis=0))
+        kmerge = jax.random.fold_in(jax.random.key(cfg.seed + 7), 2)
+        atom_global = np.asarray(_merging.cluster_atoms_best(
+            kmerge, flat_sigs, flat_cnt, k_row,
+            cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts))
+
+        # per-row votes through each chunk's aligned atoms (numpy: chunk
+        # sizes vary, keep this off the jit cache)
+        vote_rows = []
+        for t, labels in enumerate(self._chunk_labels):
+            ag = atom_global[t * b * k:(t + 1) * b * k].reshape(b, k)
+            point_global = np.take_along_axis(ag, labels, axis=1)   # (B, r)
+            r = labels.shape[1]
+            votes = np.zeros((r, k_row), np.float32)
+            np.add.at(votes, (np.arange(r)[None, :].repeat(b, 0), point_global),
+                      1.0)
+            vote_rows.append(votes)
+        row_votes = jnp.asarray(np.concatenate(vote_rows, axis=0))
+        row_labels = jnp.argmax(row_votes, axis=1).astype(jnp.int32)
+
+        # row serving signatures: atom anchor-feature sums grouped by the
+        # atoms' global cluster, centered by the global anchor mean
+        row_mean = jnp.asarray(self._anchor_sum / self.rows_seen)
+        sums = np.concatenate(self._atom_sums, axis=0)          # (A, q)
+        cnts = np.concatenate(self._atom_cnts, axis=0)          # (A,)
+        sig_sum = np.zeros((k_row, sums.shape[1]), np.float32)
+        sig_cnt = np.zeros((k_row,), np.float32)
+        np.add.at(sig_sum, atom_global, sums)
+        np.add.at(sig_cnt, atom_global, cnts)
+        sig = (jnp.asarray(sig_sum) / jnp.maximum(
+            jnp.asarray(sig_cnt)[:, None], 1.0)) - row_mean[None, :]
+        row_sigs = sig / jnp.maximum(
+            jnp.linalg.norm(sig, axis=1, keepdims=True), 1e-12)
+
+        # columns: clustered in the reservoir-sliver feature space (the
+        # anchor-row features serving uses), centered + unit-normalized so
+        # profile *direction* decides, then the same best-of-restarts
+        # k-means as the row alignment
+        fill = max(self._res_fill, 1)
+        sliver = jnp.asarray(self._res_vals[:fill])             # (q_res, N)
+        feats_c = sliver.T                                      # (N, q_res)
+        feats_c = feats_c - jnp.mean(feats_c, axis=0, keepdims=True)
+        feats_c = feats_c / jnp.maximum(
+            jnp.linalg.norm(feats_c, axis=1, keepdims=True), 1e-12)
+        kcols = jax.random.fold_in(jax.random.key(cfg.seed + 7), 3)
+        col_labels = _merging.cluster_atoms_best(
+            kcols, feats_c, jnp.ones((n,), jnp.float32), k_col,
+            cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts)
+        col_votes = jax.nn.one_hot(col_labels, k_col, dtype=jnp.float32)
+        col_sigs, col_mean, _ = _merging.cluster_signatures(
+            sliver.T, col_labels, k_col)
+        anchor_rows = jnp.asarray(self._res_ids[:fill].astype(np.int32))
+
+        model = CoclusterModel(
+            row_labels=row_labels, col_labels=col_labels.astype(jnp.int32),
+            row_votes=row_votes, col_votes=col_votes,
+            row_sigs=row_sigs, col_sigs=col_sigs,
+            row_mean=row_mean.astype(jnp.float32),
+            col_mean=col_mean.astype(jnp.float32),
+            anchor_rows=anchor_rows,
+            anchor_cols=self._anchor_cols.astype(jnp.int32),
+        )
+        dt = time.perf_counter() - self._t0
+        state_bytes = int(
+            sum(v.nbytes for vs in (self._atom_sigs, self._atom_cnts,
+                                    self._atom_sums, self._chunk_labels)
+                for v in vs)
+            + self._res_vals.nbytes + self._anchor_sum.nbytes)
+        stats = FitStats(
+            rows_seen=self.rows_seen, n_cols=n, chunks=self.chunks,
+            fit_seconds=dt, rows_per_s=self.rows_seen / max(dt, 1e-9),
+            peak_chunk_bytes=self._peak_chunk_bytes, state_bytes=state_bytes)
+        return model, stats
+
+
+def fit(chunks: Iterable, cfg: StreamConfig) -> tuple[CoclusterModel, FitStats]:
+    """Out-of-core fit over an iterable of row chunks (dense or BCOO).
+
+    Rows are assigned global ids by arrival order. Returns
+    ``(model, stats)``; peak resident data is one chunk + the model-sized
+    accumulators (``stats`` reports both).
+    """
+    fitter = StreamingCocluster(cfg)
+    for chunk in chunks:
+        fitter.partial_fit(chunk)
+    return fitter.finalize()
+
+
+def iter_row_chunks(matrix: np.ndarray, chunk_rows: int,
+                    format: str = "dense"):
+    """Yield ``(chunk_rows, N)`` row chunks of an in-memory matrix.
+
+    Test/benchmark helper: real out-of-core callers stream chunks from
+    disk or the wire. ``format='bcoo'`` converts each chunk (only the
+    chunk — O(chunk nnz)) via ``data.synthetic.to_bcoo``.
+    """
+    if format not in ("dense", "bcoo"):
+        raise ValueError(f"format must be 'dense' or 'bcoo', got {format!r}")
+    m = matrix.shape[0]
+    for start in range(0, m, chunk_rows):
+        chunk = np.asarray(matrix[start: start + chunk_rows])
+        if format == "bcoo":
+            from repro.data.synthetic import to_bcoo
+
+            yield to_bcoo(chunk)
+        else:
+            yield jnp.asarray(chunk)

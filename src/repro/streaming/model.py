@@ -1,0 +1,168 @@
+"""Fitted co-cluster model artifact (DESIGN.md §10).
+
+A :class:`CoclusterModel` is everything the serving path needs to assign
+new rows/columns to an existing co-clustering without the data matrix:
+
+  * consensus labels + vote tables (the batch result, for training-set
+    lookups and confidence),
+  * per-cluster *serving signatures* — unit-normalized cluster means over
+    the globally shared anchor features (``merging.cluster_signatures``),
+    plus the centering means,
+  * the anchor index sets themselves (which coordinates of an incoming
+    vector to read).
+
+Every field is an array, so the model is a plain pytree and goes through
+``repro.checkpoint`` unchanged; the non-array fit context (LAMCConfig /
+PartitionPlan / provenance) rides along in the checkpoint's ``extra_meta``
+and is restored next to it. ``save_model``/``load_model`` wrap that
+round-trip; ``load_model`` fails loudly on unfitted or stale checkpoints
+(wrong kind, missing signatures) instead of serving garbage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro import checkpoint as _ckpt
+from repro.core.lamc import LAMCConfig, LAMCResult
+from repro.core.partition import PartitionPlan
+
+__all__ = ["CoclusterModel", "model_from_result", "save_model", "load_model",
+           "ModelLoadError", "MODEL_KIND"]
+
+MODEL_KIND = "cocluster_model"
+_MODEL_VERSION = 1
+
+
+class CoclusterModel(NamedTuple):
+    """Serving artifact — array leaves only (checkpoint-friendly pytree)."""
+
+    row_labels: jax.Array   # (M,) int32 consensus labels
+    col_labels: jax.Array   # (N,) int32
+    row_votes: jax.Array    # (M, K_row) f32 vote counts
+    col_votes: jax.Array    # (N, K_col)
+    row_sigs: jax.Array     # (K_row, q_row) unit-normalized cluster signatures
+    col_sigs: jax.Array     # (K_col, q_col)
+    row_mean: jax.Array     # (q_row,) centering mean of the anchor-col features
+    col_mean: jax.Array     # (q_col,)
+    anchor_rows: jax.Array  # (q_col,) int32 global row ids (features for cols)
+    anchor_cols: jax.Array  # (q_row,) int32 global col ids (features for rows)
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_labels.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.col_labels.shape[0]
+
+    @property
+    def n_row_clusters(self) -> int:
+        return self.row_sigs.shape[0]
+
+    @property
+    def n_col_clusters(self) -> int:
+        return self.col_sigs.shape[0]
+
+
+class ModelLoadError(RuntimeError):
+    """A checkpoint exists but does not contain a servable fitted model."""
+
+
+def model_from_result(result: LAMCResult) -> CoclusterModel:
+    """Pack a fitted ``LAMCResult`` into the serving artifact.
+
+    Requires the signature fields threaded through the merge (populated by
+    ``lamc_cocluster`` / ``distributed_lamc``); a result built without them
+    cannot serve out-of-sample assignment and is rejected here rather than
+    at request time.
+    """
+    missing = [f for f in ("row_sigs", "col_sigs", "row_mean", "col_mean",
+                           "anchor_rows", "anchor_cols")
+               if getattr(result, f) is None]
+    if missing:
+        raise ValueError(
+            f"LAMCResult is missing serving fields {missing}; re-fit with the "
+            "current lamc_cocluster/distributed_lamc (older results carry "
+            "labels only and cannot assign out-of-sample points)")
+    return CoclusterModel(
+        row_labels=result.row_labels, col_labels=result.col_labels,
+        row_votes=result.row_votes, col_votes=result.col_votes,
+        row_sigs=result.row_sigs, col_sigs=result.col_sigs,
+        row_mean=result.row_mean, col_mean=result.col_mean,
+        anchor_rows=result.anchor_rows, anchor_cols=result.anchor_cols,
+    )
+
+
+def save_model(ckpt_dir: str, model: CoclusterModel,
+               cfg: LAMCConfig | None = None,
+               plan: PartitionPlan | None = None,
+               step: int = 0, extra: dict | None = None) -> str:
+    """Persist the model via ``repro.checkpoint`` (atomic commit)."""
+    meta = {
+        "kind": MODEL_KIND,
+        "version": _MODEL_VERSION,
+        "config": dataclasses.asdict(cfg) if cfg is not None else None,
+        "plan": dataclasses.asdict(plan) if plan is not None else None,
+    }
+    if extra:
+        meta.update(extra)
+    return _ckpt.save(ckpt_dir, step, model, extra_meta=meta)
+
+
+def _model_template(ckpt_dir: str, step: int) -> CoclusterModel:
+    """Build the restore template from the manifest's shapes/dtypes.
+
+    The checkpoint machinery restores *into* a structure; for a model we
+    only know the NamedTuple, so shapes come from the manifest itself.
+    """
+    import json
+    import os
+
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
+        meta = json.load(f)
+    leaves = meta["leaves"]
+    # leaf names come from the checkpoint's own flattener so the template
+    # construction can never drift from the save-side naming
+    dummy = CoclusterModel(*([0] * len(CoclusterModel._fields)))
+    names, _, _ = _ckpt.checkpoint._flatten_with_names(dummy)
+    if sorted(leaves) != sorted(names):
+        raise ModelLoadError(
+            f"checkpoint at {ckpt_dir!r} step {step} has leaves "
+            f"{sorted(leaves)} — not a CoclusterModel ({sorted(names)}); "
+            "stale artifact from a different schema?")
+    vals = []
+    for name in names:
+        info = leaves[name]
+        vals.append(np.zeros(tuple(info["shape"]), dtype=np.dtype(info["dtype"])))
+    return CoclusterModel(*vals)
+
+
+def load_model(ckpt_dir: str, step: int | None = None
+               ) -> tuple[CoclusterModel, dict]:
+    """Restore ``(model, meta)`` from ``ckpt_dir``; loud failure modes.
+
+    Raises :class:`ModelLoadError` when the directory holds no committed
+    checkpoint (unfitted), or a checkpoint that is not a cocluster model
+    (stale/foreign artifact) — with a message that says what to do.
+    """
+    if step is None:
+        step = _ckpt.latest_step(ckpt_dir)
+    if step is None:
+        raise ModelLoadError(
+            f"no committed checkpoint under {ckpt_dir!r} — fit a model first "
+            "(streaming.fit or lamc_cocluster + model_from_result) and "
+            "save_model() it")
+    template = _model_template(ckpt_dir, step)
+    model, meta = _ckpt.restore(ckpt_dir, step, template)
+    meta = meta or {}
+    if meta.get("kind") != MODEL_KIND:
+        raise ModelLoadError(
+            f"checkpoint at {ckpt_dir!r} step {step} is "
+            f"kind={meta.get('kind')!r}, expected {MODEL_KIND!r} — this is "
+            "not a fitted co-cluster model (stale or foreign checkpoint)")
+    return model, meta

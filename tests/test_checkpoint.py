@@ -1,0 +1,92 @@
+"""Checkpoint round-trips for model-artifact-shaped trees.
+
+The sharded-pytree checkpointing was originally exercised only through
+the LM training stack; the CoclusterModel artifact adds trees that mix
+float arrays, *integer* arrays, and plain Python scalars (config values
+riding inside a NamedTuple). These tests pin that contract directly.
+"""
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+class _ModelTree(NamedTuple):
+    labels: jnp.ndarray
+    votes: jnp.ndarray
+    anchors: jnp.ndarray
+    n_clusters: int
+    threshold: float
+    fitted: bool
+
+
+@dataclasses.dataclass
+class _DataclassTree:
+    weights: jnp.ndarray
+    ids: jnp.ndarray
+    step: int
+
+
+def _model_tree():
+    return _ModelTree(
+        labels=jnp.arange(12, dtype=jnp.int32),
+        votes=jnp.ones((12, 3), jnp.float32) * 0.5,
+        anchors=jnp.asarray([3, 1, 4, 1, 5], jnp.int32),
+        n_clusters=3,
+        threshold=0.95,
+        fitted=True,
+    )
+
+
+class TestScalarAndIntTrees:
+    def test_namedtuple_int_arrays_and_scalars_roundtrip(self, tmp_path):
+        tree = _model_tree()
+        ckpt.save(str(tmp_path), 0, tree)
+        back, _ = ckpt.restore(str(tmp_path), 0, tree)
+        assert isinstance(back, _ModelTree)
+        np.testing.assert_array_equal(np.asarray(back.labels), np.arange(12))
+        assert back.labels.dtype == jnp.int32
+        np.testing.assert_allclose(np.asarray(back.votes), 0.5)
+        np.testing.assert_array_equal(np.asarray(back.anchors), [3, 1, 4, 1, 5])
+        # Python scalars come back as Python scalars of the template's type
+        assert back.n_clusters == 3 and isinstance(back.n_clusters, int)
+        assert back.threshold == pytest.approx(0.95)
+        assert isinstance(back.threshold, float)
+        assert back.fitted is True and isinstance(back.fitted, bool)
+
+    def test_dataclass_tree_roundtrip(self, tmp_path):
+        import jax
+
+        jax.tree_util.register_dataclass(
+            _DataclassTree,
+            data_fields=["weights", "ids", "step"], meta_fields=[])
+        tree = _DataclassTree(weights=jnp.ones((4, 2)),
+                              ids=jnp.asarray([7, 8], jnp.int32), step=42)
+        ckpt.save(str(tmp_path), 1, tree)
+        back, _ = ckpt.restore(str(tmp_path), 1, tree)
+        np.testing.assert_array_equal(np.asarray(back.ids), [7, 8])
+        assert back.step == 42
+
+    def test_extra_meta_roundtrip(self, tmp_path):
+        tree = _model_tree()
+        ckpt.save(str(tmp_path), 0, tree, extra_meta={"kind": "m", "v": 2})
+        _, meta = ckpt.restore(str(tmp_path), 0, tree)
+        assert meta == {"kind": "m", "v": 2}
+
+    def test_shape_mismatch_is_loud(self, tmp_path):
+        tree = _model_tree()
+        ckpt.save(str(tmp_path), 0, tree)
+        bad = tree._replace(labels=jnp.arange(13, dtype=jnp.int32))
+        with pytest.raises(ValueError, match="shape mismatch"):
+            ckpt.restore(str(tmp_path), 0, bad)
+
+    def test_latest_step_ignores_uncommitted(self, tmp_path):
+        tree = _model_tree()
+        ckpt.save(str(tmp_path), 3, tree)
+        (tmp_path / "step_00000009").mkdir()  # no _COMMITTED sentinel
+        assert ckpt.latest_step(str(tmp_path)) == 3

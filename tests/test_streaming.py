@@ -1,0 +1,231 @@
+"""Streaming subsystem: out-of-core fit, model artifact, online assignment.
+
+Covers the DESIGN.md §10 contracts:
+  * streaming.fit over row chunks reproduces the batch co-clustering
+    (NMI >= 0.9 at equal seeds) for dense AND BCOO chunk streams, with
+    peak resident data bounded by chunk + model;
+  * the CoclusterModel artifact round-trips through repro.checkpoint and
+    load_model fails loudly on unfitted/stale checkpoints;
+  * out-of-sample assign_rows/assign_cols agree with the fitted labels
+    and recover planted labels on held-out rows;
+  * the Pallas cosine scoring kernel matches its ref oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import streaming
+from repro.core import LAMCConfig, lamc_cocluster
+from repro.core.metrics import nmi
+from repro.core.partition import PartitionPlan
+from repro.data import planted_cocluster_matrix, to_bcoo
+
+
+@pytest.fixture(scope="module")
+def planted():
+    rng = np.random.default_rng(0)
+    return planted_cocluster_matrix(rng, 600, 500, k=5, d=5,
+                                    signal=4.0, noise=0.6)
+
+
+@pytest.fixture(scope="module")
+def batch_result(planted):
+    cfg = LAMCConfig(n_row_clusters=5, n_col_clusters=5,
+                     min_cocluster_rows=120, min_cocluster_cols=100)
+    plan = PartitionPlan(600, 500, m=2, n=2, phi=300, psi=250, t_p=3, seed=0)
+    return cfg, lamc_cocluster(jnp.asarray(planted.matrix), cfg, plan=plan)
+
+
+@pytest.fixture(scope="module")
+def stream_model(planted, batch_result):
+    cfg, _ = batch_result
+    scfg = streaming.stream_config_from_lamc(cfg, chunk_resamples=2)
+    return streaming.fit(streaming.iter_row_chunks(planted.matrix, 150), scfg)
+
+
+class TestModelArtifact:
+    def test_batch_result_carries_serving_fields(self, batch_result):
+        _, out = batch_result
+        assert out.row_sigs.shape == (5, 64)
+        assert out.col_sigs.shape == (5, 64)
+        assert out.anchor_rows.shape == (64,)
+        assert out.anchor_cols.shape == (64,)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out.row_sigs), axis=1), 1.0, atol=1e-5)
+
+    def test_model_roundtrip_through_checkpoint(self, batch_result, tmp_path):
+        cfg, out = batch_result
+        model = streaming.model_from_result(out)
+        streaming.save_model(str(tmp_path), model, cfg=cfg, plan=out.plan)
+        back, meta = streaming.load_model(str(tmp_path))
+        assert meta["kind"] == streaming.MODEL_KIND
+        assert meta["config"]["n_row_clusters"] == 5
+        assert meta["plan"]["t_p"] == 3
+        for a, b in zip(model, back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_load_model_unfitted_dir_is_loud(self, tmp_path):
+        with pytest.raises(streaming.ModelLoadError, match="fit a model first"):
+            streaming.load_model(str(tmp_path / "nope"))
+
+    def test_load_model_foreign_checkpoint_is_loud(self, tmp_path):
+        from repro import checkpoint as ckpt
+
+        ckpt.save(str(tmp_path), 0, {"weights": jnp.ones((3, 3))})
+        with pytest.raises(streaming.ModelLoadError, match="not a CoclusterModel"):
+            streaming.load_model(str(tmp_path))
+
+    def test_model_from_result_rejects_stripped_result(self, batch_result):
+        _, out = batch_result
+        stripped = out._replace(row_sigs=None)
+        with pytest.raises(ValueError, match="missing serving fields"):
+            streaming.model_from_result(stripped)
+
+
+class TestStreamingFit:
+    def test_dense_stream_matches_batch(self, planted, batch_result, stream_model):
+        _, out = batch_result
+        model, stats = stream_model
+        assert nmi(np.asarray(model.row_labels), np.asarray(out.row_labels)) >= 0.9
+        assert nmi(np.asarray(model.col_labels), np.asarray(out.col_labels)) >= 0.9
+        assert stats.rows_seen == 600 and stats.chunks == 4
+
+    def test_bcoo_stream_matches_dense_stream(self, planted, batch_result,
+                                              stream_model):
+        cfg, _ = batch_result
+        dense_model, _ = stream_model
+        scfg = streaming.stream_config_from_lamc(cfg, chunk_resamples=2)
+        model, _ = streaming.fit(
+            streaming.iter_row_chunks(planted.matrix, 150, format="bcoo"), scfg)
+        assert nmi(np.asarray(model.row_labels),
+                   np.asarray(dense_model.row_labels)) >= 0.99
+        assert nmi(np.asarray(model.col_labels),
+                   np.asarray(dense_model.col_labels)) >= 0.99
+
+    def test_memory_is_chunk_plus_model_bound(self, planted, stream_model):
+        _, stats = stream_model
+        full = planted.matrix.nbytes
+        assert stats.peak_chunk_bytes == 150 * 500 * 4   # one chunk, not M x N
+        assert stats.peak_chunk_bytes < full / 2
+        # accumulator state is model-sized: O(M*K + K*N + q*N), not O(M*N)
+        assert stats.state_bytes < full / 2
+
+    def test_deterministic_given_seed(self, planted, batch_result):
+        cfg, _ = batch_result
+        scfg = streaming.stream_config_from_lamc(cfg)
+        m1, _ = streaming.fit(streaming.iter_row_chunks(planted.matrix, 200), scfg)
+        m2, _ = streaming.fit(streaming.iter_row_chunks(planted.matrix, 200), scfg)
+        np.testing.assert_array_equal(np.asarray(m1.row_labels),
+                                      np.asarray(m2.row_labels))
+        np.testing.assert_array_equal(np.asarray(m1.col_labels),
+                                      np.asarray(m2.col_labels))
+
+    def test_mismatched_chunk_width_is_loud(self, planted, batch_result):
+        cfg, _ = batch_result
+        fitter = streaming.StreamingCocluster(
+            streaming.stream_config_from_lamc(cfg))
+        fitter.partial_fit(jnp.asarray(planted.matrix[:100]))
+        with pytest.raises(ValueError, match="columns"):
+            fitter.partial_fit(jnp.asarray(planted.matrix[:100, :250]))
+
+    def test_empty_stream_is_loud(self, batch_result):
+        cfg, _ = batch_result
+        with pytest.raises(ValueError, match="empty"):
+            streaming.fit([], streaming.stream_config_from_lamc(cfg))
+
+
+class TestOutOfSampleAssignment:
+    """Held-out rows scored against signatures must recover the clustering."""
+
+    @pytest.fixture(scope="class")
+    def heldout(self):
+        # one planted population, row-split into train + held-out
+        rng = np.random.default_rng(7)
+        data = planted_cocluster_matrix(rng, 760, 500, k=5, d=5,
+                                        signal=4.0, noise=0.6)
+        return (data.matrix[:600], data.row_labels[:600],
+                data.matrix[600:], data.row_labels[600:], data.col_labels)
+
+    @pytest.mark.parametrize("fmt", ["dense", "bcoo"])
+    def test_heldout_rows_recover_planted_labels(self, heldout, fmt):
+        train, train_truth, test, test_truth, _ = heldout
+        scfg = streaming.StreamConfig(n_row_clusters=5, n_col_clusters=5,
+                                      chunk_resamples=2, seed=0)
+        model, _ = streaming.fit(
+            streaming.iter_row_chunks(train, 150, format=fmt), scfg)
+        assert nmi(np.asarray(model.row_labels), train_truth) >= 0.9
+        res = streaming.assign_rows(model, jnp.asarray(test))
+        assert nmi(np.asarray(res.labels), test_truth) >= 0.9
+
+    def test_assignment_agrees_with_batch_fit(self, batch_result, planted):
+        _, out = batch_result
+        model = streaming.model_from_result(out)
+        a = jnp.asarray(planted.matrix)
+        rows = streaming.assign_rows(model, a)
+        cols = streaming.assign_cols(model, a.T)
+        assert nmi(np.asarray(rows.labels), np.asarray(out.row_labels)) >= 0.9
+        assert nmi(np.asarray(cols.labels), np.asarray(out.col_labels)) >= 0.9
+
+    def test_bcoo_requests(self, batch_result, planted):
+        _, out = batch_result
+        model = streaming.model_from_result(out)
+        dense = streaming.assign_rows(model, jnp.asarray(planted.matrix[:64]))
+        sparse_req = streaming.assign_rows(model, to_bcoo(planted.matrix[:64]))
+        np.testing.assert_array_equal(np.asarray(dense.labels),
+                                      np.asarray(sparse_req.labels))
+
+    def test_wrong_width_is_loud(self, batch_result, planted):
+        _, out = batch_result
+        model = streaming.model_from_result(out)
+        with pytest.raises(ValueError, match="row vectors"):
+            streaming.assign_rows(model, jnp.ones((4, 123)))
+        with pytest.raises(ValueError, match="column vectors"):
+            streaming.assign_cols(model, jnp.ones((4, 123)))
+        # BCOO requests must hit the same validation — out-of-range anchor
+        # gathers would otherwise silently read zeros
+        with pytest.raises(ValueError, match="row vectors"):
+            streaming.assign_rows(model, to_bcoo(np.ones((4, 123))))
+
+
+class TestCosineAssignKernel:
+    def test_matches_ref_oracle(self):
+        from repro.kernels import ops, ref
+
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(133, 70)).astype(np.float32))
+        s = rng.normal(size=(5, 70)).astype(np.float32)
+        s /= np.linalg.norm(s, axis=1, keepdims=True)
+        s = jnp.asarray(s)
+        labels, score = ops.cosine_assign(x, s)
+        ref_labels, ref_score = ref.cosine_assign_ref(x, s)
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_labels))
+        np.testing.assert_allclose(np.asarray(score), np.asarray(ref_score),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_padded_signature_rows_never_win(self):
+        """All-negative real scores: zero-padded rows would tie at 0 and
+        win without the k_valid mask."""
+        from repro.kernels import ops
+
+        x = -jnp.ones((9, 33), jnp.float32)
+        s = jnp.ones((3, 33), jnp.float32) / np.sqrt(33.0)  # pads K 3 -> 8
+        labels, score = ops.cosine_assign(x, s)
+        assert int(np.max(np.asarray(labels))) < 3
+        assert float(np.max(np.asarray(score))) < 0.0
+
+
+class TestServeDriver:
+    def test_fit_save_serve_loop(self, tmp_path):
+        from repro.launch import serve_lamc
+
+        ckpt_dir = str(tmp_path / "model")
+        serve_lamc.fit_demo_model(ckpt_dir, n_rows=256, n_cols=128, k=3,
+                                  chunk_rows=128)
+        out = serve_lamc.serve(ckpt_dir, batch=8, requests=4, warmup=1,
+                               axis="rows")
+        assert out["serve_assign_rows_p50_us"] > 0
+        assert out["serve_assign_rows_qps"] > 0
+        assert out["_model_kind"] == streaming.MODEL_KIND
+        assert len(out["_labels_sample"]) == 8
