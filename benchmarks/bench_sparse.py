@@ -1,26 +1,40 @@
-"""Sparse atom phase: BCOO SpMM path vs densify-then-run baseline.
+"""Sparse atom phase: routed SpMM backends vs densify-then-run baseline.
 
 The paper's headline efficiency claim covers sparse inputs ("up to 30%
 for sparse matrices"); this section measures the repo's sparse execution
 path at RCV1-like densities. For each density we time the *atom phase*
 (bipartite normalization + randomized subspace SVD — the per-block hot
-loop) two ways on the same BCOO matrix:
+loop) on the same BCOO matrix through every backend:
 
-  sparse_atom_bcoo_d*    sparse path: one dual-ELL conversion (timed, it
-                         is part of the path) + normalize + SVD with
-                         gather-only SpMM products (O(nnz * rank))
+  sparse_atom_bcoo_d*    legacy sparse path: one dual-ELL conversion per
+                         call (timed — the unamortized worst case) +
+                         normalize + SVD with gather-only SpMM products
+  sparse_atom_ell_d*     dual-ELL path with the conversion hoisted out —
+                         the LAMC single-block route, where one host
+                         conversion is amortized across every resample's
+                         ~10 subspace-iteration products
+  sparse_atom_tiled_d*   tiled block-sparse path (amortized conversion):
+                         batched tile GEMM products + the fused
+                         normal-equations pass (kernels.ops.spmm_ata)
+  sparse_atom_auto_d*    whatever probability.spmm_route picks for the
+                         density — the spmm_impl="auto" dispatch LAMC
+                         actually runs
   sparse_atom_dense_d*   densify-then-run: ``todense()`` + the dense
                          pipeline (O(M * N * rank)) — what a caller
                          without the sparse path must do
+  sparse_prep_{ell,tiled}_d*  the one-time host conversions being
+                         amortized (reported so the trade is auditable)
 
-plus raw single-product SpMM microbenches (COO segment-sum vs densify;
-a single product can't amortize the ELL conversion, so the scatter
-formulation is the honest one-shot number). Rows land in
-``BENCH_sparse.json`` (see ``run.py``); the acceptance bar is bcoo <
-dense at density <= 0.05. At 0.2 the dense path may win — gathered
-products lose to a saturated MXU/BLAS matmul once nnz approaches the
-block area; that crossover is exactly the asymmetry the density-aware
-plan cost models (``probability._atom_cost``).
+plus raw single-product micro rows: COO segment-sum vs densify (a single
+product can't amortize any conversion, so the scatter formulation is the
+honest one-shot number), the tile-level kernel, and the fused
+``Aᵀ(A·X)`` normal-equations pass vs its two-launch formulation. Rows
+land in ``BENCH_sparse.json`` (see ``run.py``). The acceptance bars:
+the routed (auto) atom beats the legacy bcoo row at density <= 0.05 and
+never loses to densify-then-run at 0.2 — the d=0.2 regression of the
+gather path is gone by construction, because past the dual-ELL
+crossover (``probability.SPMM_ELL_CROSSOVER``) the route is a
+tile/dense contraction, never a per-nonzero gather.
 """
 
 from __future__ import annotations
@@ -45,6 +59,7 @@ def run(report, *, quick: bool = False, densities=DENSITIES) -> None:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.core import probability
     from repro.core import sparse as core_sparse
     from repro.core.spectral import normalize_bipartite, randomized_svd
     from repro.data import planted_cocluster_matrix, to_bcoo
@@ -55,14 +70,14 @@ def run(report, *, quick: bool = False, densities=DENSITIES) -> None:
     key = jax.random.key(0)
 
     @jax.jit
-    def _atom_ell(ell):
-        a_n, _, _ = normalize_bipartite(ell)
+    def _atom(op):
+        a_n, _, _ = normalize_bipartite(op)
         return randomized_svd(key, a_n, rank=rank, n_iter=n_iter)
 
-    def atom_sparse(a_sp):
-        # the dual-ELL conversion is part of the sparse path and timed;
-        # it is the one-off analogue of the baseline's todense()
-        return _atom_ell(core_sparse.to_ell(a_sp))
+    def atom_bcoo_unamortized(a_sp):
+        # the legacy row: dual-ELL conversion paid on every call — the
+        # one-off analogue of the baseline's todense()
+        return _atom(core_sparse.to_ell(a_sp))
 
     @jax.jit
     def atom_densify(a_sp):
@@ -83,24 +98,55 @@ def run(report, *, quick: bool = False, densities=DENSITIES) -> None:
         data = planted_cocluster_matrix(rng, m, n, k=8, d=8,
                                         signal=5.0, noise=0.4, density=d)
         a_sp = to_bcoo(data.matrix)
-        us_sp = _time(atom_sparse, a_sp)
+        t0 = time.perf_counter()
+        ell = core_sparse.to_ell(a_sp)
+        jax.block_until_ready(ell.row_vals)
+        prep_ell = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        tiled = core_sparse.to_tiled(a_sp)
+        jax.block_until_ready(tiled.blocks)
+        prep_tiled = (time.perf_counter() - t0) * 1e6
+        route = probability.spmm_route(d, float(m) * n)
+        ops = {"dual_ell": ell, "tiled": tiled}
+
+        us_sp = _time(atom_bcoo_unamortized, a_sp)
         us_de = _time(atom_densify, a_sp)
-        report(f"sparse_atom_bcoo_d{d},{us_sp:.0f},spmm_path_nnz={a_sp.nse}")
+        us_ell = _time(_atom, ell)
+        us_tl = _time(_atom, tiled)
+        us_auto = (_time(_atom, ops[route]) if route in ops else us_de)
+        report(f"sparse_atom_bcoo_d{d},{us_sp:.0f},unamortized_nnz={a_sp.nse}")
+        report(f"sparse_atom_ell_d{d},{us_ell:.0f},amortized_dual_ell")
+        report(f"sparse_atom_tiled_d{d},{us_tl:.0f},amortized_tiled")
+        report(f"sparse_atom_auto_d{d},{us_auto:.0f},route={route}")
         report(f"sparse_atom_dense_d{d},{us_de:.0f},densify_then_run")
+        report(f"sparse_prep_ell_d{d},{prep_ell:.0f},host_once")
+        report(f"sparse_prep_tiled_d{d},{prep_tiled:.0f},host_once")
         report(f"sparse_spmm_bcoo_d{d},{_time(spmm_bcoo, a_sp, omega):.0f},"
                f"segment_sum")
         report(f"sparse_spmm_dense_d{d},{_time(spmm_densify, a_sp, omega):.0f},"
                f"densify_matmul")
 
-    # tile-level kernel: correctness-proxy timing off-TPU (interpret mode),
-    # real wall time on TPU — same caveat as kernel_kmeans_update_fused.
+    # fused normal-equations pass vs its two-launch formulation on the
+    # tiled operand of the last density (tile products; on TPU the fused
+    # kernel additionally keeps the (M, r) intermediate in VMEM)
+    fused = jax.jit(lambda t, x: kops.spmm_ata(t, x))
+    twocall = jax.jit(
+        lambda t, x: kops.spmm_tiled(t, kops.spmm_tiled(t, x), transpose=True))
+    report(f"sparse_spmm_ata_fused_d{densities[-1]},"
+           f"{_time(fused, tiled, omega):.0f},one_sweep")
+    report(f"sparse_spmm_ata_2call_d{densities[-1]},"
+           f"{_time(twocall, tiled, omega):.0f},two_launches")
+
+    # tile-level kernel micro row: the Pallas kernel on TPU, the batched
+    # tile-GEMM reference elsewhere (interpret mode only under
+    # REPRO_FORCE_INTERPRET — see kernels.ops._tiled_backend)
     data = planted_cocluster_matrix(rng, 512, 512, k=8, d=8,
                                     signal=5.0, noise=0.4, density=0.05)
     a_sp = to_bcoo(data.matrix)
     bs = kops.bcoo_to_block_sparse(a_sp, bm=128, bk=128)
     omega_s = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
     backend = ("tiled_kernel" if jax.default_backend() == "tpu"
-               else "tiled_kernel_interpret")
+               else "tiled_jnp")
     occupancy = bs.blocks.shape[0] / ((512 // 128) ** 2)
     us = _time(lambda: kops.spmm_tiled(bs, omega_s))
     report(f"sparse_spmm_tiled_512_d0.05,{us:.0f},{backend}_occ={occupancy:.2f}")

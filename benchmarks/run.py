@@ -3,19 +3,23 @@
 ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) and, at
-exit, writes ``BENCH_atoms.json`` — a machine-readable ``{name: µs/call}``
-map of every timed row, so per-PR perf trajectories can be diffed without
-parsing stdout. Sections (described in benchmarks/README.md):
+exit, writes machine-readable ``{name: µs/call}`` trajectory files so
+per-PR perf trajectories can be diffed without parsing stdout. Each file
+owns one key namespace — ``sparse_*`` rows go (only) to
+``BENCH_sparse.json``, ``stream_*``/``serve_*`` rows to
+``BENCH_stream.json``, and every other row to ``BENCH_atoms.json`` —
+and stale foreign keys are scrubbed on rewrite. Sections (described in
+benchmarks/README.md):
   table2_*      running-time reproduction (paper Table II)
   table3_*      NMI/ARI reproduction (paper Table III)
   prob_bound_*  Theorem-1 bound tightness (paper Eq. 3)
   roofline_*    per-cell roofline terms (benchmarks/README.md §Roofline)
   kernel_*      Pallas kernel micro-benches (interpret-mode correctness +
                 jnp-path wall time; TPU wall time requires hardware)
-  sparse_*      BCOO atom phase vs densify-then-run baseline — these rows
-                are additionally written to ``BENCH_sparse.json``
-  stream_*      out-of-core chunked-fit throughput + assignment QPS —
-                these rows are additionally written to ``BENCH_stream.json``
+  sparse_*      sparse atom phase: routed SpMM backends vs the
+                densify-then-run baseline (-> ``BENCH_sparse.json``)
+  stream_*      out-of-core chunked-fit throughput + assignment QPS
+                (-> ``BENCH_stream.json``)
 
 ``--list`` prints the available section names and exits.
 """
@@ -148,23 +152,33 @@ def main(argv=None) -> None:
         bench_table2.run(report)
 
     # merge into any existing file so `--only` runs refresh their section
-    # without clobbering the rest of the trajectory record; sparse/stream
-    # rows get their own trajectory files (those asymmetries are tracked
-    # per-PR on their own).
+    # without clobbering the rest of the trajectory record. Each file owns
+    # one key namespace: sparse_* -> BENCH_sparse.json, stream_*/serve_*
+    # -> BENCH_stream.json, everything else -> BENCH_atoms.json. Each
+    # section writes only its own keys to its own file, and stale foreign
+    # keys (left by older, differently-routed writers) are scrubbed on
+    # rewrite.
     from repro.benchio import merge_rows
 
-    def _merge_write(path: str, new_rows: dict) -> None:
-        total = merge_rows(path, new_rows)
+    def _merge_write(path: str, new_rows: dict, **scrub) -> None:
+        total = merge_rows(path, new_rows, **scrub)
         print(f"wrote {path} ({len(new_rows)} new / {total} total entries)",
               flush=True)
 
     sparse_rows = {k: v for k, v in rows.items() if k.startswith("sparse_")}
-    stream_rows = {k: v for k, v in rows.items() if k.startswith("stream_")}
-    _merge_write("BENCH_atoms.json", rows)
+    stream_rows = {k: v for k, v in rows.items()
+                   if k.startswith(("stream_", "serve_"))}
+    atom_rows = {k: v for k, v in rows.items()
+                 if k not in sparse_rows and k not in stream_rows}
+    if atom_rows:
+        _merge_write("BENCH_atoms.json", atom_rows,
+                     foreign_prefixes=("sparse_", "stream_", "serve_"))
     if sparse_rows:
-        _merge_write("BENCH_sparse.json", sparse_rows)
+        _merge_write("BENCH_sparse.json", sparse_rows,
+                     own_prefixes=("sparse_",))
     if stream_rows:
-        _merge_write("BENCH_stream.json", stream_rows)
+        _merge_write("BENCH_stream.json", stream_rows,
+                     own_prefixes=("stream_", "serve_"))
 
 
 if __name__ == "__main__":

@@ -4,6 +4,13 @@ One read-merge-write helper for every producer of benchmark trajectory
 files (``benchmarks/run.py`` sections and ``launch/serve_lamc.py``), so
 partial runs refresh their own rows without clobbering the rest and the
 on-disk format cannot drift between writers.
+
+Each trajectory file owns a key namespace (``BENCH_sparse.json`` owns
+``sparse_*``, ``BENCH_stream.json`` owns ``stream_*``/``serve_*``,
+``BENCH_atoms.json`` everything else). Writers declare their namespace
+via ``own_prefixes`` / ``foreign_prefixes`` and stale foreign keys —
+rows a previous, differently-routed writer left behind — are scrubbed on
+rewrite instead of accreting forever.
 """
 
 from __future__ import annotations
@@ -13,14 +20,29 @@ import json
 __all__ = ["merge_rows"]
 
 
-def merge_rows(path: str, new_rows: dict) -> int:
-    """Merge ``new_rows`` into the JSON dict at ``path``; returns total size."""
+def merge_rows(path: str, new_rows: dict,
+               own_prefixes: tuple[str, ...] | None = None,
+               foreign_prefixes: tuple[str, ...] = ()) -> int:
+    """Merge ``new_rows`` into the JSON dict at ``path``; returns total size.
+
+    ``own_prefixes``: if given, pre-existing keys *not* matching any of
+    these prefixes are dropped (the file owns exactly that namespace).
+    ``foreign_prefixes``: pre-existing keys matching any of these are
+    dropped (keys owned by *another* trajectory file). Both scrubs apply
+    only to what is already on disk — ``new_rows`` always lands as given.
+    """
     merged = {}
     try:
         with open(path) as f:
             merged = json.load(f)
     except (OSError, ValueError):
         pass
+    if own_prefixes is not None:
+        merged = {k: v for k, v in merged.items()
+                  if k.startswith(tuple(own_prefixes))}
+    if foreign_prefixes:
+        merged = {k: v for k, v in merged.items()
+                  if not k.startswith(tuple(foreign_prefixes))}
     merged.update(new_rows)
     with open(path, "w") as f:
         json.dump(merged, f, indent=2, sort_keys=True)

@@ -41,7 +41,14 @@ from .lamc import LAMCConfig, LAMCResult, _atom_fn, anchor_features
 
 
 def _validate_input_format(a, cfg: LAMCConfig) -> None:
-    """Same format guard as ``lamc_cocluster`` — fail loudly before jit."""
+    """Same format/knob guards as ``lamc_cocluster`` — fail loudly before jit.
+
+    ``cfg.spmm_impl`` is validated here too; the distributed driver always
+    densifies its (device-local, MXU-shaped) blocks, so the knob's
+    single-block sparse-operator route is the single-host driver's — a
+    multi-device mesh implies a multi-block plan.
+    """
+    _sparse.validate_spmm_impl(cfg.spmm_impl)
     if cfg.input_format == "bcoo":
         _sparse.validate_bcoo(a)
     elif _sparse.is_bcoo(a):

@@ -24,7 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import merging, nmtf, partition, spectral
+from . import merging, nmtf, partition, probability, spectral
 from . import sparse as _sparse
 
 __all__ = ["LAMCConfig", "LAMCResult", "lamc_cocluster", "run_resample",
@@ -56,6 +56,14 @@ class LAMCConfig:
     svd_method: str = "randomized"  # "randomized" (TPU-adapted) | "exact" (paper)
     qr_method: str = "qr"           # "qr" (LAPACK) | "cholesky" (Gram, batched)
     input_format: str = "dense"     # "dense" | "bcoo" — sparse execution path
+    # SpMM backend for the sparse spectral path: "auto" routes per matrix
+    # density (probability.spmm_route), or pin "dense" | "dual_ell" |
+    # "tiled". Decides how a single-block (m = n = 1) plan's full-matrix
+    # atom runs: a non-dense route keeps A in its sparse operator form
+    # (converted once, amortized across all resamples) instead of
+    # densifying the block. Multi-block plans always densify their
+    # phi x psi blocks (the MXU-shaped atom work unit, DESIGN.md §9).
+    spmm_impl: str = "auto"
 
     @property
     def atom_k(self) -> int:
@@ -117,7 +125,8 @@ def anchor_features(a, anchor_rows, anchor_cols):
     return a[:, anchor_cols], a[anchor_rows]
 
 
-def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
+def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t,
+                 operator=None):
     """One resample: extract blocks, co-cluster them (vmapped), summarize.
 
     ``anchor_rows`` / ``anchor_cols`` are the globally shared anchor index
@@ -125,15 +134,40 @@ def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
     consumed by ``merging.signature_merge``. ``a`` may be dense or BCOO
     (``cfg.input_format``); the block stack and anchor slivers the atom
     phase consumes are identical either way.
+
+    ``operator`` (single-block plans only): a prepared sparse operand of
+    the whole matrix (``sparse.prepare_operator``). The atom then runs
+    SCC directly on it — SpMM subspace iteration, O(nnz)/O(occupied
+    tiles) per product — and the ``M x N`` block is never densified. The
+    per-resample row/col permutation is skipped (with one block it only
+    reorders points *within* the block, which block membership ignores),
+    so labels can differ from the densify path by k-means seeding order.
     """
-    extract = (partition.extract_blocks_sparse if cfg.input_format == "bcoo"
-               else partition.extract_blocks)
-    blocks, row_idx, col_idx = extract(a, plan, t)
     b = plan.blocks_per_resample
-    keys = jax.vmap(
-        lambda i: jax.random.fold_in(jax.random.fold_in(jax.random.key(plan.seed + 1), t), i)
-    )(jnp.arange(b))
-    row_labels, col_labels = jax.vmap(_atom_fn(cfg))(keys, blocks)   # (B,phi),(B,psi)
+    if operator is not None:
+        assert b == 1, "operator path requires a single-block plan"
+        key_b = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(plan.seed + 1), t), 0)
+        res = spectral.scc(
+            key_b, operator, cfg.atom_k, cfg.atom_d,
+            svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
+            assign_impl=cfg.assign_impl, svd_method=cfg.svd_method,
+            qr_method=cfg.qr_method,
+        )
+        row_labels = res.row_labels[None]                  # (1, phi)
+        col_labels = res.col_labels[None]                  # (1, psi)
+        row_idx = jnp.arange(plan.n_rows, dtype=jnp.int32).reshape(
+            plan.m, plan.phi)
+        col_idx = jnp.arange(plan.n_cols, dtype=jnp.int32).reshape(
+            plan.n, plan.psi)
+    else:
+        extract = (partition.extract_blocks_sparse
+                   if cfg.input_format == "bcoo" else partition.extract_blocks)
+        blocks, row_idx, col_idx = extract(a, plan, t)
+        keys = jax.vmap(
+            lambda i: jax.random.fold_in(jax.random.fold_in(jax.random.key(plan.seed + 1), t), i)
+        )(jnp.arange(b))
+        row_labels, col_labels = jax.vmap(_atom_fn(cfg))(keys, blocks)  # (B,phi),(B,psi)
 
     # anchor features: every block's points restricted to the shared anchors
     j_of_b = jnp.arange(b) % plan.n
@@ -155,7 +189,8 @@ def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "plan"))
-def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
+def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan,
+              operator=None):
     q = cfg.signature_dim
     kproj = jax.random.key(plan.seed + 7)
     kar, kac, kmerge = jax.random.split(kproj, 3)
@@ -163,7 +198,8 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan):
     anchor_cols = merging.anchor_indices(kac, plan.n_cols, q)
 
     def body(_, t):
-        out = run_resample(a, plan, cfg, anchor_rows, anchor_cols, t)
+        out = run_resample(a, plan, cfg, anchor_rows, anchor_cols, t,
+                           operator=operator)
         return None, out
 
     _, stacked = jax.lax.scan(body, None, jnp.arange(plan.t_p))
@@ -191,8 +227,13 @@ def lamc_cocluster(a, cfg: LAMCConfig,
     ``cfg.input_format='bcoo'`` runs the sparse execution path: ``a`` must
     be a 2-D BCOO matrix, which is never densified — blocks and anchor
     slivers are scattered out of the nonzeros, and the auto-plan is priced
-    against the matrix's actual density.
+    against the matrix's actual density. ``cfg.spmm_impl`` picks the SpMM
+    backend for the spectral step (``"auto"`` routes on density; the
+    decision is surfaced on ``result.plan.spmm_route``); on a
+    single-block plan a non-dense route runs the atom straight on the
+    sparse operator — converted once, amortized across all resamples.
     """
+    _sparse.validate_spmm_impl(cfg.spmm_impl)
     if cfg.input_format == "bcoo":
         _sparse.validate_bcoo(a)
         density = _sparse.density(a)
@@ -216,8 +257,31 @@ def lamc_cocluster(a, cfg: LAMCConfig,
             grid_candidates=cfg.grid_candidates,
             svd_method=cfg.svd_method,
             density=density,
+            spmm_impl=cfg.spmm_impl,
         )
-    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan)
+    operator = None
+    if cfg.input_format == "bcoo":
+        # Only a single-block SCC plan covering the whole matrix can run
+        # on the sparse operator (a subsampling (1,1) plan — phi < M or
+        # psi < N — still needs the per-resample extraction); every other
+        # plan densifies its blocks, so its route is "dense" whatever the
+        # knob says. The shared resolver keeps this decision identical to
+        # the plan search's pricing/surfacing — what runs is what was
+        # priced.
+        single = (plan.blocks_per_resample == 1 and cfg.atom == "scc"
+                  and plan.phi == plan.n_rows and plan.psi == plan.n_cols)
+        route = probability.resolve_spmm_route(
+            cfg.spmm_impl, density, float(plan.phi) * plan.psi,
+            single=single, svd_method=cfg.svd_method)
+        if plan.spmm_route != route:
+            plan = dataclasses.replace(plan, spmm_route=route)
+        if single and route != "dense":
+            # single-block plan: the block IS the matrix — keep it sparse.
+            # One host-side conversion, reused by every resample's ~10
+            # subspace-iteration products (the amortization the tiled /
+            # dual-ELL formats are built around).
+            operator = _sparse.prepare_operator(a, route)
+    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan, operator)
     return LAMCResult(merged.row_labels, merged.col_labels,
                       merged.row_votes, merged.col_votes, plan,
                       row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,

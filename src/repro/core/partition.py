@@ -38,6 +38,10 @@ class PartitionPlan:
     t_p: int          # number of resamples
     seed: int = 0
     detection_p: float = 1.0  # Theorem-1 lower bound used to pick t_p
+    # SpMM backend the plan priced its blocks with ("dense" | "dual_ell" |
+    # "tiled") — the density-adaptive dispatch decision, surfaced for
+    # callers and tests. "dense" for dense inputs and user-built plans.
+    spmm_route: str = "dense"
 
     @property
     def blocks_per_resample(self) -> int:
@@ -70,12 +74,16 @@ def make_plan(
     grid_candidates=(1, 2, 4, 8, 16, 32),
     svd_method: str = "randomized",
     density: float = 1.0,
+    spmm_impl: str = "auto",
 ) -> PartitionPlan:
     """Optimal plan via the probabilistic model (Eq. 4 + cost search).
 
     ``density`` (nnz fraction) feeds the sparse-aware atom cost model —
-    the SpMM subspace iteration scales with nnz, not block area
-    (``probability._atom_cost``).
+    the SpMM subspace iteration scales with nnz (gather backends) or tile
+    occupancy (tiled backend), not block area (``probability._atom_cost``).
+    ``spmm_impl`` pins the backend the blocks are priced with; ``"auto"``
+    resolves per block density (``probability.spmm_route``) and the
+    decision is surfaced on ``PartitionPlan.spmm_route``.
     """
     cand = probability.plan_partition(
         n_rows,
@@ -89,6 +97,7 @@ def make_plan(
         grid_candidates=grid_candidates,
         svd_method=svd_method,
         density=density,
+        spmm_impl=spmm_impl,
     )
     return PartitionPlan(
         n_rows=n_rows,
@@ -100,6 +109,7 @@ def make_plan(
         t_p=cand.t_p,
         seed=seed,
         detection_p=cand.detection_p,
+        spmm_route=cand.spmm_route,
     )
 
 

@@ -39,6 +39,12 @@ __all__ = [
     "plan_partition",
     "mc_failure_estimate",
     "resamples_for_failures",
+    "spmm_costs",
+    "spmm_route",
+    "resolve_spmm_route",
+    "SPMM_GATHER_REL",
+    "SPMM_TILED_OVERHEAD",
+    "SPMM_ELL_CROSSOVER",
 ]
 
 
@@ -178,11 +184,115 @@ class PlanCandidate:
     t_p: int
     detection_p: float
     est_cost: float  # arbitrary units: block-work x blocks / workers
+    # SpMM backend the cost model priced this candidate's blocks with
+    # ("dense" | "dual_ell" | "tiled") — surfaced so callers/tests can
+    # assert the density-adaptive dispatch decision.
+    spmm_route: str = "dense"
+
+
+# --------------------------------------------------------------------------
+# SpMM backend cost model (DESIGN.md §9 routing policy)
+#
+# Calibrated against BENCH_sparse.json micro-benches (4096x2048, r=9, CPU):
+# a dual-ELL gather product costs ~16 ns per stored nonzero while a tiled /
+# dense tile-GEMM product costs ~1 ns per (occupied-tile) cell — per-element
+# gathers pay the scatter/gather unit, batched tile contractions pay the
+# BLAS/MXU unit. The ratio is the calibration constant below; the measured
+# atom-phase crossover (dual-ELL wins at d = 0.05, loses by d = 0.2)
+# brackets the derived parity point SPMM_ELL_CROSSOVER ~= 0.072.
+# --------------------------------------------------------------------------
+
+#: Relative cost of one gathered nonzero vs one contiguously-contracted
+#: tile cell (measured: dual-ELL products ~16 ns/nnz vs tile GEMMs ~1
+#: ns/cell on the bench machine; TPU scatter units are no cheaper).
+SPMM_GATHER_REL = 16.0
+
+#: Tile-format overhead vs one ideal dense cell at full occupancy (the
+#: tile segment-sum + payload indirection).
+SPMM_TILED_OVERHEAD = 0.15
+
+#: Dense-operand overhead per cell for the *two-sided* subspace
+#: iteration: the ``A.T @ Q`` products materialize a transposed copy of
+#: the operand, which the tiled format's per-tile transpose contraction
+#: avoids (measured atom ratio dense/tiled ~1.3 at d = 0.2).
+SPMM_DENSE_REL = 1.3
+
+#: Density above which the dual-ELL gather path loses to tile GEMMs —
+#: derived from the cost-parity condition of the two models
+#: (SPMM_GATHER_REL * d = 1 + SPMM_TILED_OVERHEAD at full occupancy,
+#: ~= 0.072), so retuning either constant moves the published crossover
+#: with the actual ``spmm_route`` decision. Sits inside the measured
+#: (0.05, 0.2) win/loss bracket from BENCH_sparse.json.
+SPMM_ELL_CROSSOVER = (1.0 + SPMM_TILED_OVERHEAD) / SPMM_GATHER_REL
+
+#: Below this cell count a block is too small for any sparse format to
+#: pay back its prep; route dense.
+_SPMM_MIN_SPARSE_CELLS = 64 * 64
+
+
+def _tile_occupancy(density: float, tile_cells: int) -> float:
+    """Expected fraction of tiles holding >= 1 nonzero (uniform sparsity)."""
+    d = max(min(density, 1.0), 0.0)
+    return 1.0 - (1.0 - d) ** tile_cells
+
+
+def spmm_costs(density: float, cells: float,
+               tile_cells: int = 128 * 128) -> dict:
+    """Per-product cost of each SpMM backend, in dense-cell units.
+
+    ``cells`` is the block area ``phi * psi``; one unit is one cell of a
+    dense matmul pass. Host-side plain float math like the rest of the
+    plan model.
+    """
+    d = max(min(density, 1.0), 0.0)
+    occ = _tile_occupancy(d, tile_cells)
+    return {
+        "dual_ell": SPMM_GATHER_REL * d * cells,
+        "tiled": (1.0 + SPMM_TILED_OVERHEAD) * occ * cells,
+        "dense": SPMM_DENSE_REL * cells,
+    }
+
+
+def resolve_spmm_route(spmm_impl: str, density: float, cells: float, *,
+                       single: bool = True,
+                       svd_method: str = "randomized") -> str:
+    """The one routing decision tree — used by the plan search for both
+    pricing and surfacing, and by the drivers for execution, so the three
+    can never drift.
+
+    ``single``: whether the candidate can actually run the sparse
+    operator (a single SCC block covering the whole matrix); everything
+    else densifies its blocks and is ``dense`` whatever the knob says,
+    as are exact-SVD atoms and (near-)dense inputs.
+    """
+    if not single or svd_method == "exact" or density >= 1.0:
+        return "dense"
+    if spmm_impl == "auto":
+        return spmm_route(density, cells)
+    return spmm_impl
+
+
+def spmm_route(density: float, cells: float = 4096 * 2048,
+               tile_cells: int = 128 * 128) -> str:
+    """Density-adaptive SpMM backend: ``dual_ell`` | ``tiled`` | ``dense``.
+
+    Picks the cheapest backend under ``spmm_costs``; sub-``64x64`` blocks
+    and (near-)dense matrices route ``dense`` outright — no sparse format
+    pays back its host prep there. This is the ``spmm_impl="auto"``
+    resolution rule used by ``lamc_cocluster`` and surfaced on
+    ``PartitionPlan.spmm_route``, and it removes the measured d = 0.2
+    regression by construction: past the dual-ELL crossover the route is
+    a tile/dense contraction, never a per-nonzero gather.
+    """
+    if cells < _SPMM_MIN_SPARSE_CELLS or density >= 0.9:
+        return "dense"
+    costs = spmm_costs(density, cells, tile_cells)
+    return min(costs, key=costs.get)
 
 
 def _atom_cost(phi: int, psi: int, rank: int, svd_iters: int, kmeans_iters: int,
                k: int, svd_method: str = "randomized",
-               density: float = 1.0) -> float:
+               density: float = 1.0, spmm_impl: str = "auto") -> float:
     """Napkin cost of spectral co-clustering one ``phi x psi`` block.
 
     ``randomized``: ``svd_iters`` passes of ``A @ Omega``-style matmuls
@@ -191,21 +301,27 @@ def _atom_cost(phi: int, psi: int, rank: int, svd_iters: int, kmeans_iters: int,
     ``exact``: LAPACK-style O(phi*psi*min(phi,psi)) — superlinear, so
     partitioning wins even serially (the paper's dense-matrix regime).
 
-    ``density < 1`` models the sparse path: the SpMM subspace iteration
-    touches only the block's expected ``density * phi * psi`` nonzeros,
-    so the SVD term scales with nnz while the k-means term (dense
-    spectral embedding) does not. This is the source of the paper's
-    dense-vs-sparse speedup asymmetry (~83% vs ~30%): on sparse data the
-    atom phase is already nnz-bound, so partitioning has less superlinear
-    (or even linear-constant) cost to shave and the planner correctly
-    expects a smaller win. ``exact`` ignores density — LAPACK SVD cannot
-    exploit sparsity.
+    ``density < 1`` prices the sparse path through the calibrated SpMM
+    backend model (``spmm_costs``): ``spmm_impl`` fixes the backend, or
+    ``"auto"`` takes the cheapest (= ``spmm_route``'s pick). Gather
+    backends scale with nnz, tile backends with occupied tiles — this
+    keeps the paper's dense-vs-sparse speedup asymmetry (~83% vs ~30%):
+    on sparse data the atom phase is already nnz-/occupancy-bound, so
+    partitioning has less superlinear cost to shave and the planner
+    correctly expects a smaller win. ``exact`` ignores density — LAPACK
+    SVD cannot exploit sparsity.
     """
     if svd_method == "exact":
         svd = float(phi) * psi * min(phi, psi)
     else:
-        nnz = max(min(density, 1.0), 1e-6) * phi * psi
-        svd = 4.0 * svd_iters * nnz * rank
+        cells = float(phi) * psi
+        d = max(min(density, 1.0), 1e-6)
+        # "auto" prices the backend spmm_route actually picks — including
+        # its small-block / near-dense guards — so est_cost and the
+        # surfaced route always describe the same backend.
+        impl = spmm_route(d, cells) if spmm_impl == "auto" else spmm_impl
+        unit = spmm_costs(d, cells)[impl]
+        svd = 4.0 * svd_iters * unit * rank
     km = 2.0 * kmeans_iters * (phi + psi) * rank * k
     return svd + km
 
@@ -229,6 +345,7 @@ def plan_partition(
     expected_failed_blocks: int = 0,
     svd_method: str = "randomized",
     density: float = 1.0,
+    spmm_impl: str = "auto",
     min_phi: int | None = None,
     min_psi: int | None = None,
 ) -> PlanCandidate:
@@ -241,7 +358,9 @@ def plan_partition(
     is total block work divided by workers, in waves of ``m*n`` blocks.
     ``density`` is the input's nnz fraction (1.0 = dense); it rescales the
     SVD term of the atom cost so sparse inputs are planned against their
-    SpMM cost (see ``_atom_cost``).
+    SpMM cost (see ``_atom_cost``). ``spmm_impl`` fixes the SpMM backend
+    the blocks are priced with (``"auto"`` = cheapest per the calibrated
+    model); the per-block route is surfaced on the returned candidate.
 
     Besides the Theorem-1 feasibility check, candidates must satisfy atom
     *resolvability*: a block needs at least ``min_phi x min_psi`` entries
@@ -290,10 +409,21 @@ def plan_partition(
                 continue  # infeasible under the bound; (1,1) always "detects"
             blocks = m * n * t_p
             waves = math.ceil(blocks / max(workers, 1))
+            # Only a single-block candidate can execute the sparse-operator
+            # route (the driver enables it when blocks_per_resample == 1);
+            # multi-block candidates densify their phi x psi blocks. One
+            # resolver produces the route, and the cost is priced with
+            # that same route, so est_cost and spmm_route always describe
+            # the same backend.
+            route = resolve_spmm_route(
+                spmm_impl, density, float(phi) * psi,
+                single=(m, n) == (1, 1), svd_method=svd_method)
             cost = waves * _atom_cost(phi, psi, rank, svd_iters, kmeans_iters, k,
-                                      svd_method=svd_method, density=density)
+                                      svd_method=svd_method, density=density,
+                                      spmm_impl=route)
             cand = PlanCandidate(m=m, n=n, phi=phi, psi=psi, t_p=t_p,
-                                 detection_p=p, est_cost=cost)
+                                 detection_p=p, est_cost=cost,
+                                 spmm_route=route)
             if best is None or cand.est_cost < best.est_cost:
                 best = cand
     assert best is not None, "grid_candidates produced no feasible plan"

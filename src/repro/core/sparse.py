@@ -43,6 +43,13 @@ __all__ = [
     "ell_rmatvec",
     "ell_abs_degree_sums",
     "ell_scale_rows_cols",
+    "is_tiled",
+    "to_tiled",
+    "tiled_abs_degree_sums",
+    "tiled_scale_rows_cols",
+    "SPMM_IMPLS",
+    "validate_spmm_impl",
+    "prepare_operator",
 ]
 
 
@@ -214,3 +221,110 @@ def ell_scale_rows_cols(a: EllOperator, s1: jax.Array,
         row_vals=a.row_vals * s1[:, None] * s2[a.row_cols],
         col_vals=a.col_vals * s2[:, None] * s1[a.col_rows],
     )
+
+
+# ---------------------------------------------------------------------------
+# Tiled block-sparse operator: MXU-resident SpMM for repeated products
+# ---------------------------------------------------------------------------
+
+
+def is_tiled(a) -> bool:
+    """True if ``a`` is a ``kernels.spmm.BlockSparseMatrix`` operand."""
+    try:
+        from repro.kernels.spmm import BlockSparseMatrix
+    except ImportError:  # kernels unavailable (minimal install)
+        return False
+    return isinstance(a, BlockSparseMatrix)
+
+
+def to_tiled(a: jsparse.BCOO, bm: int = 128, bk: int = 128):
+    """One-time host-side conversion BCOO -> tile-level block-sparse.
+
+    The counterpart of ``to_ell`` for the MXU regime: only tiles holding
+    nonzeros keep a dense payload, and every subsequent product is a
+    batched ``(bm, bk) @ (bk, r)`` contraction (``kernels.ops.spmm_tiled``
+    / the fused ``spmm_ata``) whose cost scales with *tile occupancy*
+    instead of per-element gathers. Preferred above the dual-ELL
+    crossover density (``probability.spmm_route``), where gather width
+    makes ELL products nnz-bound.
+    """
+    from repro.kernels.spmm import bcoo_to_block_sparse
+
+    validate_bcoo(a)
+    return bcoo_to_block_sparse(a, bm=bm, bk=bk)
+
+
+def _tile_pad(v: jax.Array, tiles: int, width: int) -> jax.Array:
+    """(L,) vector -> (tiles, width) grid view, zero-padded."""
+    return jnp.pad(v, (0, tiles * width - v.shape[0])).reshape(tiles, width)
+
+
+def tiled_abs_degree_sums(a) -> tuple[jax.Array, jax.Array]:
+    """Bipartite degrees of Eq. 5 from the payload tiles, O(G * bm * bk)."""
+    bm, bk = a.tile_shape
+    n_tr, n_tc = a.n_tiles
+    av = jnp.abs(a.blocks)
+    d1 = jax.ops.segment_sum(jnp.sum(av, axis=2), a.block_rows,
+                             num_segments=n_tr).reshape(n_tr * bm)
+    d2 = jax.ops.segment_sum(jnp.sum(av, axis=1), a.block_cols,
+                             num_segments=n_tc).reshape(n_tc * bk)
+    return d1[: a.shape[0]], d2[: a.shape[1]]
+
+
+def tiled_scale_rows_cols(a, s1: jax.Array, s2: jax.Array):
+    """``diag(s1) @ A @ diag(s2)`` on the payload tiles (same tiling).
+
+    Padding cells hold exact zeros, so the (arbitrary) padded scale
+    entries multiply nothing.
+    """
+    bm, bk = a.tile_shape
+    n_tr, n_tc = a.n_tiles
+    s1t = _tile_pad(s1, n_tr, bm)[a.block_rows]        # (G, bm)
+    s2t = _tile_pad(s2, n_tc, bk)[a.block_cols]        # (G, bk)
+    import repro.kernels.spmm as _spmm
+
+    return _spmm.BlockSparseMatrix(
+        blocks=a.blocks * s1t[:, :, None] * s2t[:, None, :],
+        block_rows=a.block_rows, block_cols=a.block_cols,
+        t_order=a.t_order, shape=a.shape)
+
+
+# ---------------------------------------------------------------------------
+# SpMM backend selection
+# ---------------------------------------------------------------------------
+
+#: Valid values for the ``spmm_impl`` knob threaded through LAMCConfig /
+#: StreamConfig -> scc/randomized_svd. ``auto`` resolves per matrix from
+#: its nnz density (``probability.spmm_route``).
+SPMM_IMPLS = ("auto", "dense", "dual_ell", "tiled")
+
+
+def validate_spmm_impl(impl: str) -> str:
+    """Shared guard for the ``spmm_impl`` knob — one message, every driver."""
+    if impl not in SPMM_IMPLS:
+        raise ValueError(
+            f"spmm_impl must be one of {SPMM_IMPLS}, got {impl!r}")
+    return impl
+
+
+def prepare_operator(a: jsparse.BCOO, impl: str, *, bm: int = 128,
+                     bk: int = 128):
+    """Host-side conversion of a BCOO matrix to the routed SpMM operand.
+
+    ``impl`` must be a *resolved* route (``dense`` | ``dual_ell`` |
+    ``tiled`` — resolve ``auto`` first via ``probability.spmm_route``).
+    The conversion is one-time host prep; callers amortize it across
+    every resample and subspace-iteration product that reuses the
+    operator. ``dense`` returns the densified matrix (the caller decided
+    sparsity is not worth the format).
+    """
+    validate_bcoo(a)
+    if impl == "dense":
+        return a.todense()
+    if impl == "dual_ell":
+        return to_ell(a)
+    if impl == "tiled":
+        return to_tiled(a, bm=bm, bk=bk)
+    raise ValueError(
+        f"impl must be a resolved route ('dense', 'dual_ell' or 'tiled'), "
+        f"got {impl!r}")

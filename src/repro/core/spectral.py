@@ -12,11 +12,15 @@ count on every device. ``l = n_singular_vectors`` defaults to
 ``ceil(log2(k)) + 1`` per Dhillon's analysis but is configurable.
 
 Sparse inputs (DESIGN.md §9): ``normalize_bipartite``, ``randomized_svd``
-and ``scc`` all accept a BCOO matrix. Normalization stays in BCOO (degree
-segment-sums + a data rescale, same sparsity pattern); the subspace
-iteration's heavy ops become SpMM (``A @ Omega``, ``A.T @ Q`` via
-``kernels.ops.spmm``) — cost O(nnz * rank) per pass instead of
-O(M * N * rank). Only the (M, l)/(N, l) embeddings densify.
+and ``scc`` accept a BCOO matrix, a dual-ELL operator
+(``sparse.EllOperator``, gather-only products) or a tiled block-sparse
+operator (``kernels.spmm.BlockSparseMatrix``, MXU tile products with the
+fused ``Aᵀ(A·X)`` normal-equations pass). Normalization stays in the
+operand's format (degree sums + a data rescale, same sparsity pattern);
+the subspace iteration's heavy ops become SpMM — cost O(nnz * rank) (or
+O(occupied tiles) for tiled) per pass instead of O(M * N * rank). Only
+the (M, l)/(N, l) embeddings densify. ``probability.spmm_route`` picks
+the format per matrix from its density.
 
 The normalization has a fused Pallas twin (``repro.kernels.bipartite_normalize``)
 used on TPU; this file is also its reference oracle.
@@ -53,10 +57,13 @@ def normalize_bipartite(a: jax.Array, eps: float = 1e-8):
     ``a_n`` with the same sparsity pattern (zeros contribute nothing to
     degrees, and the rescale is elementwise on the stored data).
     """
-    if _sparse.is_bcoo(a) or _sparse.is_ell(a):
+    if _sparse.is_bcoo(a) or _sparse.is_ell(a) or _sparse.is_tiled(a):
         if _sparse.is_ell(a):
             d1, d2 = _sparse.ell_abs_degree_sums(a)
             scale = _sparse.ell_scale_rows_cols
+        elif _sparse.is_tiled(a):
+            d1, d2 = _sparse.tiled_abs_degree_sums(a)
+            scale = _sparse.tiled_scale_rows_cols
         else:
             d1, d2 = _sparse.abs_degree_sums(a)
             scale = _sparse.scale_rows_cols
@@ -108,35 +115,63 @@ def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
 
     A BCOO ``a`` routes every product through SpMM (``kernels.ops.spmm``):
     the power iteration touches only the stored nonzeros, O(nnz * r) per
-    pass; the sketch/projection operands stay dense tall-skinny.
+    pass; the sketch/projection operands stay dense tall-skinny. A
+    dual-ELL operand keeps the same two-sided iteration with gather-only
+    products. A tiled ``BlockSparseMatrix`` operand runs the *fused
+    normal-equations* form instead: each power step is one
+    ``A.T @ (A @ X)`` pass (``kernels.ops.spmm_ata`` — a single kernel
+    launch whose intermediate never leaves VMEM on TPU), iterating the
+    ``(N, r)`` sketch and mapping through ``A`` once at the end. Both
+    forms apply the same polynomial of ``A``, so they converge to the
+    same subspace: ``span(A (AᵀA)^t Ω) = span((AAᵀ)^t A Ω)``.
     """
     m, n = a.shape
     r = min(rank, m, n)
     orth = _cholesky_orth if qr_method == "cholesky" else (
         lambda y: jnp.linalg.qr(y)[0])
+    sparse_in = _sparse.is_bcoo(a) or _sparse.is_ell(a) or _sparse.is_tiled(a)
     if _sparse.is_ell(a):
         # gather-only dual-ELL products — the amortized repeated-product
         # path (converted once per matrix, see sparse.EllOperator)
         matvec = lambda x: _sparse.ell_matvec(a, x)
         rmatvec = lambda x: _sparse.ell_rmatvec(a, x)
-    elif _sparse.is_bcoo(a):
+        ata = None
+    elif _sparse.is_tiled(a):
         from repro.kernels import ops as _kops  # lazy: kernels optional on CPU
+
+        matvec = lambda x: _kops.spmm_tiled(a, x)
+        rmatvec = lambda x: _kops.spmm_tiled(a, x, transpose=True)
+        ata = lambda x: _kops.spmm_ata(a, x)
+    elif _sparse.is_bcoo(a):
+        from repro.kernels import ops as _kops
 
         matvec = lambda x: _kops.spmm(a, x)                  # A @ x
         rmatvec = lambda x: _kops.spmm(a, x, transpose=True)  # A.T @ x
+        ata = None
     else:
         matvec = lambda x: a @ x
         rmatvec = lambda x: a.T @ x
-    omega = jax.random.normal(key, (n, r), dtype=a.dtype)
-    y = matvec(omega)                               # (M, r)
-    q = orth(y)
+        ata = None
+    omega = jax.random.normal(key, (n, r), dtype=jnp.float32 if sparse_in
+                              else a.dtype)
+    if sparse_in:
+        # Orthonormalize the sketch before the first product. Same span, and
+        # the QR custom call forces the RNG output to materialize: without
+        # it XLA fuses the threefry generator into the SpMM gather and
+        # recomputes it per gathered element (measured ~7x slower on CPU).
+        omega = orth(omega)
+    if ata is not None:
+        # fused normal-equations power iteration on the (N, r) sketch
+        x = jax.lax.fori_loop(0, n_iter, lambda _, x: orth(ata(x)), omega)
+        q = orth(matvec(x))                         # (M, r)
+    else:
+        q = orth(matvec(omega))                     # (M, r)
 
-    def body(_, q):
-        z = orth(rmatvec(q))                        # (N, r)
-        return orth(matvec(z))                      # (M, r)
+        def body(_, q):
+            z = orth(rmatvec(q))                    # (N, r)
+            return orth(matvec(z))                  # (M, r)
 
-    q = jax.lax.fori_loop(0, n_iter, body, q)
-    sparse_in = _sparse.is_bcoo(a) or _sparse.is_ell(a)
+        q = jax.lax.fori_loop(0, n_iter, body, q)
     b = rmatvec(q).T if sparse_in else q.T @ a      # (r, N)
     # exact SVD of the small projected matrix
     ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
@@ -185,7 +220,8 @@ def scc(
     # and is a static python int so jit sees a fixed SVD rank.
     l = n_singular_vectors if n_singular_vectors is not None else max(k, d).bit_length()
 
-    if (_sparse.is_bcoo(a) or _sparse.is_ell(a)) and svd_method == "exact":
+    if ((_sparse.is_bcoo(a) or _sparse.is_ell(a) or _sparse.is_tiled(a))
+            and svd_method == "exact"):
         raise ValueError(
             "svd_method='exact' (LAPACK) requires a dense matrix; the sparse "
             "path supports svd_method='randomized' (SpMM subspace iteration)")

@@ -26,17 +26,36 @@ from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
 from .kmeans_assign import cosine_assign_pallas, kmeans_assign_pallas
 from .kmeans_update import kmeans_update_pallas
-from .spmm import BlockSparseMatrix, bcoo_to_block_sparse, spmm_pallas
+from .spmm import (BlockSparseMatrix, bcoo_to_block_sparse, spmm_ata_pallas,
+                   spmm_pallas, spmm_t_pallas)
 
 __all__ = ["kmeans_assign", "kmeans_update", "cosine_assign",
            "bipartite_normalize", "flash_attention", "spmm", "sddmm",
-           "spmm_tiled", "BlockSparseMatrix", "bcoo_to_block_sparse"]
+           "spmm_tiled", "spmm_ata", "BlockSparseMatrix",
+           "bcoo_to_block_sparse"]
 
 
 def _interpret() -> bool:
     if os.environ.get("REPRO_FORCE_INTERPRET"):
         return True
     return jax.default_backend() != "tpu"
+
+
+def _tiled_backend() -> str:
+    """Dispatch tier for the tile-level SpMM family.
+
+    ``interpret`` when forced (kernel correctness CI — like
+    ``_interpret``, the env switch wins on any backend), ``pallas`` on
+    TPU (real lowering), ``jnp`` otherwise: off-TPU the interpret-mode
+    grid loop is a correctness tool, not an execution path, so
+    production CPU calls use the batched-einsum tile reference
+    (``ref.spmm_block_ref``) — same semantics, BLAS-speed.
+    """
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "jnp"
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
@@ -137,22 +156,76 @@ def sddmm(x: jax.Array, y: jax.Array, indices: jax.Array) -> jax.Array:
     return ref.sddmm_ref(x, y, indices[:, 0], indices[:, 1])
 
 
-def spmm_tiled(a: BlockSparseMatrix, b: jax.Array,
-               bn: int = 128) -> jax.Array:
-    """Tile-level SpMM kernel: ``A @ b`` with ``A`` pre-tiled.
+def spmm_tiled(a: BlockSparseMatrix, b: jax.Array, *,
+               transpose: bool = False, bn: int = 128) -> jax.Array:
+    """Tile-level SpMM: ``A @ b`` (or ``A.T @ b``) with ``A`` pre-tiled.
 
-    ``a`` comes from ``bcoo_to_block_sparse`` (one-time host prep). ``b``
-    is padded on both axes (rows to the tile grid's K, cols to ``bn``);
-    the padded rows multiply zero tiles only, and padded output is
-    sliced off.
+    ``a`` comes from ``bcoo_to_block_sparse`` (one-time host prep,
+    amortized across every product that consumes the operator). ``b`` may
+    carry any number of RHS columns — the kernel grids over ``bn``-wide
+    column stripes. ``b`` is padded on its contracted axis to the tile
+    grid (padded rows multiply zero payload cells only) and, on the
+    Pallas tiers, on its column axis to ``bn``; padded output is sliced
+    off. Dispatch: TPU -> Pallas kernel; ``REPRO_FORCE_INTERPRET`` ->
+    interpret-mode kernel; otherwise the batched-einsum tile reference.
     """
     m, k = a.shape
     bm, bk = a.tile_shape
-    m_pad = ((m + bm - 1) // bm) * bm
-    bp = _pad_to(_pad_to(b.astype(jnp.float32), 0, bk), 1, bn)
-    out = spmm_pallas(a.block_rows, a.block_cols, a.blocks, bp,
-                      m_out=m_pad, bn=bn, interpret=_interpret())
-    return out[:m, :b.shape[1]]
+    n_tr, n_tc = a.n_tiles
+    backend = _tiled_backend()
+    out_rows = k if transpose else m
+    if backend == "jnp":
+        bp = _pad_to(b.astype(jnp.float32), 0, bm if transpose else bk)
+        out = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
+                                 n_tr, n_tc, bp, transpose=transpose)
+        return out[:out_rows, : b.shape[1]]
+    interp = backend == "interpret"
+    bp = _pad_to(_pad_to(b.astype(jnp.float32), 0, bm if transpose else bk),
+                 1, bn)
+    if transpose:
+        out = spmm_t_pallas(a.block_rows, a.block_cols, a.t_order, a.blocks,
+                            bp, k_out=n_tc * bk, bn=bn, interpret=interp)
+    else:
+        out = spmm_pallas(a.block_rows, a.block_cols, a.blocks, bp,
+                          m_out=n_tr * bm, bn=bn, interpret=interp)
+    return out[:out_rows, : b.shape[1]]
+
+
+# VMEM budget for the fused kernel's resident Y stripe + output stripe
+# (f32 bytes); past this the wrapper decomposes into two tiled products.
+_ATA_VMEM_BUDGET = 12 * 2**20
+
+
+def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
+    """Fused normal-equations pass: ``A.T @ (A @ x)`` in one sweep.
+
+    The subspace iteration's hot step (DESIGN.md §9): both products of
+    one power-iteration application run in a single kernel launch, with
+    the ``(M, q)`` intermediate held in VMEM scratch instead of
+    round-tripping through HBM. Falls back to two ``spmm_tiled`` calls
+    when the resident stripes would not fit the VMEM budget (or on the
+    jnp tier, where the composition is already fused by XLA).
+    """
+    m, k = a.shape
+    bm, bk = a.tile_shape
+    n_tr, n_tc = a.n_tiles
+    backend = _tiled_backend()
+    if backend == "jnp":
+        xp = _pad_to(x.astype(jnp.float32), 0, bk)
+        y = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
+                               n_tr, n_tc, xp)
+        out = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
+                                 n_tr, n_tc, y, transpose=True)
+        return out[:k, : x.shape[1]]
+    stripes = (n_tr * bm + n_tc * bk) * bn * 4
+    if stripes > _ATA_VMEM_BUDGET:
+        y = spmm_tiled(a, x, bn=bn)
+        return spmm_tiled(a, y, transpose=True, bn=bn)
+    interp = backend == "interpret"
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bk), 1, bn)
+    out = spmm_ata_pallas(a.block_rows, a.block_cols, a.blocks, xp,
+                          m_pad=n_tr * bm, bn=bn, interpret=interp)
+    return out[:k, : x.shape[1]]
 
 
 def bipartite_normalize(a: jax.Array, eps: float = 1e-8,

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["kmeans_assign_ref", "kmeans_update_ref", "cosine_assign_ref",
-           "bipartite_normalize_ref", "attention_ref", "spmm_ref", "sddmm_ref"]
+           "bipartite_normalize_ref", "attention_ref", "spmm_ref",
+           "spmm_block_ref", "sddmm_ref"]
 
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
@@ -77,6 +78,37 @@ def spmm_ref(data: jax.Array, rows: jax.Array, cols: jax.Array,
     """
     contrib = data.astype(jnp.float32)[:, None] * b.astype(jnp.float32)[cols]
     return jax.ops.segment_sum(contrib, rows, num_segments=n_out)
+
+
+def spmm_block_ref(blocks: jax.Array, block_rows: jax.Array,
+                   block_cols: jax.Array, n_tile_rows: int, n_tile_cols: int,
+                   b: jax.Array, transpose: bool = False) -> jax.Array:
+    """Tile-level SpMM oracle: one batched tile GEMM + a tile segment-sum.
+
+    ``blocks (G, bm, bk)`` with tile coordinates ``block_rows``/
+    ``block_cols`` is the ``spmm.BlockSparseMatrix`` payload list; ``b``
+    must be padded to the tile grid on its contracted axis
+    (``n_tile_cols * bk`` rows, or ``n_tile_rows * bm`` when
+    ``transpose``). Semantically identical to ``spmm_ref`` on the
+    expanded COO triplets; it is also the fast CPU execution path for
+    ``ops.spmm_tiled`` — a batched ``(bm, bk) @ (bk, r)`` einsum keeps
+    the contraction in the BLAS batch unit instead of the per-element
+    scatter unit, so its cost scales with tile occupancy, not nnz.
+    """
+    g, bm, bk = blocks.shape
+    bf = b.astype(jnp.float32)
+    if transpose:
+        tiles = bf.reshape(n_tile_rows, bm, -1)
+        contrib = jnp.einsum("gab,gar->gbr", blocks.astype(jnp.float32),
+                             tiles[block_rows])
+        out = jax.ops.segment_sum(contrib, block_cols,
+                                  num_segments=n_tile_cols)
+        return out.reshape(n_tile_cols * bk, -1)
+    tiles = bf.reshape(n_tile_cols, bk, -1)
+    contrib = jnp.einsum("gab,gbr->gar", blocks.astype(jnp.float32),
+                         tiles[block_cols])
+    out = jax.ops.segment_sum(contrib, block_rows, num_segments=n_tile_rows)
+    return out.reshape(n_tile_rows * bm, -1)
 
 
 def sddmm_ref(x: jax.Array, y: jax.Array, rows: jax.Array,

@@ -1,38 +1,59 @@
-"""Pallas TPU kernel: tiled block-sparse SpMM (DESIGN.md §9).
+"""Pallas TPU kernels: tiled block-sparse SpMM family (DESIGN.md §9).
 
 The sparse atom phase's hot matmuls are ``A @ Omega`` / ``A.T @ Q`` with
 ``A`` sparse and the other operand a tall-skinny dense sketch. A BCOO's
-per-element indices cannot drive TPU DMA, so the kernel consumes a
+per-element indices cannot drive TPU DMA, so the kernels consume a
 *tile-level* sparse format: ``A`` is cut into a ``(M/bm, K/bk)`` grid
 and only tiles containing nonzeros are kept, as
 
   * ``blocks``     (G, bm, bk) f32 — dense payload of each surviving tile
   * ``block_rows`` (G,) i32        — tile-row of each payload, sorted
   * ``block_cols`` (G,) i32        — tile-col of each payload
+  * ``t_order``    (G,) i32        — payload visit order for transposed
+                                     products (sorted by tile-col)
 
-Grid is ``(N/bn, G)`` — payloads innermost, so consecutive steps that
-share a tile-row revisit the *same* output block while it is resident in
-VMEM. ``block_rows``/``block_cols`` ride in as scalar-prefetch operands
-(``pltpu.PrefetchScalarGridSpec``) so the index maps can route each
-payload's B-tile and out-tile before the body runs. The output block is
-zeroed exactly when the tile-row changes (or at g == 0); because the
-converter guarantees every tile-row owns at least one payload (zero
-padding tiles for empty rows), every output block is visited and
-initialized.
+Three kernels share the format:
+
+``spmm_pallas``      ``A @ B``: grid ``(N/bn, G)`` — payloads innermost,
+    so consecutive steps that share a tile-row revisit the *same* output
+    block while it is resident in VMEM. ``block_rows``/``block_cols``
+    ride in as scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``)
+    so the index maps can route each payload's B-tile and out-tile before
+    the body runs. The output block is zeroed exactly when the tile-row
+    changes; the converter seeds every tile-row with at least one payload
+    so every output block is visited and initialized.
+
+``spmm_t_pallas``    ``A.T @ B``: the same sweep driven through
+    ``t_order`` — payloads visited in tile-col order so the transposed
+    product enjoys the identical out-block residency property. The
+    converter seeds every tile-*col* too, so both orientations have all
+    output tiles initialized.
+
+``spmm_ata_pallas``  fused normal-equations pass ``A.T @ (A @ X)``: one
+    kernel launch whose grid sweeps the tile list once per phase
+    (``grid = (N/bn, 2, G)``). Phase 0 accumulates the intermediate
+    ``Y = A @ X`` stripe into a VMEM scratch; phase 1 streams the same
+    payloads again and applies ``out[col] += B.T @ Y[row]`` against the
+    still-resident scratch. ``Y`` never round-trips through HBM and the
+    two products cost one launch instead of two — per subspace-iteration
+    step the only HBM traffic beyond the payload tiles is the tiny
+    ``(K, q)`` sketch in and out. (The payload tiles are streamed once
+    per phase — the same nonzero traffic as the two-launch formulation,
+    minus the ``(M, q)`` intermediate round-trip.)
 
 Compute per grid step is one ``(bm, bk) @ (bk, bn)`` MXU contraction —
 identical to a dense matmul kernel's inner step; the win is skipping the
 empty tiles entirely: FLOPs and HBM traffic scale with the *tile-level*
 occupancy instead of ``M*K``.
 
-Like every kernel here it runs under ``interpret=True`` off-TPU; the
-semantics oracle is ``ref.spmm_ref`` (element-level segment-sum).
+Like every kernel here they run under ``interpret=True`` off-TPU; the
+semantics oracles are ``ref.spmm_ref`` (element-level segment-sum) and
+``ref.spmm_block_ref`` (tile-level, also the fast jnp CPU path).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,46 +61,84 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["BlockSparseMatrix", "bcoo_to_block_sparse", "spmm_pallas"]
+__all__ = ["BlockSparseMatrix", "bcoo_to_block_sparse", "spmm_pallas",
+           "spmm_t_pallas", "spmm_ata_pallas"]
 
 
-class BlockSparseMatrix(NamedTuple):
-    """Tile-level sparse operand for ``spmm_pallas`` (host-prepared)."""
+@jax.tree_util.register_pytree_node_class
+class BlockSparseMatrix:
+    """Tile-level sparse operand for the SpMM kernels (host-prepared).
 
-    blocks: jax.Array        # (G, bm, bk) dense tile payloads
-    block_rows: jax.Array    # (G,) i32 tile-row ids, sorted ascending
-    block_cols: jax.Array    # (G,) i32 tile-col ids
-    shape: tuple[int, int]   # logical (M, K) — unpadded
+    A registered pytree whose logical ``shape`` is static aux data, so the
+    operand passes through ``jit``/``scan`` boundaries with ``.shape``
+    usable for Python-level shape math (the same reason
+    ``sparse.EllOperator`` derives its shape instead of storing it).
+    """
+
+    def __init__(self, blocks, block_rows, block_cols, t_order, shape):
+        self.blocks = blocks            # (G, bm, bk) dense tile payloads
+        self.block_rows = block_rows    # (G,) i32 tile-row ids, sorted
+        self.block_cols = block_cols    # (G,) i32 tile-col ids
+        self.t_order = t_order          # (G,) i32, payloads in tile-col order
+        self.shape = tuple(shape)       # logical (M, K) — unpadded, static
 
     @property
     def tile_shape(self) -> tuple[int, int]:
         return self.blocks.shape[1], self.blocks.shape[2]
+
+    @property
+    def n_tiles(self) -> tuple[int, int]:
+        """Tile-grid shape ``(M/bm, K/bk)`` (ceil)."""
+        bm, bk = self.tile_shape
+        return -(-self.shape[0] // bm), -(-self.shape[1] // bk)
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    def tree_flatten(self):
+        return ((self.blocks, self.block_rows, self.block_cols,
+                 self.t_order), self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(*children, shape=shape)
 
 
 def bcoo_to_block_sparse(a, bm: int = 128, bk: int = 128) -> BlockSparseMatrix:
     """Tile a BCOO matrix, keeping only tiles with nonzeros (host-side).
 
     One-time O(nnz) preprocessing per matrix — done *outside* jit because
-    the surviving-tile count is data-dependent. Empty tile-rows get one
-    zero payload (tile-col 0) so the kernel initializes every output
-    block. Rows are padded up to a ``bm`` multiple, cols to ``bk``.
+    the surviving-tile count is data-dependent; in the LAMC sparse route
+    the cost is amortized across every resample and subspace-iteration
+    product that consumes the operator. Empty tile-rows get one zero
+    payload (tile-col 0) and empty tile-cols one zero payload (tile-row
+    0) so both product orientations initialize every output block. Rows
+    are padded up to a ``bm`` multiple, cols to ``bk``.
     """
     m, k = a.shape
     rows = np.asarray(a.indices[:, 0]).astype(np.int64)
     cols = np.asarray(a.indices[:, 1]).astype(np.int64)
     vals = np.asarray(a.data, dtype=np.float32)
     n_tr, n_tc = -(-m // bm), -(-k // bk)
-    # linearized tile ids; seed every tile-row with (row, col 0) so each
-    # output block gets initialized even when the row is empty
+    # linearized tile ids; seed every tile-row with (row, col 0) and every
+    # tile-col with (row 0, col) so each output block of either product
+    # orientation gets initialized even when its tile-row/-col is empty
     tile_of_nnz = (rows // bm) * n_tc + cols // bk
-    tile_ids = np.union1d(tile_of_nnz, np.arange(n_tr, dtype=np.int64) * n_tc)
+    seeds = np.concatenate([np.arange(n_tr, dtype=np.int64) * n_tc,
+                            np.arange(n_tc, dtype=np.int64)])
+    tile_ids = np.union1d(tile_of_nnz, seeds)
     g_of = np.searchsorted(tile_ids, tile_of_nnz)
     blocks = np.zeros((len(tile_ids), bm, bk), np.float32)
     blocks[g_of, rows % bm, cols % bk] = vals
+    tile_rows = tile_ids // n_tc
+    tile_cols = tile_ids % n_tc
+    t_order = np.lexsort((tile_rows, tile_cols))  # tile-col-major visit order
     return BlockSparseMatrix(
         blocks=jnp.asarray(blocks),
-        block_rows=jnp.asarray(tile_ids // n_tc, jnp.int32),
-        block_cols=jnp.asarray(tile_ids % n_tc, jnp.int32),
+        block_rows=jnp.asarray(tile_rows, jnp.int32),
+        block_cols=jnp.asarray(tile_cols, jnp.int32),
+        t_order=jnp.asarray(t_order, jnp.int32),
         shape=(m, k),
     )
 
@@ -131,3 +190,128 @@ def spmm_pallas(
         out_shape=jax.ShapeDtypeStruct((m_out, n), jnp.float32),
         interpret=interpret,
     )(block_rows, block_cols, blocks, b)
+
+
+def _kernel_t(rows_ref, cols_ref, order_ref, blk_ref, b_ref, out_ref):
+    g = pl.program_id(1)
+    # Payloads are visited in tile-col order (order_ref): a new tile-col
+    # means a fresh output block, mirroring the row-sorted forward sweep.
+    here = cols_ref[order_ref[g]]
+    prev = cols_ref[order_ref[jnp.maximum(g - 1, 0)]]
+    first = jnp.logical_or(g == 0, here != prev)
+
+    @pl.when(first)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (bm, bk).T @ (bm, bn): contract the sublane (row) dim of the payload.
+    out_ref[...] += jax.lax.dot_general(
+        blk_ref[0], b_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "bn", "interpret"))
+def spmm_t_pallas(
+    block_rows: jax.Array,   # (G,) i32, sorted by tile-row
+    block_cols: jax.Array,   # (G,) i32
+    t_order: jax.Array,      # (G,) i32 — payload visit order, tile-col major
+    blocks: jax.Array,       # (G, bm, bk) f32
+    b: jax.Array,            # (M_padded, N_padded) dense rhs
+    k_out: int,              # padded output rows (n_tile_cols * bk)
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw transposed product: ``out (k_out, N) = A_blocksparse.T @ b``.
+
+    The scalar-prefetched ``t_order`` permutation re-sorts the sweep by
+    tile-col without materializing a transposed payload copy: the DMA
+    engine fetches ``blocks[t_order[g]]`` and the MXU contracts its row
+    dimension against the matching tile-row of ``b``.
+    """
+    g_total, bm, bk = blocks.shape
+    _, n = b.shape
+    grid = (n // bn, g_total)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk),
+                         lambda j, g, rows, cols, order: (order[g], 0, 0)),
+            pl.BlockSpec((bm, bn),
+                         lambda j, g, rows, cols, order: (rows[order[g]], j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bk, bn), lambda j, g, rows, cols, order: (cols[order[g]], j)),
+    )
+    return pl.pallas_call(
+        _kernel_t,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k_out, n), jnp.float32),
+        interpret=interpret,
+    )(block_rows, block_cols, t_order, blocks, b)
+
+
+def _kernel_ata(rows_ref, cols_ref, blk_ref, x_ref, out_ref, y_ref):
+    p = pl.program_id(1)
+    g = pl.program_id(2)
+    bm = blk_ref.shape[1]
+    bk = blk_ref.shape[2]
+
+    @pl.when(jnp.logical_and(p == 0, g == 0))
+    def _init():
+        # fresh column stripe: clear the Y scratch and the output stripe
+        y_ref[...] = jnp.zeros_like(y_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(p == 0)
+    def _forward():
+        # phase 0: Y[row] += B @ X[col] — the whole Y stripe lives in VMEM
+        y_ref[pl.ds(rows_ref[g] * bm, bm), :] += jax.lax.dot(
+            blk_ref[0], x_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _backward():
+        # phase 1: out[col] += B.T @ Y[row] against the resident scratch
+        out_ref[pl.ds(cols_ref[g] * bk, bk), :] += jax.lax.dot_general(
+            blk_ref[0], y_ref[pl.ds(rows_ref[g] * bm, bm), :],
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_pad", "bn", "interpret"))
+def spmm_ata_pallas(
+    block_rows: jax.Array,   # (G,) i32, sorted by tile-row
+    block_cols: jax.Array,   # (G,) i32
+    blocks: jax.Array,       # (G, bm, bk) f32
+    x: jax.Array,            # (K_padded, N_padded) dense sketch
+    m_pad: int,              # padded intermediate rows (n_tile_rows * bm)
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw fused normal-equations pass: ``out = A.T @ (A @ x)``.
+
+    One launch; the ``(m_pad, bn)`` intermediate ``Y = A @ x`` stripe is a
+    VMEM scratch that never reaches HBM. Both the ``Y`` stripe and the
+    ``(k_pad, bn)`` output stripe must fit VMEM — the ops wrapper falls
+    back to two kernel launches for operands past that budget.
+    """
+    g_total, bm, bk = blocks.shape
+    k_pad, n = x.shape
+    grid = (n // bn, 2, g_total)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda j, p, g, rows, cols: (g, 0, 0)),
+            pl.BlockSpec((bk, bn), lambda j, p, g, rows, cols: (cols[g], j)),
+        ],
+        # one whole-stripe output block: resident for the full (p, g) sweep,
+        # so phase-1 accumulation never depends on out-block revisit order
+        out_specs=pl.BlockSpec((k_pad, bn), lambda j, p, g, rows, cols: (0, j)),
+        scratch_shapes=[pltpu.VMEM((m_pad, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel_ata,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k_pad, n), jnp.float32),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, x)

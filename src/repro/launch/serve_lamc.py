@@ -102,7 +102,8 @@ def main(argv=None):
     if args.bench_out:
         from repro.benchio import merge_rows
 
-        merge_rows(args.bench_out, bench_rows)
+        merge_rows(args.bench_out, bench_rows,
+                   own_prefixes=("stream_", "serve_"))
     print(json.dumps({**bench_rows, "batch": args.batch,
                       "requests": args.requests}, indent=2))
 

@@ -82,6 +82,16 @@ class StreamConfig:
     merge_restarts: int = 4
     assign_impl: str = "jnp"        # "jnp" | "pallas" — atom k-means hot path
     qr_method: str = "qr"           # "qr" | "cholesky"
+    # Sparse-route knob, mirrored from LAMCConfig so stream/batch configs
+    # stay interchangeable (stream_config_from_lamc). For BCOO chunks it
+    # decides how column blocks materialize: only a gather route
+    # ("dual_ell" pinned, or "auto" below the probability.spmm_route
+    # crossover) keeps the chunk sparse and scatters each resample's
+    # blocks straight from the nonzeros, O(chunk nnz) per resample; any
+    # other verdict densifies the chunk once (streaming has no tiled
+    # backend — its trade is scatter vs densify). Either way the block
+    # values are bit-identical — this is a memory/compute trade only.
+    spmm_impl: str = "auto"
 
     @property
     def atom_k(self) -> int:
@@ -106,7 +116,7 @@ def stream_config_from_lamc(cfg: LAMCConfig, **overrides) -> StreamConfig:
         svd_iters=cfg.svd_iters, kmeans_iters=cfg.kmeans_iters,
         merge_kmeans_iters=cfg.merge_kmeans_iters,
         merge_restarts=cfg.merge_restarts, assign_impl=cfg.assign_impl,
-        qr_method=cfg.qr_method,
+        qr_method=cfg.qr_method, spmm_impl=cfg.spmm_impl,
     )
     base.update(overrides)
     return StreamConfig(**base)
@@ -173,6 +183,7 @@ class StreamingCocluster:
     """
 
     def __init__(self, cfg: StreamConfig):
+        _sparse.validate_spmm_impl(cfg.spmm_impl)
         self.cfg = cfg
         self._n_cols: int | None = None
         self._anchor_cols: jax.Array | None = None
@@ -202,6 +213,16 @@ class StreamingCocluster:
         self._anchor_sum = np.zeros((q,), np.float32)
         self._res_ids = np.zeros((cfg.anchor_rows,), np.int64)
         self._res_vals = np.zeros((cfg.anchor_rows, n_cols), np.float32)
+
+    def _chunk_route(self, chunk) -> str:
+        """Resolve cfg.spmm_impl for one BCOO chunk (host-side)."""
+        from repro.core import probability as _prob
+
+        if self.cfg.spmm_impl != "auto":
+            return self.cfg.spmm_impl
+        r, n = chunk.shape
+        return _prob.spmm_route(chunk.nse / float(max(r * n, 1)),
+                                float(r) * n)
 
     # -------------------------------------------------------------- reservoir
 
@@ -251,6 +272,14 @@ class StreamingCocluster:
                                    n)[: cfg.col_blocks * psi]
             for ri in range(cfg.chunk_resamples)
         ]
+        if _sparse.is_bcoo(chunk) and self._chunk_route(chunk) != "dual_ell":
+            # Streaming has no tiled backend — the chunk trade is
+            # scatter-vs-densify only, so any non-gather verdict (tiled
+            # or dense; BENCH_sparse: gathers lose ~1.9x by d = 0.2)
+            # densifies the chunk once instead of paying a per-resample
+            # scatter. Same values bit-exact either way (each cell holds
+            # one stored nonzero or zero).
+            chunk = chunk.todense()
         if _sparse.is_bcoo(chunk):
             # one gather per resample: gather_cols_dense inverts the column
             # map, so the index set must be duplicate-free — true within one

@@ -245,17 +245,20 @@ class TestSparseLAMC:
                                       np.asarray(out_s.row_votes))
 
     def test_e2e_auto_plan_runs(self):
-        # easier planting than the parity fixture: the auto plan may pick a
-        # single-block grid, whose full-matrix SCC needs more signal to
-        # recover structure at 30% density
+        # easier planting than the parity fixture: the auto plan picks a
+        # single-block grid here, whose one-shot full-matrix SCC needs
+        # more signal to recover structure at these densities (direct scc
+        # on this data scores ~0.45; the vote merge lifts it to ~0.64)
         rng = np.random.default_rng(1)
         data = planted_cocluster_matrix(rng, 240, 200, k=4, d=4,
-                                        signal=6.0, noise=0.3, density=0.3)
+                                        signal=8.0, noise=0.2, density=0.4)
         cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4,
                          min_cocluster_rows=48, min_cocluster_cols=40,
                          input_format="bcoo")
         out = lamc_cocluster(to_bcoo(data.matrix), cfg)
         assert out.row_labels.shape == (240,)
+        # the auto route keeps the single block in its sparse operator form
+        assert out.plan.spmm_route == "tiled"
         s = nmi(np.asarray(out.row_labels), data.row_labels)
         assert s > 0.5, s
 
@@ -329,12 +332,30 @@ class TestSparsePlanCost:
         assert c1 == c2
 
     def test_plan_cost_monotone_in_density(self):
+        # workers=1 so the single-block sparse route is the best plan and
+        # its density-scaled cost is what the search surfaces; with many
+        # workers a multi-block plan (dense blocks, density-independent
+        # cost by construction) can win at every density and the curve
+        # legitimately plateaus
         kw = dict(min_cocluster_rows=256, min_cocluster_cols=256,
-                  p_thresh=0.95, workers=8, k=8)
+                  p_thresh=0.95, workers=1, k=8)
         costs = [probability.plan_partition(4096, 4096, density=d, **kw).est_cost
                  for d in (0.01, 0.05, 0.2, 1.0)]
         assert costs == sorted(costs)
         assert costs[0] < costs[-1]
+
+    def test_multiblock_priced_dense(self):
+        """Multi-block candidates densify their blocks: est_cost and the
+        surfaced route must say so, whatever the density/knob."""
+        kw = dict(min_cocluster_rows=256, min_cocluster_cols=256,
+                  p_thresh=0.95, workers=8, k=8)
+        cand = probability.plan_partition(4096, 4096, density=0.01,
+                                          grid_candidates=(4,), **kw)
+        assert (cand.m, cand.n) != (1, 1)
+        assert cand.spmm_route == "dense"
+        sparse_priced = probability.plan_partition(
+            4096, 4096, density=1.0, grid_candidates=(4,), **kw)
+        assert cand.est_cost == sparse_priced.est_cost  # density-independent
 
     def test_sparse_speedup_asymmetry(self):
         """The planner's predicted partitioning win must shrink with
@@ -354,6 +375,175 @@ class TestSparsePlanCost:
         dense_gain = gain("exact", 1.0)
         sparse_gain = gain("randomized", 0.01)
         assert dense_gain > sparse_gain, (dense_gain, sparse_gain)
+
+
+class TestSpmmRouting:
+    def test_route_by_density(self):
+        """Calibrated crossovers: gathers below, tile GEMMs above."""
+        cells = 4096.0 * 2048
+        assert probability.spmm_route(0.01, cells) == "dual_ell"
+        assert probability.spmm_route(0.05, cells) == "dual_ell"
+        assert probability.spmm_route(0.2, cells) == "tiled"
+        assert probability.spmm_route(0.95, cells) == "dense"
+
+    def test_route_small_blocks_densify(self):
+        """Sub-64x64 blocks never pay back sparse-format prep."""
+        assert probability.spmm_route(0.01, 32.0 * 32) == "dense"
+
+    def test_crossover_constant_brackets_bench(self):
+        """The published crossover sits inside the measured (0.05, 0.2)
+        win/loss bracket and at the cost model's parity point."""
+        assert 0.05 < probability.SPMM_ELL_CROSSOVER < 0.2
+        cells = 4096.0 * 2048
+        below = probability.spmm_costs(0.05, cells)
+        above = probability.spmm_costs(0.2, cells)
+        assert below["dual_ell"] < below["tiled"]
+        assert above["tiled"] < above["dual_ell"]
+
+    def test_atom_cost_pinned_impl(self):
+        """Pinning the backend prices it even when it is not cheapest."""
+        kw = dict(density=0.2)
+        auto = probability._atom_cost(512, 512, 8, 4, 16, 8, **kw)
+        ell = probability._atom_cost(512, 512, 8, 4, 16, 8,
+                                     spmm_impl="dual_ell", **kw)
+        assert auto < ell
+
+    def test_plan_surfaces_route(self):
+        """make_plan exposes the per-block dispatch decision."""
+        low = partition.make_plan(4096, 4096, min_cocluster_rows=256,
+                                  min_cocluster_cols=256, density=0.01)
+        high = partition.make_plan(4096, 4096, min_cocluster_rows=256,
+                                   min_cocluster_cols=256, density=0.2)
+        dense = partition.make_plan(4096, 4096, min_cocluster_rows=256,
+                                    min_cocluster_cols=256)
+        assert low.spmm_route == "dual_ell"
+        assert high.spmm_route == "tiled"
+        assert dense.spmm_route == "dense"
+        pinned = partition.make_plan(4096, 4096, min_cocluster_rows=256,
+                                     min_cocluster_cols=256, density=0.01,
+                                     spmm_impl="tiled")
+        assert pinned.spmm_route == "tiled"
+
+
+class TestTiledSpectral:
+    def test_randomized_svd_tiled_matches_dense(self, planted):
+        """Tiled normal-equations iteration reaches the dense subspace."""
+        a = jnp.asarray(planted.matrix)
+        key = jax.random.key(0)
+        u_d, s_d, _ = randomized_svd(key, a, rank=5, n_iter=6)
+        tiled = core_sparse.to_tiled(to_bcoo(planted.matrix), bm=64, bk=64)
+        u_t, s_t, _ = randomized_svd(key, tiled, rank=5, n_iter=6)
+        np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_d), rtol=1e-3)
+        ov = np.abs(np.asarray(u_d.T @ u_t))
+        np.testing.assert_allclose(np.diag(ov), 1.0, atol=1e-2)
+
+    def test_normalize_bipartite_tiled_parity(self, planted):
+        a = jnp.asarray(planted.matrix)
+        tiled = core_sparse.to_tiled(to_bcoo(planted.matrix), bm=64, bk=64)
+        an_d, d1_d, d2_d = normalize_bipartite(a)
+        an_t, d1_t, d2_t = normalize_bipartite(tiled)
+        assert core_sparse.is_tiled(an_t)
+        np.testing.assert_allclose(np.asarray(d1_t), np.asarray(d1_d), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(d2_t), np.asarray(d2_d), rtol=1e-5)
+        x = jnp.ones((200, 1), jnp.float32)
+        from repro.kernels import ops as _kops
+        np.testing.assert_allclose(np.asarray(_kops.spmm_tiled(an_t, x)),
+                                   np.asarray(an_d @ x), atol=1e-4)
+
+    def test_scc_tiled_matches_dense_labels(self, planted):
+        key = jax.random.key(0)
+        res_d = scc(key, jnp.asarray(planted.matrix), 4)
+        res_t = scc(key, core_sparse.to_tiled(to_bcoo(planted.matrix)), 4)
+        assert nmi(np.asarray(res_d.row_labels), np.asarray(res_t.row_labels)) > 0.999
+        assert nmi(np.asarray(res_d.col_labels), np.asarray(res_t.col_labels)) > 0.999
+
+    def test_scc_tiled_rejects_exact_svd(self, planted):
+        with pytest.raises(ValueError, match="dense"):
+            scc(jax.random.key(0), core_sparse.to_tiled(to_bcoo(planted.matrix)),
+                4, svd_method="exact")
+
+
+class TestSpmmImplLAMC:
+    def test_multiblock_exact_parity_any_impl(self, planted):
+        """Multi-block plans densify their blocks: the knob must not
+        perturb the exact dense/sparse label parity."""
+        a = jnp.asarray(planted.matrix)
+        a_sp = to_bcoo(planted.matrix)
+        plan = PartitionPlan(240, 200, m=2, n=2, phi=120, psi=100, t_p=2, seed=0)
+        base = dict(n_row_clusters=4, n_col_clusters=4,
+                    min_cocluster_rows=48, min_cocluster_cols=40)
+        out_d = lamc_cocluster(a, LAMCConfig(**base), plan=plan)
+        for impl in ("tiled", "dual_ell", "auto", "dense"):
+            out_s = lamc_cocluster(
+                a_sp, LAMCConfig(**base, input_format="bcoo", spmm_impl=impl),
+                plan=plan)
+            np.testing.assert_array_equal(np.asarray(out_d.row_labels),
+                                          np.asarray(out_s.row_labels))
+            np.testing.assert_array_equal(np.asarray(out_d.col_labels),
+                                          np.asarray(out_s.col_labels))
+
+    def test_single_block_operator_path(self):
+        """(1,1) plans keep A in sparse-operator form; tiled and dual-ELL
+        routes agree with each other and recover the planted structure."""
+        rng = np.random.default_rng(1)
+        data = planted_cocluster_matrix(rng, 240, 200, k=4, d=4,
+                                        signal=8.0, noise=0.2, density=0.4)
+        a_sp = to_bcoo(data.matrix)
+        plan = PartitionPlan(240, 200, m=1, n=1, phi=240, psi=200, t_p=2,
+                             seed=0)
+        base = dict(n_row_clusters=4, n_col_clusters=4,
+                    min_cocluster_rows=48, min_cocluster_cols=40,
+                    input_format="bcoo")
+        out_t = lamc_cocluster(a_sp, LAMCConfig(**base, spmm_impl="tiled"),
+                               plan=plan)
+        out_e = lamc_cocluster(a_sp, LAMCConfig(**base, spmm_impl="dual_ell"),
+                               plan=plan)
+        assert out_t.plan.spmm_route == "tiled"
+        assert out_e.plan.spmm_route == "dual_ell"
+        # same operator semantics -> same labels across product backends
+        assert nmi(np.asarray(out_t.row_labels),
+                   np.asarray(out_e.row_labels)) > 0.99
+        assert nmi(np.asarray(out_t.row_labels), data.row_labels) > 0.5
+
+    def test_single_block_subsampling_plan_falls_back(self, planted):
+        """A (1,1) plan with phi < M / psi < N subsamples per resample —
+        the operator path cannot represent that, so it must fall back to
+        the extraction path (bit-identical to spmm_impl='dense')."""
+        a_sp = to_bcoo(planted.matrix)
+        plan = PartitionPlan(240, 200, m=1, n=1, phi=200, psi=160, t_p=2,
+                             seed=0)
+        base = dict(n_row_clusters=4, n_col_clusters=4,
+                    min_cocluster_rows=48, min_cocluster_cols=40,
+                    input_format="bcoo")
+        out_auto = lamc_cocluster(a_sp, LAMCConfig(**base), plan=plan)
+        out_dense = lamc_cocluster(a_sp, LAMCConfig(**base,
+                                                    spmm_impl="dense"),
+                                   plan=plan)
+        assert out_auto.plan.spmm_route == "dense"
+        np.testing.assert_array_equal(np.asarray(out_auto.row_labels),
+                                      np.asarray(out_dense.row_labels))
+
+    def test_invalid_impl_raises(self, planted):
+        cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4,
+                         spmm_impl="csr")
+        with pytest.raises(ValueError, match="spmm_impl"):
+            lamc_cocluster(jnp.asarray(planted.matrix), cfg,
+                           plan=PartitionPlan(240, 200, 2, 2, 120, 100, 1))
+        from repro.core.distributed import _validate_input_format
+        with pytest.raises(ValueError, match="spmm_impl"):
+            _validate_input_format(jnp.asarray(planted.matrix), cfg)
+
+    def test_streaming_config_carries_impl(self):
+        from repro.streaming import StreamingCocluster
+        from repro.streaming.fit import StreamConfig, stream_config_from_lamc
+        lamc_cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4,
+                              spmm_impl="tiled")
+        scfg = stream_config_from_lamc(lamc_cfg)
+        assert scfg.spmm_impl == "tiled"
+        with pytest.raises(ValueError, match="spmm_impl"):
+            StreamingCocluster(StreamConfig(n_row_clusters=4,
+                                            n_col_clusters=4,
+                                            spmm_impl="csr"))
 
 
 class TestCoverageProbability:
