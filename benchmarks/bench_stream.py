@@ -13,6 +13,11 @@ Two families of rows, both landing in ``BENCH_stream.json`` (see
                           fitted model (jitted ``assign_rows``/``assign_
                           cols``); µs per batch, derived carries QPS
                           (vectors assigned per second).
+  serve_topk_assign_k<k>  top-k multi-assignment serving (DESIGN.md §11,
+                          jitted ``assign_rows_topk``) at k=1 vs k=4; µs
+                          per batch (mean), derived carries QPS and p99
+                          latency — the marginal cost of overlap-mode
+                          serving over argmax serving.
 
 CPU numbers are architecture proxies (the Pallas scoring kernel executes
 in interpret mode off-TPU); the per-PR trajectory is the signal, as with
@@ -70,3 +75,22 @@ def run(report, *, quick: bool = False) -> None:
             jax.block_until_ready(fn(x))
         us = (time.perf_counter() - t0) / reps * 1e6
         report(f"{name},{us:.0f},qps={batch / (us / 1e6):.0f}")
+
+    # top-k multi-assignment serving: k=1 (argmax-equivalent) vs k=4 —
+    # per-rep latencies so the derived field can carry a p99 next to QPS
+    for k_top in (1, 4):
+        fn = jax.jit(lambda x, k_=k_top: streaming.assign_rows_topk(
+            model, x, k=k_))
+        jax.block_until_ready(fn(reqs))
+        # enough reps that the p99 is a real order statistic, not the
+        # sample max set by one scheduler hiccup
+        lat_us = []
+        for _ in range(100):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(reqs))
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+        lat = np.asarray(lat_us)
+        mean_us = float(lat.mean())
+        report(f"serve_topk_assign_k{k_top},{mean_us:.0f},"
+               f"qps={batch / (mean_us / 1e6):.0f};"
+               f"p99_us={float(np.percentile(lat, 99)):.0f}")

@@ -3,11 +3,17 @@ discovers document collections and their vocabularies simultaneously, then
 serves topic assignment for unseen documents from the fitted model.
 
     PYTHONPATH=src python examples/text_coclustering.py
+    PYTHONPATH=src python examples/text_coclustering.py --overlap
     PYTHONPATH=src python examples/text_coclustering.py --ckpt /path/to/model
 
 With ``--ckpt`` pointing at a saved CoclusterModel the fit is skipped and
 the checkpoint is served directly; an unfitted or stale checkpoint fails
 loudly (``streaming.ModelLoadError``) instead of producing garbage labels.
+``--overlap`` fits in the non-exhaustive assignment mode (DESIGN.md §11):
+terms that serve several collections keep *multiple* memberships (a real
+vocabulary effect — "model" belongs to both the CACM and MEDLINE
+vocabularies) and terms whose votes never concentrate are flagged as
+outliers instead of being forced into a topic.
 """
 
 import argparse
@@ -23,7 +29,7 @@ from repro.core.metrics import nmi
 from repro.data import classic4_proxy
 
 
-def fit_model(data, ckpt_dir: str):
+def fit_model(data, ckpt_dir: str, overlap: bool = False):
     a = jnp.asarray(data.matrix)
     print(f"doc-term matrix: {data.shape}, density {data.density:.3f}")
     cfg = LAMCConfig(
@@ -34,15 +40,36 @@ def fit_model(data, ckpt_dir: str):
         # terms, so out-of-sample scoring needs a wider anchor set than the
         # dense default (64) to see enough of each request
         signature_dim=256,
+        assignment="overlap" if overlap else "hard",
     )
     out = lamc_cocluster(a, cfg)
     s = cocluster_scores(np.asarray(out.row_labels), np.asarray(out.col_labels),
                          data.row_labels, data.col_labels)
     print(f"plan {out.plan.m}x{out.plan.n} T_p={out.plan.t_p} -> "
           f"NMI={s['nmi']:.3f} ARI={s['ari']:.3f}")
+    if overlap:
+        show_overlap(out)
     model = streaming.model_from_result(out)
     streaming.save_model(ckpt_dir, model, cfg=cfg, plan=out.plan)
     return model
+
+
+def show_overlap(out):
+    """Multi-membership demo: which terms straddle topic vocabularies."""
+    doc_m = np.asarray(out.row_membership)
+    term_m = np.asarray(out.col_membership)
+    for name, m in (("docs", doc_m), ("terms", term_m)):
+        card = m.sum(1)
+        multi, none = int((card >= 2).sum()), int((card == 0).sum())
+        print(f"{name}: {int((card == 1).sum())} single-topic, "
+              f"{multi} multi-topic, {none} outliers")
+    multi_terms = np.nonzero(term_m.sum(1) >= 2)[0]
+    for t in multi_terms[:8]:
+        topics = np.nonzero(term_m[t])[0].tolist()
+        votes = np.asarray(out.col_votes)[t]
+        share = votes / max(votes.sum(), 1)
+        print(f"  term {t}: topics {topics} "
+              f"(vote shares {[f'{share[c]:.2f}' for c in topics]})")
 
 
 def serve_from(model: streaming.CoclusterModel, data):
@@ -66,6 +93,9 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="serve this saved CoclusterModel instead of fitting")
     ap.add_argument("--n-docs", type=int, default=6000)
+    ap.add_argument("--overlap", action="store_true",
+                    help="fit in non-exhaustive overlap mode and demo "
+                         "multi-membership terms (DESIGN.md §11)")
     args = ap.parse_args()
 
     data = classic4_proxy(seed=0, n_docs=args.n_docs)
@@ -84,7 +114,7 @@ def main():
         return
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
-        fit_model(data, ckpt_dir)
+        fit_model(data, ckpt_dir, overlap=args.overlap)
         # serve from the *restored* artifact — the same path a separate
         # serving process would take
         model, _ = streaming.load_model(ckpt_dir)

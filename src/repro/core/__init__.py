@@ -9,8 +9,21 @@ Public API:
 """
 
 from .lamc import LAMCConfig, LAMCResult, lamc_cocluster
-from .merging import cluster_signatures, jaccard_merge_host, signature_merge
-from .metrics import ari, cocluster_scores, nmi
+from .merging import (
+    cluster_signatures,
+    finalize_assignment,
+    jaccard_merge_host,
+    memberships_from_votes,
+    signature_merge,
+)
+from .metrics import (
+    ari,
+    cocluster_scores,
+    membership_from_labels,
+    nmi,
+    omega_index,
+    overlap_f1,
+)
 from .nmtf import nmtf
 from .partition import (
     PartitionPlan,
@@ -35,5 +48,7 @@ __all__ = [
     "detection_probability", "failure_bound", "min_resamples", "plan_partition",
     "scc", "nmtf", "normalize_bipartite", "randomized_svd",
     "signature_merge", "jaccard_merge_host", "cluster_signatures",
+    "memberships_from_votes", "finalize_assignment",
     "nmi", "ari", "cocluster_scores",
+    "membership_from_labels", "omega_index", "overlap_f1",
 ]

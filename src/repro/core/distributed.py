@@ -37,7 +37,8 @@ from jax.sharding import PartitionSpec as P
 
 from . import merging, partition
 from . import sparse as _sparse
-from .lamc import LAMCConfig, LAMCResult, _atom_fn, anchor_features
+from .lamc import (LAMCConfig, LAMCResult, _atom_fn, anchor_features,
+                   validate_assignment)
 
 
 def _validate_input_format(a, cfg: LAMCConfig) -> None:
@@ -49,6 +50,7 @@ def _validate_input_format(a, cfg: LAMCConfig) -> None:
     multi-device mesh implies a multi-block plan.
     """
     _sparse.validate_spmm_impl(cfg.spmm_impl)
+    validate_assignment(cfg)
     if cfg.input_format == "bcoo":
         _sparse.validate_bcoo(a)
     elif _sparse.is_bcoo(a):
@@ -292,8 +294,17 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
             stk["col_sigs"], stk["col_counts"], stk["col_labels"], stk["col_pos"],
             kmerge,
         )
-        row_labels = jnp.argmax(row_votes, 1).astype(jnp.int32)
-        col_labels = jnp.argmax(col_votes, 1).astype(jnp.int32)
+        # assignment semantics shared with the single-host merge: the psum'd
+        # vote tables are bit-identical to the single-host scatter (small
+        # integer counts in f32, exact under any summation order), so the
+        # labels AND the overlap memberships match bit-for-bit at equal
+        # seeds (DESIGN.md §11).
+        row_labels, row_member = merging.finalize_assignment(
+            row_votes, cfg.assignment, cfg.overlap_threshold,
+            cfg.min_membership)
+        col_labels, col_member = merging.finalize_assignment(
+            col_votes, cfg.assignment, cfg.overlap_threshold,
+            cfg.min_membership)
         # serving signatures: cluster means over the anchor slivers under the
         # final consensus labels — tiny (K x q), replicated; GSPMD emits the
         # gathers for the sliver reads of the sharded matrix.
@@ -310,6 +321,7 @@ def lamc_step_fn(cfg: LAMCConfig, plan: partition.PartitionPlan,
             row_sigs=row_sigs, col_sigs=col_sigs,
             row_mean=row_mean, col_mean=col_mean,
             anchor_rows=anchor_rows, anchor_cols=anchor_cols,
+            row_membership=row_member, col_membership=col_member,
         )
 
     # data matrix sharded over the first two trailing mesh axes (row, col);
@@ -348,4 +360,6 @@ def distributed_lamc(mesh: Mesh, a: jax.Array, cfg: LAMCConfig,
                       row_sigs=out["row_sigs"], col_sigs=out["col_sigs"],
                       row_mean=out["row_mean"], col_mean=out["col_mean"],
                       anchor_rows=out["anchor_rows"],
-                      anchor_cols=out["anchor_cols"])
+                      anchor_cols=out["anchor_cols"],
+                      row_membership=out["row_membership"],
+                      col_membership=out["col_membership"])

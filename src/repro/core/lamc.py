@@ -28,7 +28,7 @@ from . import merging, nmtf, partition, probability, spectral
 from . import sparse as _sparse
 
 __all__ = ["LAMCConfig", "LAMCResult", "lamc_cocluster", "run_resample",
-           "anchor_features"]
+           "anchor_features", "validate_assignment"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +64,17 @@ class LAMCConfig:
     # densifying the block. Multi-block plans always densify their
     # phi x psi blocks (the MXU-shaped atom work unit, DESIGN.md §9).
     spmm_impl: str = "auto"
+    # Assignment mode (DESIGN.md §11). "hard" (default): every point gets
+    # exactly the argmax of its vote table — bit-identical to the
+    # pre-overlap pipeline. "overlap": non-exhaustive soft assignment —
+    # a point joins every cluster whose vote share clears
+    # overlap_threshold (membership matrices on the result); clearing
+    # none marks it an outlier (label -1) unless min_membership > 0
+    # guarantees its top clusters. overlap_threshold > 0.5 with
+    # min_membership=1 reduces exactly to hard mode.
+    assignment: str = "hard"
+    overlap_threshold: float = 0.25
+    min_membership: int = 0
 
     @property
     def atom_k(self) -> int:
@@ -89,6 +100,11 @@ class LAMCResult(NamedTuple):
     col_mean: jax.Array | None = None     # (q_col,)
     anchor_rows: jax.Array | None = None  # (q_col,) int32 global row ids
     anchor_cols: jax.Array | None = None  # (q_row,) int32 global col ids
+    # Boolean membership matrices (DESIGN.md §11): one-hot of the labels
+    # in hard mode; soft non-exhaustive membership in overlap mode
+    # (all-False row = outlier, label -1).
+    row_membership: jax.Array | None = None  # (M, K_row) bool
+    col_membership: jax.Array | None = None  # (N, K_col) bool
 
 
 def _atom_fn(cfg: LAMCConfig):
@@ -214,9 +230,27 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan,
         kmeans_iters=cfg.merge_kmeans_iters,
         n_restarts=cfg.merge_restarts,
         row_features=row_sliver, col_features=col_sliver.T,
+        assignment=cfg.assignment,
+        overlap_threshold=cfg.overlap_threshold,
+        min_membership=cfg.min_membership,
         **stacked,
     )
     return merged, anchor_rows, anchor_cols
+
+
+def validate_assignment(cfg: LAMCConfig) -> None:
+    """Fail loudly on bad assignment knobs before any jit trace."""
+    if cfg.assignment not in ("hard", "overlap"):
+        raise ValueError(
+            f"assignment must be 'hard' or 'overlap', got {cfg.assignment!r}")
+    if not 0.0 < cfg.overlap_threshold <= 1.0:
+        raise ValueError(
+            f"overlap_threshold must be in (0, 1], got {cfg.overlap_threshold}")
+    if not 0 <= cfg.min_membership <= min(cfg.n_row_clusters,
+                                          cfg.n_col_clusters):
+        raise ValueError(
+            f"min_membership must be in [0, n_clusters], got "
+            f"{cfg.min_membership}")
 
 
 def lamc_cocluster(a, cfg: LAMCConfig,
@@ -234,6 +268,7 @@ def lamc_cocluster(a, cfg: LAMCConfig,
     sparse operator — converted once, amortized across all resamples.
     """
     _sparse.validate_spmm_impl(cfg.spmm_impl)
+    validate_assignment(cfg)
     if cfg.input_format == "bcoo":
         _sparse.validate_bcoo(a)
         density = _sparse.density(a)
@@ -286,4 +321,6 @@ def lamc_cocluster(a, cfg: LAMCConfig,
                       merged.row_votes, merged.col_votes, plan,
                       row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,
                       row_mean=merged.row_mean, col_mean=merged.col_mean,
-                      anchor_rows=anchor_rows, anchor_cols=anchor_cols)
+                      anchor_rows=anchor_rows, anchor_cols=anchor_cols,
+                      row_membership=merged.row_membership,
+                      col_membership=merged.col_membership)

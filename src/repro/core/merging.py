@@ -44,13 +44,15 @@ __all__ = [
     "anchor_indices",
     "atom_signatures",
     "cluster_signatures",
+    "memberships_from_votes",
+    "finalize_assignment",
     "signature_merge",
     "jaccard_merge_host",
 ]
 
 
 class MergeResult(NamedTuple):
-    row_labels: jax.Array   # (M,) int32
+    row_labels: jax.Array   # (M,) int32 (-1 = outlier in overlap mode)
     col_labels: jax.Array   # (N,) int32
     row_votes: jax.Array    # (M, K_row) vote counts (support/confidence)
     col_votes: jax.Array    # (N, K_col)
@@ -60,6 +62,74 @@ class MergeResult(NamedTuple):
     col_sigs: jax.Array | None = None   # (K_col, q_col)
     row_mean: jax.Array | None = None   # (q_row,) centering mean
     col_mean: jax.Array | None = None   # (q_col,)
+    # Boolean membership matrices (DESIGN.md §11): hard mode emits the
+    # one-hot of the labels; overlap mode keeps every cluster whose vote
+    # share clears the threshold (a point clearing none is an outlier —
+    # all-False row, label -1).
+    row_membership: jax.Array | None = None  # (M, K_row) bool
+    col_membership: jax.Array | None = None  # (N, K_col) bool
+
+
+def memberships_from_votes(
+    votes: jax.Array,          # (P, K) per-point vote counts
+    overlap_threshold: float,
+    min_membership: int = 0,
+) -> jax.Array:
+    """Boolean membership ``(P, K)`` from a vote table (DESIGN.md §11).
+
+    A point joins every cluster whose *vote share* — its votes divided by
+    the point's total votes — is at least ``overlap_threshold``; clearing
+    none leaves the row all-False (the point is an outlier).
+    ``min_membership > 0`` guarantees the top-``min_membership`` clusters
+    by share regardless of the threshold (ties broken toward the lower
+    cluster id, exactly like ``argmax``), so ``min_membership=1`` rules
+    outliers out and ``overlap_threshold > 0.5`` with ``min_membership=1``
+    reduces membership to the one-hot of the hard labels — shares sum to
+    1, so at most one cluster can clear a majority threshold and the
+    argmax guarantee fills in when none does. Jittable; shared by the
+    single-host merge, the distributed merge (applied to the psum'd vote
+    tables — bit-identical because the votes are), and the streaming
+    model helpers.
+    """
+    votes = votes.astype(jnp.float32)
+    total = jnp.sum(votes, axis=1, keepdims=True)
+    share = votes / jnp.maximum(total, 1.0)
+    member = share >= overlap_threshold
+    if min_membership > 0:
+        # rank clusters per point by descending share; stable argsort
+        # keeps the lower id first among ties, matching argmax
+        order = jnp.argsort(-share, axis=1, stable=True)
+        rank = jnp.argsort(order, axis=1, stable=True)
+        member = member | (rank < min_membership)
+    return member
+
+
+def finalize_assignment(
+    votes: jax.Array,
+    assignment: str = "hard",
+    overlap_threshold: float = 0.25,
+    min_membership: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """``(labels, membership)`` from a vote table.
+
+    ``assignment="hard"``: labels are the plain argmax (bit-identical to
+    the pre-overlap pipeline) and membership is their one-hot.
+    ``assignment="overlap"``: membership per
+    :func:`memberships_from_votes`; labels keep the argmax for points
+    with at least one membership and mark the rest ``-1`` (outliers).
+    The single source of assignment semantics for the single-host merge,
+    the distributed merge, and the streaming model.
+    """
+    argmax = jnp.argmax(votes, axis=1).astype(jnp.int32)
+    if assignment == "hard":
+        k = votes.shape[1]
+        return argmax, jax.nn.one_hot(argmax, k, dtype=jnp.bool_)
+    if assignment != "overlap":
+        raise ValueError(
+            f"assignment must be 'hard' or 'overlap', got {assignment!r}")
+    member = memberships_from_votes(votes, overlap_threshold, min_membership)
+    labels = jnp.where(jnp.any(member, axis=1), argmax, -1).astype(jnp.int32)
+    return labels, member
 
 
 def anchor_indices(seed_key: jax.Array, length: int, q: int) -> jax.Array:
@@ -173,6 +243,9 @@ def signature_merge(
     n_restarts: int = 4,
     row_features: jax.Array | None = None,   # (M, q_row) anchor-col sliver
     col_features: jax.Array | None = None,   # (N, q_col) anchor-row sliver
+    assignment: str = "hard",
+    overlap_threshold: float = 0.25,
+    min_membership: int = 0,
 ) -> MergeResult:
     """Jittable consensus merge. See module docstring for the scheme.
 
@@ -181,6 +254,12 @@ def signature_merge(
     result additionally carries the per-cluster serving signatures
     (:func:`cluster_signatures`) so the fitted model can assign
     out-of-sample rows/columns without the data matrix.
+
+    ``assignment="overlap"`` keeps the per-point vote tables un-argmax'd:
+    membership matrices come from :func:`memberships_from_votes` (soft,
+    non-exhaustive — points may join several clusters or none), labels
+    carry ``-1`` for outliers, and serving signatures are means over the
+    non-outlier points only (``one_hot(-1)`` is the zero row).
     """
     kr, kc = jax.random.split(key)
     t_p, b, k, _q = row_sigs.shape
@@ -201,7 +280,8 @@ def signature_merge(
         rows_of_block.reshape(-1),
         point_global.reshape(-1),
     ].add(1.0)
-    final_rows = jnp.argmax(row_votes, axis=1).astype(jnp.int32)
+    final_rows, row_member = finalize_assignment(
+        row_votes, assignment, overlap_threshold, min_membership)
 
     # --- cols ---
     atom_global_c = _cluster_atoms(kc, col_sigs, col_counts, k_col, kmeans_iters,
@@ -214,7 +294,8 @@ def signature_merge(
         cols_of_block.reshape(-1),
         point_global_c.reshape(-1),
     ].add(1.0)
-    final_cols = jnp.argmax(col_votes, axis=1).astype(jnp.int32)
+    final_cols, col_member = finalize_assignment(
+        col_votes, assignment, overlap_threshold, min_membership)
 
     row_sigs = col_sigs_out = row_mean = col_mean = None
     if row_features is not None:
@@ -223,7 +304,8 @@ def signature_merge(
         col_sigs_out, col_mean, _ = cluster_signatures(col_features, final_cols, k_col)
     return MergeResult(final_rows, final_cols, row_votes, col_votes,
                        row_sigs=row_sigs, col_sigs=col_sigs_out,
-                       row_mean=row_mean, col_mean=col_mean)
+                       row_mean=row_mean, col_mean=col_mean,
+                       row_membership=row_member, col_membership=col_member)
 
 
 # ---------------------------------------------------------------------------

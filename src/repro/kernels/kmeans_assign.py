@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["kmeans_assign_pallas", "cosine_assign_pallas"]
+__all__ = ["kmeans_assign_pallas", "cosine_assign_pallas",
+           "cosine_topk_pallas"]
 
 
 def _kernel(x_ref, c_ref, labels_ref, d2_ref):
@@ -99,6 +100,68 @@ def _cosine_kernel(k_valid, x_ref, s_ref, labels_ref, score_ref):
     xs = jnp.where(valid, xs, -jnp.inf)
     labels_ref[...] = jnp.argmax(xs, axis=-1).astype(jnp.int32)
     score_ref[...] = jnp.max(xs, axis=-1)
+
+
+def _cosine_topk_kernel(k_valid, k_top, x_ref, s_ref, labels_ref, score_ref):
+    x = x_ref[...].astype(jnp.float32)               # (TP, D)
+    s = s_ref[...].astype(jnp.float32)               # (K, D)
+    xs = jax.lax.dot_general(
+        x, s,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (TP, K) on the MXU
+    valid = jax.lax.broadcasted_iota(jnp.int32, xs.shape, 1) < k_valid
+    xs = jnp.where(valid, xs, -jnp.inf)
+    # iterative select-and-mask: k_top is static and small, so this
+    # unrolls to k_top argmax/VPU passes over the VMEM-resident (TP, K)
+    # score tile — no sort network, no HBM traffic. Ties go to the lower
+    # cluster id each round, matching jax.lax.top_k (the ref oracle).
+    labs, scores = [], []
+    for _ in range(k_top):
+        lab = jnp.argmax(xs, axis=-1).astype(jnp.int32)   # (TP,)
+        scores.append(jnp.max(xs, axis=-1))
+        labs.append(lab)
+        taken = jax.lax.broadcasted_iota(jnp.int32, xs.shape, 1) == lab[:, None]
+        xs = jnp.where(taken, -jnp.inf, xs)
+    labels_ref[...] = jnp.stack(labs, axis=1)
+    score_ref[...] = jnp.stack(scores, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_valid", "k_top", "tile_p", "interpret"))
+def cosine_topk_pallas(
+    x: jax.Array,           # (P, D) — P and D already padded by ops.py
+    signatures: jax.Array,  # (K, D) — K padded with zero rows
+    k_valid: int,
+    k_top: int,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-``k_top`` signature scoring: the multi-assignment serving twin
+    of :func:`cosine_assign_pallas` (DESIGN.md §11). Returns
+    ``(labels (P, k_top) int32, scores (P, k_top) f32)`` ordered by
+    descending score. Use ``repro.kernels.ops.cosine_topk`` for the
+    shape-safe public wrapper (padding, k validation, CPU fallback)."""
+    p, d = x.shape
+    k, _ = signatures.shape
+    grid = (pl.cdiv(p, tile_p),)
+    return pl.pallas_call(
+        functools.partial(_cosine_topk_kernel, k_valid, k_top),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_p, k_top), lambda i: (i, 0)),
+            pl.BlockSpec((tile_p, k_top), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, k_top), jnp.int32),
+            jax.ShapeDtypeStruct((p, k_top), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, signatures)
 
 
 @functools.partial(jax.jit, static_argnames=("k_valid", "tile_p", "interpret"))

@@ -24,12 +24,13 @@ import jax.numpy as jnp
 from . import ref
 from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
-from .kmeans_assign import cosine_assign_pallas, kmeans_assign_pallas
+from .kmeans_assign import (cosine_assign_pallas, cosine_topk_pallas,
+                            kmeans_assign_pallas)
 from .kmeans_update import kmeans_update_pallas
 from .spmm import (BlockSparseMatrix, bcoo_to_block_sparse, spmm_ata_pallas,
                    spmm_pallas, spmm_t_pallas)
 
-__all__ = ["kmeans_assign", "kmeans_update", "cosine_assign",
+__all__ = ["kmeans_assign", "kmeans_update", "cosine_assign", "cosine_topk",
            "bipartite_normalize", "flash_attention", "spmm", "sddmm",
            "spmm_tiled", "spmm_ata", "BlockSparseMatrix",
            "bcoo_to_block_sparse"]
@@ -101,6 +102,31 @@ def cosine_assign(x: jax.Array, signatures: jax.Array,
     labels, score = cosine_assign_pallas(
         xp, sp, k_valid=k, tile_p=tile_p, interpret=_interpret())
     return labels[:p], score[:p]
+
+
+def cosine_topk(x: jax.Array, signatures: jax.Array, k: int,
+                tile_p: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Top-``k`` signature scoring: the multi-assignment serving variant
+    of :func:`cosine_assign` (DESIGN.md §11).
+
+    Returns ``(labels (P, k), scores (P, k))`` ordered by descending
+    score, ties toward the lower cluster id (matching ``jax.lax.top_k``
+    and the k=1 ``cosine_assign`` argmax exactly). ``k`` must not exceed
+    the number of real signature rows — padded rows are masked to -inf
+    and must never surface in a top-k slot.
+    """
+    p, d = x.shape
+    n_sigs = signatures.shape[0]
+    if not 1 <= k <= n_sigs:
+        raise ValueError(
+            f"top-k width must be in [1, {n_sigs}] (the signature count), "
+            f"got k={k}")
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
+    sp = _pad_to(_pad_to(signatures, 1, 128), 0, 8)
+    labels, scores = cosine_topk_pallas(
+        xp, sp, k_valid=n_sigs, k_top=k, tile_p=tile_p,
+        interpret=_interpret())
+    return labels[:p], scores[:p]
 
 
 def kmeans_update(x: jax.Array, centroids: jax.Array,

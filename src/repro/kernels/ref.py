@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["kmeans_assign_ref", "kmeans_update_ref", "cosine_assign_ref",
-           "bipartite_normalize_ref", "attention_ref", "spmm_ref",
-           "spmm_block_ref", "sddmm_ref"]
+           "cosine_topk_ref", "bipartite_normalize_ref", "attention_ref",
+           "spmm_ref", "spmm_block_ref", "sddmm_ref"]
 
 
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
@@ -56,6 +56,20 @@ def cosine_assign_ref(x: jax.Array, signatures: jax.Array):
     """
     xs = x.astype(jnp.float32) @ signatures.astype(jnp.float32).T   # (P, K)
     return jnp.argmax(xs, axis=-1).astype(jnp.int32), jnp.max(xs, axis=-1)
+
+
+def cosine_topk_ref(x: jax.Array, signatures: jax.Array, k: int):
+    """Top-``k`` dot-score assignment: ``(labels (P, k), scores (P, k))``.
+
+    The multi-assignment serving oracle (DESIGN.md §11): the ``k`` best
+    clusters per point by cosine against unit signatures, descending.
+    ``jax.lax.top_k`` breaks ties toward the lower cluster id — the same
+    order as iterating argmax-and-mask, which is what the Pallas twin
+    does. Row ``[:, 0]`` equals :func:`cosine_assign_ref` exactly.
+    """
+    xs = x.astype(jnp.float32) @ signatures.astype(jnp.float32).T   # (P, K)
+    scores, labels = jax.lax.top_k(xs, k)
+    return labels.astype(jnp.int32), scores
 
 
 def bipartite_normalize_ref(a: jax.Array, d1: jax.Array, d2: jax.Array,

@@ -10,7 +10,14 @@ system:
 ``launch/serve_lamc.py`` is the batched request-loop driver on top.
 """
 
-from .assign import AssignResult, assign_cols, assign_rows
+from .assign import (
+    AssignResult,
+    TopKAssignResult,
+    assign_cols,
+    assign_cols_topk,
+    assign_rows,
+    assign_rows_topk,
+)
 from .fit import (
     FitStats,
     StreamConfig,
@@ -25,13 +32,15 @@ from .model import (
     ModelLoadError,
     load_model,
     model_from_result,
+    model_memberships,
     save_model,
 )
 
 __all__ = [
     "CoclusterModel", "ModelLoadError", "MODEL_KIND",
-    "model_from_result", "save_model", "load_model",
+    "model_from_result", "model_memberships", "save_model", "load_model",
     "StreamConfig", "StreamingCocluster", "FitStats", "fit",
     "iter_row_chunks", "stream_config_from_lamc",
-    "AssignResult", "assign_rows", "assign_cols",
+    "AssignResult", "TopKAssignResult", "assign_rows", "assign_cols",
+    "assign_rows_topk", "assign_cols_topk",
 ]

@@ -30,7 +30,8 @@ from repro.kernels import ops as _kops
 
 from .model import CoclusterModel
 
-__all__ = ["AssignResult", "assign_rows", "assign_cols"]
+__all__ = ["AssignResult", "TopKAssignResult", "assign_rows", "assign_cols",
+           "assign_rows_topk", "assign_cols_topk"]
 
 
 class AssignResult(NamedTuple):
@@ -38,10 +39,26 @@ class AssignResult(NamedTuple):
     score: jax.Array    # (B,) f32 winning cosine score (confidence)
 
 
+class TopKAssignResult(NamedTuple):
+    """Multi-assignment serving result (DESIGN.md §11): the ``k`` best
+    clusters per request, descending by score. ``labels[:, 0]`` /
+    ``scores[:, 0]`` equal the k=1 :class:`AssignResult` exactly."""
+
+    labels: jax.Array   # (B, k) int32 cluster ids, best first
+    scores: jax.Array   # (B, k) f32 cosine scores, descending
+
+
 def _assign(feats: jax.Array, mean: jax.Array, sigs: jax.Array) -> AssignResult:
     f = feats.astype(jnp.float32) - mean[None, :]
     labels, score = _kops.cosine_assign(f, sigs)
     return AssignResult(labels, score)
+
+
+def _assign_topk(feats: jax.Array, mean: jax.Array, sigs: jax.Array,
+                 k: int) -> TopKAssignResult:
+    f = feats.astype(jnp.float32) - mean[None, :]
+    labels, scores = _kops.cosine_topk(f, sigs, k)
+    return TopKAssignResult(labels, scores)
 
 
 def _gather_anchor(x, anchor: jax.Array) -> jax.Array:
@@ -73,3 +90,33 @@ def assign_cols(model: CoclusterModel, y) -> AssignResult:
             f"{shape}")
     return _assign(_gather_anchor(y, model.anchor_rows),
                    model.col_mean, model.col_sigs)
+
+
+def assign_rows_topk(model: CoclusterModel, x, k: int = 4) -> TopKAssignResult:
+    """Top-``k`` row-cluster assignment of ``x (B, N)`` (dense or BCOO).
+
+    The overlap-mode serving path: instead of argmax-ing the signature
+    scores, return the ``k`` best clusters per request (descending), so
+    a caller can threshold the score column for soft multi-membership —
+    the serving analogue of the vote-share membership rule. Runs through
+    the top-k Pallas scoring kernel (``kernels.ops.cosine_topk``, oracle
+    ``kernels.ref.cosine_topk_ref``).
+    """
+    shape = _request_shape(x)
+    if len(shape) != 2 or shape[1] != model.n_cols:
+        raise ValueError(
+            f"assign_rows_topk expects (B, {model.n_cols}) row vectors, got "
+            f"{shape}")
+    return _assign_topk(_gather_anchor(x, model.anchor_cols),
+                        model.row_mean, model.row_sigs, k)
+
+
+def assign_cols_topk(model: CoclusterModel, y, k: int = 4) -> TopKAssignResult:
+    """Top-``k`` col-cluster assignment of ``y (B, M)`` (dense or BCOO)."""
+    shape = _request_shape(y)
+    if len(shape) != 2 or shape[1] != model.n_rows:
+        raise ValueError(
+            f"assign_cols_topk expects (B, {model.n_rows}) column vectors, "
+            f"got {shape}")
+    return _assign_topk(_gather_anchor(y, model.anchor_rows),
+                        model.col_mean, model.col_sigs, k)

@@ -57,6 +57,7 @@ from repro.core import merging as _merging
 from repro.core import sparse as _sparse
 from repro.core import spectral as _spectral
 from repro.core.lamc import LAMCConfig
+from repro.core.lamc import validate_assignment as _validate_assignment
 
 from .model import CoclusterModel
 
@@ -92,6 +93,15 @@ class StreamConfig:
     # backend — its trade is scatter vs densify). Either way the block
     # values are bit-identical — this is a memory/compute trade only.
     spmm_impl: str = "auto"
+    # Assignment knobs mirrored from LAMCConfig (DESIGN.md §11), applied
+    # at finalize(): "overlap" marks rows whose vote share clears no
+    # cluster as outliers (label -1), exactly like the batch drivers.
+    # The CoclusterModel keeps the full vote tables either way, so
+    # membership *matrices* stay a load-time view
+    # (``model_memberships``) with whatever knobs the caller passes.
+    assignment: str = "hard"
+    overlap_threshold: float = 0.25
+    min_membership: int = 0
 
     @property
     def atom_k(self) -> int:
@@ -117,6 +127,8 @@ def stream_config_from_lamc(cfg: LAMCConfig, **overrides) -> StreamConfig:
         merge_kmeans_iters=cfg.merge_kmeans_iters,
         merge_restarts=cfg.merge_restarts, assign_impl=cfg.assign_impl,
         qr_method=cfg.qr_method, spmm_impl=cfg.spmm_impl,
+        assignment=cfg.assignment, overlap_threshold=cfg.overlap_threshold,
+        min_membership=cfg.min_membership,
     )
     base.update(overrides)
     return StreamConfig(**base)
@@ -184,6 +196,8 @@ class StreamingCocluster:
 
     def __init__(self, cfg: StreamConfig):
         _sparse.validate_spmm_impl(cfg.spmm_impl)
+        # StreamConfig mirrors every attribute the shared validator reads
+        _validate_assignment(cfg)
         self.cfg = cfg
         self._n_cols: int | None = None
         self._anchor_cols: jax.Array | None = None
@@ -364,7 +378,12 @@ class StreamingCocluster:
                       1.0)
             vote_rows.append(votes)
         row_votes = jnp.asarray(np.concatenate(vote_rows, axis=0))
-        row_labels = jnp.argmax(row_votes, axis=1).astype(jnp.int32)
+        # assignment semantics shared with the batch drivers (§11):
+        # overlap mode marks rows whose vote share clears no cluster as
+        # outliers (-1); the vote tables ride in the model either way
+        row_labels, _ = _merging.finalize_assignment(
+            row_votes, cfg.assignment, cfg.overlap_threshold,
+            cfg.min_membership)
 
         # row serving signatures: atom anchor-feature sums grouped by the
         # atoms' global cluster, centered by the global anchor mean

@@ -31,8 +31,8 @@ from repro import checkpoint as _ckpt
 from repro.core.lamc import LAMCConfig, LAMCResult
 from repro.core.partition import PartitionPlan
 
-__all__ = ["CoclusterModel", "model_from_result", "save_model", "load_model",
-           "ModelLoadError", "MODEL_KIND"]
+__all__ = ["CoclusterModel", "model_from_result", "model_memberships",
+           "save_model", "load_model", "ModelLoadError", "MODEL_KIND"]
 
 MODEL_KIND = "cocluster_model"
 _MODEL_VERSION = 1
@@ -96,6 +96,28 @@ def model_from_result(result: LAMCResult) -> CoclusterModel:
         row_mean=result.row_mean, col_mean=result.col_mean,
         anchor_rows=result.anchor_rows, anchor_cols=result.anchor_cols,
     )
+
+
+def model_memberships(model: CoclusterModel, overlap_threshold: float = 0.25,
+                      min_membership: int = 0):
+    """Overlap-mode membership matrices from the fitted vote tables.
+
+    ``(row_membership (M, K_row) bool, col_membership (N, K_col) bool)``
+    under the vote-share rule of ``merging.memberships_from_votes``
+    (DESIGN.md §11). The vote tables are part of the artifact, so the
+    membership view is *derived at load time* with any knobs — the
+    checkpoint schema stays fixed and one saved model serves hard labels,
+    top-k assignment, and thresholded membership alike. A model whose
+    ``col_votes`` are the one-hot of its column labels (the streaming
+    fitter's finalize) yields single memberships for columns, as it
+    should: the stream saw each column profile once.
+    """
+    from repro.core import merging as _merging
+
+    return (_merging.memberships_from_votes(
+                model.row_votes, overlap_threshold, min_membership),
+            _merging.memberships_from_votes(
+                model.col_votes, overlap_threshold, min_membership))
 
 
 def save_model(ckpt_dir: str, model: CoclusterModel,

@@ -75,6 +75,120 @@ class TestUnassigned:
         assert metrics.ari(a, b) == 1.0
 
 
+class TestDegenerateBoundaries:
+    """Single-cluster and all-filtered inputs score 0.0 — never NaN.
+
+    These are reachable in overlap mode: outlier filtering can drop every
+    point, and a forcing threshold can leave one populated cluster.
+    """
+
+    def test_all_points_filtered(self):
+        a = np.array([-1, -1, -1])
+        b = np.array([0, 1, 2])
+        assert metrics.nmi(a, b) == 0.0
+        assert metrics.ari(a, b) == 0.0
+
+    def test_single_cluster_both(self):
+        a = np.array([0, 0, 0, 0])
+        assert metrics.nmi(a, a) == 0.0
+        assert metrics.ari(a, a) == 0.0
+
+    def test_single_cluster_vs_split(self):
+        a = np.array([0, 0, 0, 0])
+        b = np.array([0, 0, 1, 1])
+        v = metrics.nmi(a, b)
+        assert 0.0 <= v <= 1.0 and np.isfinite(v)
+        assert np.isfinite(metrics.ari(a, b))
+
+    def test_single_surviving_point(self):
+        a = np.array([0, -1, -1])
+        b = np.array([1, -1, -1])
+        assert metrics.nmi(a, b) == 0.0
+        assert metrics.ari(a, b) == 0.0
+
+    def test_all_singletons(self):
+        a = np.arange(5)
+        assert metrics.ari(a, a) == 0.0  # no within-cluster pairs: chance
+
+    def test_no_nan_on_adversarial_pairs(self):
+        cases = [
+            (np.array([], np.int64), np.array([], np.int64)),
+            (np.array([0]), np.array([0])),
+            (np.array([0, 0]), np.array([0, 1])),
+            (np.array([-1, 0]), np.array([0, -1])),
+        ]
+        for a, b in cases:
+            assert np.isfinite(metrics.nmi(a, b))
+            assert np.isfinite(metrics.ari(a, b))
+
+
+class TestOmegaIndex:
+    def test_hand_computed_contingency(self):
+        # 3 points, pairs (0,1) (0,2) (1,2).
+        # a: shared counts 1, 0, 1 -> t_a = [1, 2]/3
+        # b: shared counts 1, 0, 0 -> t_b = [2, 1]/3
+        # agree on (0,1) and (0,2): A = 2/3
+        # expected = (1/3)(2/3) + (2/3)(1/3) = 4/9
+        # omega = (2/3 - 4/9) / (1 - 4/9) = 0.4
+        a = np.array([[1, 0], [1, 1], [0, 1]], bool)
+        b = np.array([[1, 0], [1, 0], [0, 1]], bool)
+        assert abs(metrics.omega_index(a, b) - 0.4) < 1e-12
+
+    def test_perfect_agreement_with_overlap(self):
+        a = np.array([[1, 0], [1, 1], [0, 1], [0, 0]], bool)
+        assert metrics.omega_index(a, a) == 1.0
+
+    def test_reduces_to_ari_on_disjoint(self):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 3, 60)
+        b = rng.integers(0, 3, 60)
+        assert abs(metrics.omega_index(a, b) - metrics.ari(a, b)) < 1e-10
+
+    def test_label_vectors_accepted(self):
+        a = np.array([0, 0, 1, 1, -1])
+        mem = metrics.membership_from_labels(a)
+        assert metrics.omega_index(a, mem) == 1.0
+
+    def test_chance_level_near_zero(self):
+        rng = np.random.default_rng(1)
+        a = rng.random((300, 4)) < 0.3
+        b = rng.random((300, 4)) < 0.3
+        assert abs(metrics.omega_index(a, b)) < 0.05
+
+    def test_point_count_mismatch_raises(self):
+        import pytest
+
+        with pytest.raises(ValueError, match="mismatch"):
+            metrics.omega_index(np.zeros((3, 2), bool), np.zeros((4, 2), bool))
+
+
+class TestOverlapF1:
+    def test_perfect(self):
+        a = np.array([[1, 0], [1, 1], [0, 1]], bool)
+        assert metrics.overlap_f1(a, a) == 1.0
+
+    def test_hand_computed(self):
+        # true cluster 0 = {0,1}, cluster 1 = {2,3}
+        # pred cluster 0 = {0,1,2} -> F1 vs t0 = 2*2/(2+3) = 0.8,
+        #                             F1 vs t1 = 2*1/(2+3) = 0.4
+        # forward (weights 2,2): best for t0 = 0.8, t1 = 0.4 -> 0.6
+        # reverse (single pred cluster): best = 0.8
+        true = np.array([[1, 0], [1, 0], [0, 1], [0, 1]], bool)
+        pred = np.array([[1], [1], [1], [0]], bool)
+        expect = 0.5 * (0.6 + 0.8)
+        assert abs(metrics.overlap_f1(pred, true) - expect) < 1e-12
+
+    def test_empty_prediction(self):
+        true = np.array([[1, 0], [0, 1]], bool)
+        pred = np.zeros((2, 2), bool)
+        assert metrics.overlap_f1(pred, true) == 0.0
+
+    def test_membership_from_labels_shapes(self):
+        m = metrics.membership_from_labels(np.array([0, 2, -1]), k=4)
+        assert m.shape == (3, 4)
+        assert m.sum() == 2 and not m[2].any()
+
+
 class TestCoclusterScores:
     def test_keys_and_averaging(self):
         a = np.array([0, 0, 1, 1])

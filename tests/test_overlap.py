@@ -1,0 +1,407 @@
+"""Overlapping & non-exhaustive assignment mode, end to end (DESIGN.md §11).
+
+Locks down the three contracts of the overlap tentpole:
+
+  1. Hard mode is bit-identical to the pre-overlap pipeline (golden
+     label hashes captured before the mode existed, dense and BCOO).
+  2. Overlap with a forcing threshold (``overlap_threshold > 0.5``,
+     ``min_membership=1``) reduces *exactly* to hard mode — labels and
+     memberships — on the dense, BCOO, and distributed paths.
+  3. At default knobs, overlap mode recovers planted overlapping
+     ground truth: omega index >= 0.8 on the planted generator.
+
+Plus the serving side: top-k scoring kernel vs its oracle, streaming
+``assign_*_topk`` consistency with the k=1 path, and membership views of
+a fitted model.
+"""
+
+import dataclasses
+import hashlib
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LAMCConfig,
+    lamc_cocluster,
+    memberships_from_votes,
+    omega_index,
+    overlap_f1,
+)
+from repro.core.merging import finalize_assignment
+from repro.core.partition import PartitionPlan
+from repro.data import planted_cocluster_matrix, to_bcoo
+from repro.data.synthetic import planted_overlapping_cocluster_matrix
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _sha(x) -> str:
+    return hashlib.sha256(np.asarray(x).tobytes()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def dense_case():
+    rng = np.random.default_rng(0)
+    data = planted_cocluster_matrix(rng, 300, 240, k=4, d=4, signal=4.0,
+                                    noise=0.6)
+    plan = PartitionPlan(300, 240, m=2, n=2, phi=150, psi=120, t_p=3, seed=0)
+    cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4)
+    return data, plan, cfg
+
+
+class TestHardModeGolden:
+    """Hard-mode labels must stay bit-identical to the pre-overlap PR."""
+
+    def test_dense_golden_hashes(self, dense_case):
+        data, plan, cfg = dense_case
+        out = lamc_cocluster(jnp.asarray(data.matrix), cfg, plan=plan)
+        assert _sha(out.row_labels) == (
+            "140bfb2d037ae0be9e3137976f6c18a8445089a3d7121097cbc5a49cee478256")
+        assert _sha(out.col_labels) == (
+            "21b85dc1a680597a1e668bc6f6a6d002135644a8614c2feac9c6fb9305a8b6fb")
+
+    def test_bcoo_golden_hashes(self):
+        rng = np.random.default_rng(0)
+        # same generator sequence as the capture script: a dense draw first
+        planted_cocluster_matrix(rng, 300, 240, k=4, d=4, signal=4.0, noise=0.6)
+        data = planted_cocluster_matrix(rng, 256, 192, k=3, d=3, signal=5.0,
+                                        noise=0.4, density=0.3)
+        cfg = LAMCConfig(n_row_clusters=3, n_col_clusters=3,
+                         input_format="bcoo")
+        plan = PartitionPlan(256, 192, m=2, n=2, phi=128, psi=96, t_p=2, seed=1)
+        out = lamc_cocluster(to_bcoo(data.matrix), cfg, plan=plan)
+        assert _sha(out.row_labels) == (
+            "6e64ddbf87f6b0ca148dfb9936d042f45417e8816697ff97f3340a2b8f1feda0")
+        assert _sha(out.col_labels) == (
+            "aad1a94f634ce317fa9e428db7a32da3bcdafd94501a1793e8734b7033797e3a")
+
+    def test_hard_membership_is_one_hot(self, dense_case):
+        data, plan, cfg = dense_case
+        out = lamc_cocluster(jnp.asarray(data.matrix), cfg, plan=plan)
+        mem = np.asarray(out.row_membership)
+        labels = np.asarray(out.row_labels)
+        assert mem.dtype == bool and mem.shape == (300, 4)
+        assert (mem.sum(1) == 1).all()
+        assert (mem.argmax(1) == labels).all()
+
+
+class TestForcingReduction:
+    """overlap_threshold > 0.5 with min_membership=1 == hard, exactly."""
+
+    def test_dense_reduction(self, dense_case):
+        data, plan, cfg = dense_case
+        a = jnp.asarray(data.matrix)
+        hard = lamc_cocluster(a, cfg, plan=plan)
+        forced = lamc_cocluster(
+            a, dataclasses.replace(cfg, assignment="overlap",
+                                   overlap_threshold=1.0, min_membership=1),
+            plan=plan)
+        assert np.array_equal(np.asarray(hard.row_labels),
+                              np.asarray(forced.row_labels))
+        assert np.array_equal(np.asarray(hard.col_labels),
+                              np.asarray(forced.col_labels))
+        assert np.array_equal(np.asarray(hard.row_membership),
+                              np.asarray(forced.row_membership))
+        assert np.array_equal(np.asarray(hard.col_membership),
+                              np.asarray(forced.col_membership))
+
+    def test_bcoo_reduction(self):
+        rng = np.random.default_rng(3)
+        data = planted_cocluster_matrix(rng, 200, 160, k=3, d=3, signal=5.0,
+                                        noise=0.4, density=0.25)
+        plan = PartitionPlan(200, 160, m=2, n=2, phi=100, psi=80, t_p=2, seed=2)
+        cfg = LAMCConfig(n_row_clusters=3, n_col_clusters=3,
+                         input_format="bcoo")
+        b = to_bcoo(data.matrix)
+        hard = lamc_cocluster(b, cfg, plan=plan)
+        forced = lamc_cocluster(
+            b, dataclasses.replace(cfg, assignment="overlap",
+                                   overlap_threshold=0.51, min_membership=1),
+            plan=plan)
+        assert np.array_equal(np.asarray(hard.row_labels),
+                              np.asarray(forced.row_labels))
+        assert np.array_equal(np.asarray(hard.row_membership),
+                              np.asarray(forced.row_membership))
+        assert np.array_equal(np.asarray(hard.col_membership),
+                              np.asarray(forced.col_membership))
+
+
+class TestVoteMembership:
+    """Unit semantics of the vote-share membership rule."""
+
+    def test_threshold_and_outlier(self):
+        votes = jnp.asarray([[8.0, 0.0, 0.0],    # pure: one membership
+                             [4.0, 4.0, 0.0],    # split: two memberships
+                             [3.0, 3.0, 2.0],    # scattered, thr catches 2
+                             [1.0, 1.0, 1.0]])   # uniform below thr: outlier
+        mem = np.asarray(memberships_from_votes(votes, 0.37))
+        assert mem.tolist() == [[True, False, False],
+                                [True, True, False],
+                                [True, True, False],
+                                [False, False, False]]
+
+    def test_min_membership_guarantee(self):
+        votes = jnp.asarray([[1.0, 1.0, 1.0], [0.0, 0.0, 0.0]])
+        mem = np.asarray(memberships_from_votes(votes, 0.9, min_membership=1))
+        # argmax (ties -> lowest id) is guaranteed even below threshold;
+        # a zero-vote row falls back to cluster 0 exactly like argmax
+        assert mem.tolist() == [[True, False, False], [True, False, False]]
+
+    def test_tie_breaks_match_argmax(self):
+        votes = jnp.asarray([[2.0, 3.0, 3.0, 1.0],
+                             [5.0, 0.0, 5.0, 5.0]])
+        mem = np.asarray(memberships_from_votes(votes, 1.0, min_membership=1))
+        assert (mem.argmax(1) == np.asarray(jnp.argmax(votes, 1))).all()
+
+    def test_finalize_hard_is_argmax_one_hot(self):
+        votes = jnp.asarray(np.random.default_rng(0).random((17, 5)),
+                            dtype=jnp.float32)
+        labels, mem = finalize_assignment(votes, "hard")
+        assert np.array_equal(np.asarray(labels),
+                              np.asarray(jnp.argmax(votes, 1)))
+        assert (np.asarray(mem).argmax(1) == np.asarray(labels)).all()
+        assert (np.asarray(mem).sum(1) == 1).all()
+
+    def test_finalize_overlap_outlier_label(self):
+        votes = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+        labels, mem = finalize_assignment(votes, "overlap", 0.5, 0)
+        assert int(labels[0]) == -1 and not np.asarray(mem).any()
+
+    def test_validation(self):
+        a = jnp.zeros((16, 16))
+        with pytest.raises(ValueError, match="assignment"):
+            lamc_cocluster(a, LAMCConfig(2, 2, assignment="soft"))
+        with pytest.raises(ValueError, match="overlap_threshold"):
+            lamc_cocluster(a, LAMCConfig(2, 2, assignment="overlap",
+                                         overlap_threshold=0.0))
+        with pytest.raises(ValueError, match="min_membership"):
+            lamc_cocluster(a, LAMCConfig(2, 2, assignment="overlap",
+                                         min_membership=5))
+
+
+class TestOverlapQuality:
+    """Acceptance: omega >= 0.8 on the planted overlapping generator at
+    default knobs (generator defaults + LAMCConfig overlap defaults)."""
+
+    def test_omega_on_planted_overlap(self):
+        rng = np.random.default_rng(0)
+        data = planted_overlapping_cocluster_matrix(rng, 480, 400, k=4)
+        plan = PartitionPlan(480, 400, m=2, n=8, phi=240, psi=50, t_p=8,
+                             seed=0)
+        cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4,
+                         assignment="overlap",
+                         atom_row_clusters=8, atom_col_clusters=8)
+        out = lamc_cocluster(jnp.asarray(data.matrix), cfg, plan=plan)
+        mem = np.asarray(out.row_membership)
+        om = omega_index(mem, data.row_membership)
+        f1 = overlap_f1(mem, data.row_membership)
+        assert om >= 0.8, (om, f1)
+        assert f1 >= 0.85, (om, f1)
+        # non-exhaustive: overlap rows detected, and the true multi-
+        # membership rows carry most of them
+        two = mem.sum(1) >= 2
+        assert two.sum() >= 20
+        true_two = data.row_membership.sum(1) >= 2
+        assert (two & true_two).sum() / max(two.sum(), 1) >= 0.7
+
+    def test_generator_membership_shapes(self):
+        rng = np.random.default_rng(1)
+        data = planted_overlapping_cocluster_matrix(
+            rng, 120, 90, k=3, row_overlap=0.3, row_outliers=0.1,
+            col_overlap=0.2, col_outliers=0.1)
+        assert data.row_membership.shape == (120, 3)
+        assert data.col_membership.shape == (90, 3)
+        # fractions approximately honored
+        assert (data.row_membership.sum(1) == 0).sum() == 12
+        assert (data.row_membership.sum(1) == 2).sum() > 0
+        assert (data.col_membership.sum(1) == 0).sum() == 9
+        # hard projections: -1 exactly on the outliers
+        assert ((data.row_labels == -1)
+                == (data.row_membership.sum(1) == 0)).all()
+
+
+class TestTopKKernel:
+    """cosine_topk ops wrapper vs the lax.top_k oracle."""
+
+    @pytest.mark.parametrize("p,d,k_sigs,k", [
+        (37, 50, 7, 3), (512, 128, 16, 1), (100, 33, 5, 5), (9, 200, 12, 4),
+    ])
+    def test_matches_oracle(self, p, d, k_sigs, k):
+        rng = np.random.default_rng(p + d + k)
+        x = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+        s = jnp.asarray(rng.normal(size=(k_sigs, d)).astype(np.float32))
+        s = s / jnp.linalg.norm(s, axis=1, keepdims=True)
+        labels, scores = kops.cosine_topk(x, s, k)
+        ref_l, ref_s = kref.cosine_topk_ref(x, s, k)
+        assert np.array_equal(np.asarray(labels), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(ref_s),
+                                   rtol=1e-5)
+        # descending scores, distinct labels per row
+        s_np = np.asarray(scores)
+        assert (np.diff(s_np, axis=1) <= 1e-6).all()
+        l_np = np.asarray(labels)
+        assert all(len(set(row)) == k for row in l_np)
+
+    def test_k1_equals_cosine_assign(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+        s = jnp.asarray(rng.normal(size=(6, 48)).astype(np.float32))
+        l1, s1 = kops.cosine_assign(x, s)
+        lk, sk = kops.cosine_topk(x, s, 1)
+        assert np.array_equal(np.asarray(l1), np.asarray(lk[:, 0]))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(sk[:, 0]),
+                                   rtol=1e-6)
+
+    def test_k_bounds_validated(self):
+        x = jnp.zeros((4, 8))
+        s = jnp.zeros((3, 8))
+        with pytest.raises(ValueError, match="top-k width"):
+            kops.cosine_topk(x, s, 4)
+        with pytest.raises(ValueError, match="top-k width"):
+            kops.cosine_topk(x, s, 0)
+
+
+class TestServingTopK:
+    """Streaming model serves top-k multi-assignments."""
+
+    @pytest.fixture(scope="class")
+    def fitted(self):
+        from repro import streaming
+
+        rng = np.random.default_rng(0)
+        data = planted_cocluster_matrix(rng, 256, 200, k=4, d=4, signal=4.0,
+                                        noise=0.5)
+        plan = PartitionPlan(256, 200, m=2, n=2, phi=128, psi=100, t_p=3,
+                             seed=0)
+        cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4)
+        out = lamc_cocluster(jnp.asarray(data.matrix), cfg, plan=plan)
+        return streaming.model_from_result(out), data
+
+    def test_topk_consistent_with_k1(self, fitted):
+        from repro import streaming
+
+        model, data = fitted
+        reqs = jnp.asarray(data.matrix[:64])
+        r1 = streaming.assign_rows(model, reqs)
+        rk = streaming.assign_rows_topk(model, reqs, k=3)
+        assert rk.labels.shape == (64, 3)
+        assert np.array_equal(np.asarray(r1.labels),
+                              np.asarray(rk.labels[:, 0]))
+        np.testing.assert_allclose(np.asarray(r1.score),
+                                   np.asarray(rk.scores[:, 0]), rtol=1e-6)
+
+    def test_topk_cols_and_validation(self, fitted):
+        from repro import streaming
+
+        model, data = fitted
+        creqs = jnp.asarray(data.matrix.T[:32])
+        rk = streaming.assign_cols_topk(model, creqs, k=2)
+        assert rk.labels.shape == (32, 2)
+        with pytest.raises(ValueError, match="expects"):
+            streaming.assign_rows_topk(model, creqs, k=2)
+
+    def test_stream_fit_consumes_assignment_knobs(self):
+        """StreamConfig's overlap knobs apply at finalize: forcing knobs
+        reproduce the hard fit exactly, and the validator is the shared
+        one (bad knobs raise)."""
+        from repro import streaming
+
+        rng = np.random.default_rng(2)
+        data = planted_cocluster_matrix(rng, 192, 128, k=3, d=3, signal=4.0,
+                                        noise=0.5)
+        base = dict(n_row_clusters=3, n_col_clusters=3, seed=0)
+        hard, _ = streaming.fit(
+            streaming.iter_row_chunks(data.matrix, 64),
+            streaming.StreamConfig(**base))
+        forced, _ = streaming.fit(
+            streaming.iter_row_chunks(data.matrix, 64),
+            streaming.StreamConfig(**base, assignment="overlap",
+                                   overlap_threshold=1.0, min_membership=1))
+        assert np.array_equal(np.asarray(hard.row_labels),
+                              np.asarray(forced.row_labels))
+        assert np.array_equal(np.asarray(hard.row_votes),
+                              np.asarray(forced.row_votes))
+        with pytest.raises(ValueError, match="min_membership"):
+            streaming.StreamingCocluster(
+                streaming.StreamConfig(**base, assignment="overlap",
+                                       min_membership=7))
+
+    def test_model_memberships(self, fitted):
+        from repro import streaming
+
+        model, _ = fitted
+        row_mem, col_mem = streaming.model_memberships(model, 0.25)
+        assert np.asarray(row_mem).shape == (model.n_rows,
+                                             model.n_row_clusters)
+        # forcing knobs reduce to the one-hot of the hard labels
+        row_f, col_f = streaming.model_memberships(model, 1.0,
+                                                   min_membership=1)
+        assert (np.asarray(row_f).argmax(1)
+                == np.asarray(model.row_labels)).all()
+        assert (np.asarray(row_f).sum(1) == 1).all()
+        assert (np.asarray(col_f).sum(1) == 1).all()
+
+
+_DISTRIBUTED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import LAMCConfig, lamc_cocluster
+    from repro.core.distributed import distributed_lamc
+    from repro.core.partition import PartitionPlan
+    from repro.data import planted_cocluster_matrix
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+    rng = np.random.default_rng(0)
+    data = planted_cocluster_matrix(rng, 320, 240, k=4, d=4, signal=4.0,
+                                    noise=0.6)
+    a = jnp.asarray(data.matrix)
+    plan = PartitionPlan(320, 240, m=4, n=2, phi=80, psi=120, t_p=2, seed=0)
+    cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4,
+                     assignment="overlap", overlap_threshold=0.3)
+
+    # distributed memberships bit-identical to single-host at equal seeds
+    dist = distributed_lamc(mesh, a, cfg, plan)
+    host = lamc_cocluster(a, cfg, plan=plan)
+    assert np.array_equal(np.asarray(dist.row_membership),
+                          np.asarray(host.row_membership))
+    assert np.array_equal(np.asarray(dist.col_membership),
+                          np.asarray(host.col_membership))
+    assert np.array_equal(np.asarray(dist.row_labels),
+                          np.asarray(host.row_labels))
+
+    # forcing threshold reduces the distributed path to hard mode exactly
+    cfg_hard = dataclasses.replace(cfg, assignment="hard")
+    cfg_forced = dataclasses.replace(cfg, overlap_threshold=1.0,
+                                     min_membership=1)
+    hard = distributed_lamc(mesh, a, cfg_hard, plan)
+    forced = distributed_lamc(mesh, a, cfg_forced, plan)
+    assert np.array_equal(np.asarray(hard.row_labels),
+                          np.asarray(forced.row_labels))
+    assert np.array_equal(np.asarray(hard.row_membership),
+                          np.asarray(forced.row_membership))
+    assert np.array_equal(np.asarray(hard.col_membership),
+                          np.asarray(forced.col_membership))
+    print("OVERLAP_DISTRIBUTED_OK")
+    """
+)
+
+
+def test_distributed_overlap_parity_8dev():
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    res = subprocess.run([sys.executable, "-c", _DISTRIBUTED_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OVERLAP_DISTRIBUTED_OK" in res.stdout

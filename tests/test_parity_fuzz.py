@@ -1,0 +1,103 @@
+"""Differential fuzz: execution paths of the LAMC pipeline must agree.
+
+Seeded sweep over shapes, densities, and plan configs, checking three
+differential contracts on every drawn case:
+
+  * dense vs ``input_format="bcoo"`` — exact label parity (the sparse
+    block scatter is bit-exact, DESIGN.md §9);
+  * ``spmm_impl="tiled"`` vs ``"dual_ell"`` vs ``"dense"`` on the BCOO
+    path — multi-block plans densify their blocks, so the backend knob
+    must not perturb labels at all;
+  * hard mode vs degenerate overlap mode (``overlap_threshold > 0.5``,
+    ``min_membership=1``) — the threshold-reduction invariant
+    (DESIGN.md §11) on both the dense and sparse paths.
+
+A small always-on subset keeps the contracts in the default gate; the
+full sweep is ``-m slow`` (CI's slow lane) because every case pays its
+own jit trace.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LAMCConfig, lamc_cocluster
+from repro.core.partition import PartitionPlan
+from repro.data import planted_cocluster_matrix, to_bcoo
+
+
+def _draw_case(seed: int):
+    """One fuzz case: planted matrix + a valid multi-block plan + config."""
+    rng = np.random.default_rng(seed)
+    m_grid = int(rng.choice([1, 2]))
+    n_grid = int(rng.choice([2, 2, 4]))
+    phi = int(rng.choice([48, 64, 96]))
+    psi = int(rng.choice([40, 48, 64]))
+    rows = m_grid * phi + int(rng.integers(0, 8))     # ragged leftovers too
+    cols = n_grid * psi + int(rng.integers(0, 8))
+    k = int(rng.choice([2, 3, 4]))
+    density = float(rng.choice([1.0, 0.4, 0.15]))
+    t_p = int(rng.choice([2, 3]))
+    data = planted_cocluster_matrix(
+        rng, rows, cols, k=k, d=k, signal=5.0, noise=0.5, density=density)
+    plan = PartitionPlan(rows, cols, m=m_grid, n=n_grid, phi=phi, psi=psi,
+                         t_p=t_p, seed=seed)
+    cfg = LAMCConfig(n_row_clusters=k, n_col_clusters=k)
+    return data, plan, cfg
+
+
+def _labels(out):
+    return np.asarray(out.row_labels), np.asarray(out.col_labels)
+
+
+def _check_case(seed: int):
+    data, plan, cfg = _draw_case(seed)
+    a = jnp.asarray(data.matrix)
+    a_sp = to_bcoo(data.matrix)
+    ctx = f"seed={seed} shape={data.shape} plan=({plan.m}x{plan.n}) t_p={plan.t_p}"
+
+    out_dense = lamc_cocluster(a, cfg, plan=plan)
+    rl, cl = _labels(out_dense)
+
+    # dense vs bcoo, and the SpMM backend knob on the bcoo path
+    for impl in ("auto", "tiled", "dual_ell"):
+        out_sp = lamc_cocluster(
+            a_sp, dataclasses.replace(cfg, input_format="bcoo",
+                                      spmm_impl=impl), plan=plan)
+        rs, cs = _labels(out_sp)
+        assert np.array_equal(rl, rs), (ctx, impl)
+        assert np.array_equal(cl, cs), (ctx, impl)
+
+    # hard vs degenerate overlap on both input formats
+    forced = dataclasses.replace(cfg, assignment="overlap",
+                                 overlap_threshold=0.75, min_membership=1)
+    for inp, c in ((a, forced),
+                   (a_sp, dataclasses.replace(forced, input_format="bcoo"))):
+        out_f = lamc_cocluster(inp, c, plan=plan)
+        rf, cf = _labels(out_f)
+        assert np.array_equal(rl, rf), ctx
+        assert np.array_equal(cl, cf), ctx
+        mem = np.asarray(out_f.row_membership)
+        assert (mem.sum(1) == 1).all(), ctx
+        assert (mem.argmax(1) == rl).all(), ctx
+        cmem = np.asarray(out_f.col_membership)
+        assert (cmem.sum(1) == 1).all() and (cmem.argmax(1) == cl).all(), ctx
+
+
+# always-on subset: two seeds cover a dense and a sparse draw (seeds
+# chosen so the drawn densities differ); the full sweep runs in the slow
+# lane
+ALWAYS_ON = [0, 3]
+
+
+@pytest.mark.parametrize("seed", ALWAYS_ON)
+def test_parity_fuzz_fast(seed):
+    _check_case(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [s for s in range(12) if s not in ALWAYS_ON])
+def test_parity_fuzz_sweep(seed):
+    _check_case(seed)

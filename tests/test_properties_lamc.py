@@ -1,0 +1,181 @@
+"""Property-based invariants of the partition plan and the plan cost model.
+
+Runs through ``hypothesis_compat``: with hypothesis installed the ``@given``
+tests sweep randomized cases; without it they skip individually while the
+seeded parametrized twins below keep every invariant exercised (the shim
+contract — the suite always collects).
+
+Invariants locked down:
+  * resample permutations are bijections (each axis index appears at most
+    once, all within range) and blocks tile the used submatrix exactly once;
+  * ``coverage_probability`` is monotone in ``t_p``, bounded in [0, 1], and
+    the axis-free form is the min of the per-axis forms;
+  * ``probability._atom_cost`` is monotone in density on the gather
+    (dual-ELL) route — more nonzeros, more gathered work;
+  * ``probability.spmm_route`` returns the argmin of ``spmm_costs``
+    whenever the sparse formats are admissible at all.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import partition, probability
+from repro.core.partition import PartitionPlan
+
+plan_dims = st.integers(2, 4)
+axis_sizes = st.integers(32, 200)
+densities = st.floats(1e-4, 1.0, allow_nan=False)
+
+
+def _check_bijection(plan, resample):
+    row_idx, col_idx = partition.resample_indices(plan, resample)
+    rows = np.asarray(row_idx).reshape(-1)
+    cols = np.asarray(col_idx).reshape(-1)
+    assert row_idx.shape == (plan.m, plan.phi)
+    assert col_idx.shape == (plan.n, plan.psi)
+    assert len(set(rows.tolist())) == rows.size          # no duplicates
+    assert rows.min() >= 0 and rows.max() < plan.n_rows  # in range
+    assert len(set(cols.tolist())) == cols.size
+    assert cols.min() >= 0 and cols.max() < plan.n_cols
+
+
+def _check_tiles_once(plan, resample):
+    """Every used (row, col) cell lands in exactly one block, with its
+    original value."""
+    a = np.arange(plan.n_rows * plan.n_cols, dtype=np.float32).reshape(
+        plan.n_rows, plan.n_cols)
+    blocks, row_idx, col_idx = partition.extract_blocks(
+        jnp.asarray(a), plan, resample)
+    blocks = np.asarray(blocks)
+    row_idx, col_idx = np.asarray(row_idx), np.asarray(col_idx)
+    seen = np.zeros_like(a, dtype=np.int32)
+    for i in range(plan.m):
+        for j in range(plan.n):
+            blk = blocks[i * plan.n + j]
+            expect = a[row_idx[i]][:, col_idx[j]]
+            assert np.array_equal(blk, expect)
+            np.add.at(seen, (row_idx[i][:, None], col_idx[j][None, :]), 1)
+    used = seen.sum()
+    assert used == plan.m * plan.phi * plan.n * plan.psi
+    assert seen.max() <= 1                               # never twice
+
+
+CASES = [
+    PartitionPlan(64, 48, m=2, n=2, phi=30, psi=20, t_p=3, seed=0),
+    PartitionPlan(97, 53, m=3, n=2, phi=32, psi=26, t_p=2, seed=5),
+    PartitionPlan(40, 120, m=2, n=4, phi=20, psi=30, t_p=1, seed=11),
+]
+
+
+class TestPartitionInvariants:
+    @pytest.mark.parametrize("plan", CASES)
+    @pytest.mark.parametrize("resample", [0, 1])
+    def test_permutations_are_bijections(self, plan, resample):
+        _check_bijection(plan, resample)
+
+    @pytest.mark.parametrize("plan", CASES)
+    def test_blocks_tile_exactly_once(self, plan):
+        _check_tiles_once(plan, 0)
+
+    @given(m=plan_dims, n=plan_dims, rows=axis_sizes, cols=axis_sizes,
+           seed=st.integers(0, 2**16), resample=st.integers(0, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_bijection_property(self, m, n, rows, cols, seed, resample):
+        plan = PartitionPlan(rows, cols, m=m, n=n, phi=max(1, rows // m),
+                             psi=max(1, cols // n), t_p=2, seed=seed)
+        _check_bijection(plan, resample)
+
+    @given(m=plan_dims, n=plan_dims, rows=st.integers(16, 64),
+           cols=st.integers(16, 64), seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_tiling_property(self, m, n, rows, cols, seed):
+        plan = PartitionPlan(rows, cols, m=m, n=n, phi=max(1, rows // m),
+                             psi=max(1, cols // n), t_p=1, seed=seed)
+        _check_tiles_once(plan, 0)
+
+
+class TestCoverageMonotonicity:
+    def test_monotone_in_t_p(self):
+        covs = [
+            partition.coverage_probability(
+                PartitionPlan(100, 80, m=3, n=3, phi=33, psi=26, t_p=t))
+            for t in range(1, 12)
+        ]
+        assert all(0.0 <= c <= 1.0 for c in covs)
+        assert all(b >= a - 1e-12 for a, b in zip(covs, covs[1:]))
+
+    def test_axis_min_law(self):
+        plan = PartitionPlan(100, 80, m=3, n=3, phi=33, psi=26, t_p=4)
+        assert partition.coverage_probability(plan) == min(
+            partition.coverage_probability(plan, "row"),
+            partition.coverage_probability(plan, "col"))
+
+    def test_full_grid_covers(self):
+        plan = PartitionPlan(96, 64, m=2, n=2, phi=48, psi=32, t_p=1)
+        assert partition.coverage_probability(plan) == 1.0
+
+    @given(t1=st.integers(1, 50), dt=st.integers(1, 50),
+           m=plan_dims, rows=axis_sizes, cols=axis_sizes)
+    @settings(max_examples=25, deadline=None)
+    def test_monotone_property(self, t1, dt, m, rows, cols):
+        mk = lambda t: partition.coverage_probability(
+            PartitionPlan(rows, cols, m=m, n=m, phi=rows // (m + 1),
+                          psi=cols // (m + 1), t_p=t))
+        assert mk(t1 + dt) >= mk(t1) - 1e-12
+
+
+class TestCostModelInvariants:
+    def test_atom_cost_monotone_in_density_gather_route(self):
+        ds = np.linspace(0.01, 1.0, 25)
+        costs = [probability._atom_cost(512, 256, 8, 4, 16, 8,
+                                        density=d, spmm_impl="dual_ell")
+                 for d in ds]
+        assert all(b >= a - 1e-9 for a, b in zip(costs, costs[1:]))
+        # and strictly grows somewhere: density is actually priced
+        assert costs[-1] > costs[0]
+
+    def test_atom_cost_auto_never_exceeds_pinned(self):
+        for d in (0.01, 0.05, 0.2, 0.5):
+            auto = probability._atom_cost(512, 256, 8, 4, 16, 8,
+                                          density=d, spmm_impl="auto")
+            for impl in ("dual_ell", "tiled", "dense"):
+                pinned = probability._atom_cost(512, 256, 8, 4, 16, 8,
+                                                density=d, spmm_impl=impl)
+                assert auto <= pinned + 1e-9, (d, impl)
+
+    def test_spmm_route_is_cost_argmin(self):
+        for d in (0.001, 0.01, 0.05, 0.072, 0.1, 0.3, 0.8):
+            cells = 4096.0 * 2048.0
+            route = probability.spmm_route(d, cells)
+            costs = probability.spmm_costs(d, cells)
+            assert route == min(costs, key=costs.get), (d, route, costs)
+
+    def test_spmm_route_guards(self):
+        # sub-64x64 blocks and near-dense inputs route dense outright
+        assert probability.spmm_route(0.01, 32.0 * 32.0) == "dense"
+        assert probability.spmm_route(0.95, 4096.0 * 2048.0) == "dense"
+
+    def test_crossover_inside_measured_bracket(self):
+        assert 0.05 < probability.SPMM_ELL_CROSSOVER < 0.2
+
+    @given(d=densities, logc=st.floats(12.5, 24.0))
+    @settings(max_examples=50, deadline=None)
+    def test_route_argmin_property(self, d, logc):
+        cells = float(2.0 ** logc)
+        route = probability.spmm_route(d, cells)
+        if cells < probability._SPMM_MIN_SPARSE_CELLS or d >= 0.9:
+            assert route == "dense"
+        else:
+            costs = probability.spmm_costs(d, cells)
+            assert route == min(costs, key=costs.get)
+
+    @given(d1=densities, d2=densities)
+    @settings(max_examples=40, deadline=None)
+    def test_gather_cost_monotone_property(self, d1, d2):
+        lo, hi = sorted((d1, d2))
+        cost = lambda d: probability._atom_cost(
+            256, 256, 8, 4, 16, 8, density=d, spmm_impl="dual_ell")
+        assert cost(hi) >= cost(lo) - 1e-9
