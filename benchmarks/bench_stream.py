@@ -18,6 +18,13 @@ Two families of rows, both landing in ``BENCH_stream.json`` (see
                           per batch (mean), derived carries QPS and p99
                           latency — the marginal cost of overlap-mode
                           serving over argmax serving.
+  stream_fit_recovery_overhead
+                          the price of crash consistency: the same fit
+                          with FitState checkpoints every 4 chunks
+                          (atomic fsync'd commits, DESIGN.md §12) vs
+                          none; µs for the checkpointed fit, derived
+                          carries rows/s for both and the overhead %.
+                          The acceptance bar is <= 15% at save_every=4.
 
 CPU numbers are architecture proxies (the Pallas scoring kernel executes
 in interpret mode off-TPU); the per-PR trajectory is the signal, as with
@@ -59,6 +66,36 @@ def run(report, *, quick: bool = False) -> None:
         quality = nmi(np.asarray(model.row_labels), data.row_labels)
         report(f"stream_fit_chunk{chunk_rows},{dt * 1e6:.0f},"
                f"rows_per_s={stats.rows_per_s:.0f};row_nmi={quality:.3f}")
+
+    # recovery overhead: checkpointing every 4 chunks vs none, same fit.
+    # Both runs re-use the warmed 256-row-chunk jit caches from above.
+    import tempfile
+
+    chunk_rows = 256
+    streaming.fit(streaming.iter_row_chunks(data.matrix, chunk_rows), cfg)
+    # best-of-3 on both sides: a single fit at this scale is tens of ms,
+    # small enough that one scheduler hiccup would swamp the ~ms-scale
+    # checkpoint cost being measured
+    dt_off = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, stats_off = streaming.fit(
+            streaming.iter_row_chunks(data.matrix, chunk_rows), cfg)
+        dt_off = min(dt_off, time.perf_counter() - t0)
+    dt_on = float("inf")
+    for _ in range(3):
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            t0 = time.perf_counter()
+            _, stats_on = streaming.fit(
+                streaming.iter_row_chunks(data.matrix, chunk_rows), cfg,
+                ckpt_dir=ckpt_dir, save_every=4)
+            dt_on = min(dt_on, time.perf_counter() - t0)
+    overhead = (dt_on - dt_off) / dt_off * 100.0
+    del stats_off, stats_on  # rows/s below comes from the best-of-3 walls
+    report(f"stream_fit_recovery_overhead,{dt_on * 1e6:.0f},"
+           f"rows_per_s_on={m / dt_on:.0f};"
+           f"rows_per_s_off={m / dt_off:.0f};"
+           f"overhead_pct={overhead:.1f}")
 
     # assignment QPS against the last fitted model
     batch = 256

@@ -1,4 +1,13 @@
 from . import checkpoint
-from .checkpoint import available_steps, latest_step, restore, save
+from .checkpoint import (
+    CheckpointCorruptError,
+    available_steps,
+    latest_step,
+    read_manifest,
+    restore,
+    restore_tree,
+    save,
+)
 
-__all__ = ["checkpoint", "save", "restore", "latest_step", "available_steps"]
+__all__ = ["checkpoint", "save", "restore", "restore_tree", "read_manifest",
+           "latest_step", "available_steps", "CheckpointCorruptError"]

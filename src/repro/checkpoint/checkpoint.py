@@ -2,31 +2,53 @@
 
 Format: one directory per step —
     ckpt_dir/step_000123/
-        manifest.json        (tree structure, shapes, dtypes, mesh info)
+        manifest.json        (tree structure, shapes, dtypes, per-leaf
+                              sha256 content hashes, mesh info)
         arrays.npz           (flat leaf name -> host array)
         _COMMITTED           (sentinel written last: atomicity marker)
 
-Writes go to ``step_X.tmp`` and are atomically renamed after the sentinel
-is in place, so a crash mid-write can never yield a checkpoint that
-``latest_step`` would pick up. Restore is *elastic*: arrays are loaded on
-host and re-placed under whatever sharding the caller provides — restoring
-a 16x16-mesh checkpoint onto an 8x16 (or single-device) mesh is the same
+Crash consistency: writes go to ``step_X.tmp``; every file is fsync'd,
+then the temp directory is fsync'd, then atomically renamed, then the
+parent directory is fsync'd — a crash at any point leaves either the old
+committed checkpoint or a ``.tmp`` directory ``latest_step`` ignores,
+never a half-written checkpoint it would pick up. Restore verifies each
+leaf against its recorded sha256 and raises
+:class:`CheckpointCorruptError` *naming the bad leaf* on any mismatch,
+truncation, or missing payload — a corrupt checkpoint can never restore
+silently. Restore is also *elastic*: arrays are loaded on host and
+re-placed under whatever sharding the caller provides — restoring a
+16x16-mesh checkpoint onto an 8x16 (or single-device) mesh is the same
 code path (tests/test_checkpoint.py exercises it).
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
+import zipfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "available_steps"]
+__all__ = ["save", "restore", "restore_tree", "read_manifest",
+           "latest_step", "available_steps", "CheckpointCorruptError"]
 
 _SENTINEL = "_COMMITTED"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed integrity verification.
+
+    Raised when the manifest or array payload is missing, truncated, or
+    fails its recorded content hash — the message names the offending
+    leaf/file. Distinct from :class:`FileNotFoundError` (no committed
+    checkpoint at all) and ``ValueError`` (template mismatch): this one
+    means bytes on disk changed after commit, and restoring them would
+    be silent garbage.
+    """
 
 
 def _flatten_with_names(tree):
@@ -37,8 +59,25 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def _leaf_hash(arr: np.ndarray) -> str:
+    """sha256 over the raw bytes + shape/dtype (shape collisions matter)."""
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree, extra_meta: dict | None = None) -> str:
-    """Atomically write ``tree`` as checkpoint ``step``."""
+    """Atomically write ``tree`` as checkpoint ``step`` (fsync'd commit)."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -55,21 +94,35 @@ def save(ckpt_dir: str, step: int, tree, extra_meta: dict | None = None) -> str:
     packed = {}
     for name, arr in host.items():
         if arr.dtype == jnp.bfloat16:
-            packed[name] = arr.view(np.uint16)
-            meta["leaves"][name] = {"dtype": "bfloat16", "shape": list(arr.shape)}
+            stored = arr.view(np.uint16)
+            packed[name] = stored
+            meta["leaves"][name] = {"dtype": "bfloat16", "shape": list(arr.shape),
+                                    "sha256": _leaf_hash(stored)}
         else:
             packed[name] = arr
-            meta["leaves"][name] = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+            meta["leaves"][name] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                                    "sha256": _leaf_hash(arr)}
     if extra_meta:
         meta["extra"] = extra_meta
-    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    manifest_path = os.path.join(tmp, "manifest.json")
+    sentinel_path = os.path.join(tmp, _SENTINEL)
+    np.savez(arrays_path, **packed)
+    with open(manifest_path, "w") as f:
         json.dump(meta, f)
-    with open(os.path.join(tmp, _SENTINEL), "w") as f:
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(arrays_path)
+    # sentinel last: its presence asserts the payload + manifest are durable
+    with open(sentinel_path, "w") as f:
         f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_path(ckpt_dir)
     return final
 
 
@@ -89,6 +142,70 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Load + parse a committed checkpoint's manifest; loud on corruption."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, _SENTINEL)):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    manifest_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_path):
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is committed but manifest.json is missing — "
+            "the directory was partially deleted or tampered with")
+    try:
+        with open(manifest_path) as f:
+            meta = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: manifest.json is unparseable ({e}) — "
+            "truncated or corrupted after commit") from e
+    if "leaves" not in meta:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: manifest.json has no 'leaves' table")
+    return meta
+
+
+def _open_arrays(path: str):
+    arrays_path = os.path.join(path, "arrays.npz")
+    if not os.path.exists(arrays_path):
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is committed but arrays.npz is missing")
+    try:
+        return np.load(arrays_path)
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: arrays.npz failed to open ({e}) — "
+            "truncated or corrupted after commit") from e
+
+
+def _load_leaf(data, meta: dict, name: str, path: str) -> np.ndarray:
+    """One verified leaf off the npz: existence + content-hash check."""
+    if name not in meta["leaves"]:
+        raise KeyError(f"checkpoint missing leaf {name!r}")
+    info = meta["leaves"][name]
+    if name not in getattr(data, "files", ()):
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: leaf {name!r} is in the manifest but "
+            "missing from arrays.npz — partial write or truncation")
+    try:
+        arr = data[name]
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path}: leaf {name!r} failed to decompress ({e}) — "
+            "truncated or corrupted after commit") from e
+    want = info.get("sha256")
+    if want is not None:
+        got = _leaf_hash(arr)
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checkpoint {path}: leaf {name!r} failed its content hash "
+                f"(manifest {want[:12]}…, on disk {got[:12]}…) — the payload "
+                "changed after commit; refusing to restore silent garbage")
+    if info["dtype"] == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    return arr
+
+
 def restore(ckpt_dir: str, step: int, like, shardings=None):
     """Restore checkpoint ``step`` into the structure of ``like``.
 
@@ -96,14 +213,13 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     ``jax.eval_shape`` output). ``shardings`` (same structure or a single
     sharding) controls placement — pass the *current* mesh's shardings for
     elastic restore onto a different topology.
-    Returns (tree, extra_meta).
+    Returns (tree, extra_meta). Every leaf is verified against the
+    manifest's content hash before placement (CheckpointCorruptError
+    names the bad leaf on mismatch).
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    if not os.path.exists(os.path.join(path, _SENTINEL)):
-        raise FileNotFoundError(f"no committed checkpoint at {path}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    meta = read_manifest(ckpt_dir, step)
+    data = _open_arrays(path)
 
     names, leaves, treedef = _flatten_with_names(like)
     shard_list = None
@@ -121,12 +237,7 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
 
     out = []
     for i, (name, leaf) in enumerate(zip(names, leaves)):
-        if name not in meta["leaves"]:
-            raise KeyError(f"checkpoint missing leaf {name!r}")
-        info = meta["leaves"][name]
-        arr = data[name]
-        if info["dtype"] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+        arr = _load_leaf(data, meta, name, path)
         # np.shape, not leaf.shape: ``like`` may carry Python int/float/bool
         # leaves (config scalars inside a model NamedTuple) that have no
         # .shape attribute — they save as 0-d arrays and round-trip back to
@@ -142,3 +253,27 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
         else:
             out.append(jnp.asarray(arr))
     return jax.tree.unflatten(treedef, out), meta.get("extra")
+
+
+def restore_tree(ckpt_dir: str, step: int):
+    """Template-free restore: rebuild a nested dict from the manifest.
+
+    Leaf names are split on ``/`` into nested dict keys, so any tree that
+    was saved as (possibly nested) dicts round-trips without the caller
+    holding a ``like`` template — the restore path for accumulated state
+    whose shape is only known from the checkpoint itself (e.g. a
+    streaming ``FitState`` with a per-chunk entry count). All leaves come
+    back as host numpy arrays, hash-verified. Returns (tree, extra_meta).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    meta = read_manifest(ckpt_dir, step)
+    data = _open_arrays(path)
+    tree: dict = {}
+    for name in sorted(meta["leaves"]):
+        arr = _load_leaf(data, meta, name, path)
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree, meta.get("extra")

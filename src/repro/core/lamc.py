@@ -206,7 +206,7 @@ def run_resample(a, plan, cfg: LAMCConfig, anchor_rows, anchor_cols, t,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "plan"))
 def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan,
-              operator=None):
+              operator=None, block_mask=None):
     q = cfg.signature_dim
     kproj = jax.random.key(plan.seed + 7)
     kar, kac, kmerge = jax.random.split(kproj, 3)
@@ -233,6 +233,7 @@ def _lamc_jit(a, cfg: LAMCConfig, plan: partition.PartitionPlan,
         assignment=cfg.assignment,
         overlap_threshold=cfg.overlap_threshold,
         min_membership=cfg.min_membership,
+        block_mask=block_mask,
         **stacked,
     )
     return merged, anchor_rows, anchor_cols
@@ -254,7 +255,8 @@ def validate_assignment(cfg: LAMCConfig) -> None:
 
 
 def lamc_cocluster(a, cfg: LAMCConfig,
-                   plan: partition.PartitionPlan | None = None) -> LAMCResult:
+                   plan: partition.PartitionPlan | None = None,
+                   block_mask=None) -> LAMCResult:
     """Full LAMC pipeline (Algorithm 1). ``plan=None`` derives the optimal
     plan from the probabilistic model.
 
@@ -266,6 +268,12 @@ def lamc_cocluster(a, cfg: LAMCConfig,
     decision is surfaced on ``result.plan.spmm_route``); on a
     single-block plan a non-dense route runs the atom straight on the
     sparse operator — converted once, amortized across all resamples.
+
+    ``block_mask`` (``(T_p, blocks_per_resample)`` bool, True = survived)
+    drops the masked blocks' atoms from the consensus merge — the
+    simulation seam for worker failure (DESIGN.md §12). See
+    ``probability.sample_block_failures`` and the T_p fault-budget
+    differential test.
     """
     _sparse.validate_spmm_impl(cfg.spmm_impl)
     validate_assignment(cfg)
@@ -316,7 +324,15 @@ def lamc_cocluster(a, cfg: LAMCConfig,
             # subspace-iteration products (the amortization the tiled /
             # dual-ELL formats are built around).
             operator = _sparse.prepare_operator(a, route)
-    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan, operator)
+    if block_mask is not None:
+        block_mask = jnp.asarray(block_mask, dtype=bool)
+        want = (plan.t_p, plan.blocks_per_resample)
+        if tuple(block_mask.shape) != want:
+            raise ValueError(
+                f"block_mask must be (t_p, blocks_per_resample) = {want}, "
+                f"got {tuple(block_mask.shape)}")
+    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan, operator,
+                                                 block_mask)
     return LAMCResult(merged.row_labels, merged.col_labels,
                       merged.row_votes, merged.col_votes, plan,
                       row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,

@@ -246,8 +246,17 @@ def signature_merge(
     assignment: str = "hard",
     overlap_threshold: float = 0.25,
     min_membership: int = 0,
+    block_mask: jax.Array | None = None,     # (T_p, B) bool: True = survived
 ) -> MergeResult:
     """Jittable consensus merge. See module docstring for the scheme.
+
+    ``block_mask`` simulates block-level worker failure (DESIGN.md §12):
+    a ``False`` entry removes that (resample, block) atom from the
+    consensus entirely — zero weight in the global signature k-means and
+    zero votes for its points — which is what losing the worker mid-atom
+    looks like to the merge. Pair with
+    ``probability.sample_block_failures`` /
+    ``resamples_for_failures`` to test the statistical fault budget.
 
     When the anchor slivers are supplied (``row_features`` =
     ``A[:, anchor_cols]``, ``col_features`` = ``A[anchor_rows].T``), the
@@ -264,6 +273,12 @@ def signature_merge(
     kr, kc = jax.random.split(key)
     t_p, b, k, _q = row_sigs.shape
     d = col_sigs.shape[2]
+    if block_mask is not None:
+        w_mask = block_mask.astype(jnp.float32)              # (T_p, B)
+        row_counts = row_counts * w_mask[:, :, None]
+        col_counts = col_counts * w_mask[:, :, None]
+    else:
+        w_mask = None
 
     # --- rows ---
     atom_global = _cluster_atoms(kr, row_sigs, row_counts, k_row, kmeans_iters,
@@ -276,10 +291,14 @@ def signature_merge(
     # global row id of each voting point: block b = i*n + j -> row-group i
     i_of_b = jnp.arange(b) // n                              # (B,)
     rows_of_block = row_index[:, i_of_b, :]                  # (T_p,B,phi)
+    phi = rows_of_block.shape[-1]
+    row_w = (1.0 if w_mask is None
+             else jnp.broadcast_to(w_mask[:, :, None],
+                                   (t_p, b, phi)).reshape(-1))
     row_votes = jnp.zeros((n_rows, k_row), jnp.float32).at[
         rows_of_block.reshape(-1),
         point_global.reshape(-1),
-    ].add(1.0)
+    ].add(row_w)
     final_rows, row_member = finalize_assignment(
         row_votes, assignment, overlap_threshold, min_membership)
 
@@ -290,10 +309,14 @@ def signature_merge(
     point_global_c = jnp.take_along_axis(atom_global_c, col_labels, axis=2)
     j_of_b = jnp.arange(b) % n
     cols_of_block = col_index[:, j_of_b, :]                  # (T_p,B,psi)
+    psi = cols_of_block.shape[-1]
+    col_w = (1.0 if w_mask is None
+             else jnp.broadcast_to(w_mask[:, :, None],
+                                   (t_p, b, psi)).reshape(-1))
     col_votes = jnp.zeros((n_cols, k_col), jnp.float32).at[
         cols_of_block.reshape(-1),
         point_global_c.reshape(-1),
-    ].add(1.0)
+    ].add(col_w)
     final_cols, col_member = finalize_assignment(
         col_votes, assignment, overlap_threshold, min_membership)
 

@@ -39,6 +39,7 @@ __all__ = [
     "plan_partition",
     "mc_failure_estimate",
     "resamples_for_failures",
+    "sample_block_failures",
     "spmm_costs",
     "spmm_route",
     "resolve_spmm_route",
@@ -163,6 +164,33 @@ def resamples_for_failures(
         return base_t_p
     f = min(expected_failed_blocks / max(n_blocks, 1), 0.9)
     return int(math.ceil(base_t_p / (1.0 - f)))
+
+
+def sample_block_failures(
+    seed: int,
+    t_p: int,
+    n_blocks: int,
+    n_failed: int,
+) -> np.ndarray:
+    """``(t_p, n_blocks)`` bool *survival* mask with exactly ``n_failed``
+    blocks down (False) in each resample, drawn uniformly without
+    replacement.
+
+    The simulation half of :func:`resamples_for_failures`: feed the mask
+    to ``lamc_cocluster(..., block_mask=...)`` and the dropped blocks'
+    atoms contribute nothing to the merge — exactly what a died-mid-atom
+    worker looks like to the consensus. The differential test
+    (tests/test_fault_tolerance.py) pairs the two to check the paper's
+    T_p fault-budget claim against real injected failures.
+    """
+    if not 0 <= n_failed <= n_blocks:
+        raise ValueError(
+            f"n_failed must be in [0, {n_blocks}], got {n_failed}")
+    rng = np.random.default_rng(seed)
+    mask = np.ones((t_p, n_blocks), dtype=bool)
+    for i in range(t_p):
+        mask[i, rng.choice(n_blocks, size=n_failed, replace=False)] = False
+    return mask
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,12 @@ warmed up, and driven by a request loop; per-batch wall-clock latencies
 are aggregated into p50/p99 and QPS (requests = rows assigned). Rows are
 merged into ``BENCH_stream.json`` (same contract as ``benchmarks/run.py``)
 so serving latency is tracked per-PR next to the chunked-fit throughput.
+
+Malformed requests (wrong width/rank, non-finite payloads) are *rejected
+per request* — counted in ``serve_assign_*_errors`` next to p50/p99 —
+instead of crashing the loop or poisoning the latency stats with NaN
+scores. ``--adversarial N`` interleaves N bad batches into the stream to
+demonstrate the path (the smoke lane runs it).
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ import numpy as np
 from repro import streaming
 from repro.data import planted_cocluster_matrix
 
-__all__ = ["fit_demo_model", "serve", "main"]
+__all__ = ["fit_demo_model", "validate_request", "serve", "main"]
 
 
 def fit_demo_model(ckpt_dir: str, *, n_rows: int = 1024, n_cols: int = 512,
@@ -45,9 +51,52 @@ def fit_demo_model(ckpt_dir: str, *, n_rows: int = 1024, n_cols: int = 512,
           f"chunks ({stats.rows_per_s:.0f} rows/s) -> saved to {ckpt_dir}")
 
 
+def validate_request(x, dim: int) -> str | None:
+    """Reject reason for one request batch, or None if servable.
+
+    Checks are host-side and cheap relative to the assign kernel: rank
+    and width (a wrong-width batch would be a jit shape error five frames
+    deep), non-float payloads, and non-finite values (NaN/Inf scores
+    would win/lose every argmax and silently poison the labels, and the
+    batch's latency would still land in the percentiles).
+    """
+    shape = tuple(np.shape(x))
+    if len(shape) != 2:
+        return f"bad rank: expected (batch, {dim}), got shape {shape}"
+    if shape[1] != dim:
+        return (f"bad width: model expects {dim} features, request has "
+                f"{shape[1]} (shape {shape})")
+    arr = np.asarray(x)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return f"bad dtype: expected float features, got {arr.dtype}"
+    if not np.isfinite(arr).all():
+        bad = int(np.size(arr) - np.isfinite(arr).sum())
+        return f"non-finite payload: {bad} NaN/Inf values in the batch"
+    return None
+
+
+def _adversarial_batch(i: int, batch: int, dim: int):
+    """Deterministic rotation of the malformed-request taxonomy."""
+    kind = i % 3
+    if kind == 0:
+        return np.zeros((batch, dim + 3), np.float32)       # wrong width
+    if kind == 1:
+        x = np.zeros((batch, dim), np.float32)
+        x[0, 0] = np.nan                                    # poisoned payload
+        return x
+    return np.zeros((batch * dim,), np.float32)             # wrong rank
+
+
 def serve(ckpt_dir: str, *, batch: int = 64, requests: int = 32,
-          warmup: int = 3, axis: str = "rows", seed: int = 1) -> dict:
-    """Serve ``requests`` batches of synthetic vectors; report latency/QPS."""
+          warmup: int = 3, axis: str = "rows", seed: int = 1,
+          adversarial: int = 0) -> dict:
+    """Serve ``requests`` batches of synthetic vectors; report latency/QPS.
+
+    ``adversarial`` extra malformed batches are interleaved into the
+    stream; each is rejected (logged + counted), never timed — the
+    error counter rides next to the latency stats so a deploy that
+    starts bouncing requests is visible in the same bench row.
+    """
     model, meta = streaming.load_model(ckpt_dir)
     dim = model.n_cols if axis == "rows" else model.n_rows
     assign = streaming.assign_rows if axis == "rows" else streaming.assign_cols
@@ -58,18 +107,33 @@ def serve(ckpt_dir: str, *, batch: int = 64, requests: int = 32,
     for _ in range(warmup):
         jax.block_until_ready(step(reqs))
 
+    # interleave adversarial batches roughly uniformly through the stream
+    stream: list[tuple[bool, object]] = [
+        (True, i) for i in range(requests)]
+    for i in range(adversarial):
+        pos = min(len(stream), 1 + i * max(1, requests // max(adversarial, 1)))
+        stream.insert(pos, (False, i))
+
     lat_s = []
-    for i in range(requests):
-        x = reqs + jnp.float32(i)  # vary the payload; shape/program identical
+    errors = 0
+    out = None
+    for ok, i in stream:
+        x = (reqs + jnp.float32(i)) if ok else _adversarial_batch(i, batch, dim)
+        reason = validate_request(x, dim)
+        if reason is not None:
+            errors += 1
+            print(f"serve[{axis}]: rejected request: {reason}")
+            continue
         t0 = time.perf_counter()
         out = jax.block_until_ready(step(x))
         lat_s.append(time.perf_counter() - t0)
     lat_us = np.asarray(lat_s) * 1e6
-    qps = batch * requests / max(float(np.sum(lat_s)), 1e-9)
+    qps = batch * len(lat_s) / max(float(np.sum(lat_s)), 1e-9)
     return {
         f"serve_assign_{axis}_p50_us": float(np.percentile(lat_us, 50)),
         f"serve_assign_{axis}_p99_us": float(np.percentile(lat_us, 99)),
         f"serve_assign_{axis}_qps": qps,
+        f"serve_assign_{axis}_errors": errors,
         "_labels_sample": np.asarray(out.labels[:8]).tolist(),
         "_model_kind": meta.get("kind"),
         "_batch": batch,
@@ -85,6 +149,9 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--warmup", type=int, default=3)
     ap.add_argument("--axis", choices=["rows", "cols", "both"], default="both")
+    ap.add_argument("--adversarial", type=int, default=0,
+                    help="interleave N malformed request batches (rejected + "
+                         "counted, never crash the loop)")
     ap.add_argument("--bench-out", default="BENCH_stream.json",
                     help="merge latency rows into this file ('' to skip)")
     args = ap.parse_args(argv)
@@ -95,7 +162,8 @@ def main(argv=None):
     report = {}
     for axis in axes:
         out = serve(args.ckpt, batch=args.batch, requests=args.requests,
-                    warmup=args.warmup, axis=axis)
+                    warmup=args.warmup, axis=axis,
+                    adversarial=args.adversarial)
         report.update(out)
     bench_rows = {k: round(v, 1) for k, v in report.items()
                   if not k.startswith("_")}

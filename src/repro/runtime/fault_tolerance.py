@@ -60,7 +60,7 @@ class SimulatedFailure(RuntimeError):
 class FailureInjector:
     """Raises at the configured steps — exactly once each."""
     fail_at_steps: tuple[int, ...] = ()
-    _fired: set = dataclasses.field(default_factory=set)
+    _fired: set[int] = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self._fired:
@@ -70,7 +70,7 @@ class FailureInjector:
 
 def run_with_recovery(
     *,
-    total_steps: int,
+    total_steps: int | None,
     step_fn: Callable[[int, Any], Any],       # (step, state) -> state
     state: Any,
     ckpt_dir: str,
@@ -79,24 +79,43 @@ def run_with_recovery(
     restore_state: Callable[[int], Any] | None = None,
     max_retries: int = 8,
     start_step: int = 0,
+    save_fn: Callable[[int, Any], None] | None = None,
 ) -> tuple[Any, dict]:
     """Drive ``step_fn`` with checkpoint/restart fault tolerance.
 
     ``restore_state(step)`` rebuilds runtime state from checkpoint ``step``
-    (defaults to requiring the caller to capture restore in step state).
+    (``restore_state(-1)`` = from scratch; defaults to requiring the
+    caller to capture restore in step state). ``total_steps=None`` runs
+    stream-driven: the loop ends when ``step_fn`` raises ``StopIteration``
+    (an exhausted chunk iterator), with a final checkpoint of whatever
+    progress followed the last periodic save. ``save_fn(step, state)``
+    overrides the default ``checkpoint.save`` call (callers that attach
+    their own ``extra_meta``/kind to the checkpoint). A step that is both
+    a ``save_every`` multiple and the final step is saved exactly once.
     Returns (final_state, stats).
     """
-    step = start_step
+    step = step0 = start_step
     retries = 0
     failures = 0
-    while step < total_steps:
+    last_saved: int | None = None
+
+    def _save(s: int, st: Any) -> None:
+        nonlocal last_saved
+        if s == last_saved:
+            return  # already durable at this step — skip the duplicate write
+        if save_fn is not None:
+            save_fn(s, st)
+        else:
+            ckpt.save(ckpt_dir, s, state_for_save(st), extra_meta={"step": s})
+        last_saved = s
+
+    while total_steps is None or step < total_steps:
         try:
             state = step_fn(step, state)
-            step += 1
-            retries = 0
-            if step % save_every == 0 or step == total_steps:
-                ckpt.save(ckpt_dir, step, state_for_save(state),
-                          extra_meta={"step": step})
+        except StopIteration:
+            if total_steps is not None:
+                raise  # sized runs must not end early — surface the bug
+            break  # stream exhausted: normal termination
         except SimulatedFailure as e:
             failures += 1
             retries += 1
@@ -106,13 +125,23 @@ def run_with_recovery(
             logger.warning("step %d failed (%s); restoring from %s",
                            step, e, latest)
             if latest is None:
-                step = start_step  # restart from scratch
+                step = step0  # restart from scratch
                 if restore_state is not None:
                     state = restore_state(-1)
             else:
+                assert latest >= step0, (
+                    f"checkpoint {latest} predates start step {step0}")
                 step = latest
                 if restore_state is not None:
                     state = restore_state(latest)
+            continue
+        step += 1
+        retries = 0
+        if step % save_every == 0 or (total_steps is not None
+                                      and step == total_steps):
+            _save(step, state)
+    if step > step0:
+        _save(step, state)  # no-op unless progress followed the last save
     return state, {"failures": failures, "final_step": step}
 
 

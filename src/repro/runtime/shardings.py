@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 __all__ = ["MeshAxes", "pad_vocab", "param_specs", "param_shardings",
-           "batch_specs", "cache_specs", "path_name"]
+           "batch_specs", "cache_specs", "path_name", "stream_state_specs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +175,33 @@ def unit_gather_shardings(cfg: ArchConfig, params_shape, mesh: Mesh,
         return NamedSharding(mesh, P(*out))
 
     return jax.tree.map(strip, full, is_leaf=lambda x: isinstance(x, P))
+
+
+def stream_state_specs(tree, mesh: Mesh, axis: str = "data"):
+    """Shard-or-replicate PartitionSpecs for an accumulated-state pytree.
+
+    The elastic-restore policy for checkpoints whose structure is only
+    known at load time (a streaming ``FitState``, an eval accumulator):
+    each array leaf shards its *largest* ``axis``-divisible dimension over
+    the mesh's ``axis`` and replicates everything else — small leaves
+    (counters, per-chunk label rows, signature blocks) replicate whole.
+    Pairs with ``fault_tolerance.elastic_restore`` to bring a fit state
+    up on a different device count than the one that wrote it
+    (tests/test_fault_tolerance.py drives this on a forced 8-device host
+    mesh).
+    """
+    size = mesh.shape[axis]
+
+    def one(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        dims: list[Any] = [None] * len(shape)
+        for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+            if shape[i] % size == 0 and shape[i] >= size:
+                dims[i] = axis
+                break
+        return P(*dims)
+
+    return jax.tree.map(one, tree)
 
 
 def batch_specs(cfg: ArchConfig, mesh: Mesh, ax: MeshAxes = MeshAxes(),

@@ -19,11 +19,14 @@ from .assign import (
     assign_rows_topk,
 )
 from .fit import (
+    FIT_STATE_KIND,
     FitStats,
     StreamConfig,
     StreamingCocluster,
     fit,
     iter_row_chunks,
+    load_fit_state,
+    save_fit_state,
     stream_config_from_lamc,
 )
 from .model import (
@@ -41,6 +44,7 @@ __all__ = [
     "model_from_result", "model_memberships", "save_model", "load_model",
     "StreamConfig", "StreamingCocluster", "FitStats", "fit",
     "iter_row_chunks", "stream_config_from_lamc",
+    "FIT_STATE_KIND", "save_fit_state", "load_fit_state",
     "AssignResult", "TopKAssignResult", "assign_rows", "assign_cols",
     "assign_rows_topk", "assign_cols_topk",
 ]

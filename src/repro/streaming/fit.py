@@ -1,4 +1,4 @@
-"""Out-of-core streaming co-clustering fit (DESIGN.md §10).
+"""Out-of-core streaming co-clustering fit (DESIGN.md §10, §12).
 
 ``fit(chunks, cfg)`` consumes the data matrix as a stream of **row
 chunks** (dense arrays or BCOO, each ``(r, N)``) and grows a
@@ -35,17 +35,36 @@ reservoir sliver space. Because the global alignment sees every atom —
 not a first-chunk bootstrap — streaming consensus quality matches the
 batch merge instead of depending on the first chunk's luck.
 
+**Resumable chunk steps (DESIGN.md §12).** Every chunk fold is a keyed,
+re-runnable unit: its randomness is counter-derived from ``(seed, t)``
+(atom keys, column permutations, AND the reservoir draws — a fresh
+``default_rng([seed + 13, t])`` per chunk, never a sequential host RNG),
+and the whole accumulator is a serializable pytree (``state_tree`` /
+``from_state_tree``) checkpointed via ``repro.checkpoint``. ``fit``
+accepts ``ckpt_dir``/``save_every`` (periodic ``FitState`` checkpoints
+driven through ``runtime.fault_tolerance.run_with_recovery``),
+``failure_injector`` (a ``SimulatedFailure`` mid-fit restores the latest
+state and refolds the lost chunks from a bounded replay buffer), and
+``resume_from`` (a new process continues a killed fit). An interrupted
+fit that resumes produces a **bit-identical** ``CoclusterModel`` to the
+uninterrupted run at equal seeds — the recovery-equivalence invariant
+``tests/test_fault_tolerance.py`` pins, including across a real SIGKILL
+and an elastic restore onto a different device count.
+
 Memory audit (the O(chunk + model) claim): resident at any time are one
 chunk (``r x N``), the reservoir sliver (``anchor_rows x N``), and the
 accumulated atom summaries + local labels, which are O(atoms * q + M *
-B/r) — proportional to model/label state, never ``M x N``. ``FitStats``
-reports the measured peaks.
+B/r) — proportional to model/label state, never ``M x N``. With recovery
+enabled, a replay buffer of the last ``save_every + 2`` chunks is also
+resident (the chunks a restore may need to refold). ``FitStats`` reports
+the measured peaks.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import time
 from typing import Iterable, NamedTuple
 
@@ -53,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as _ckpt
 from repro.core import merging as _merging
 from repro.core import sparse as _sparse
 from repro.core import spectral as _spectral
@@ -62,7 +82,15 @@ from repro.core.lamc import validate_assignment as _validate_assignment
 from .model import CoclusterModel
 
 __all__ = ["StreamConfig", "FitStats", "StreamingCocluster", "fit",
-           "iter_row_chunks", "stream_config_from_lamc"]
+           "iter_row_chunks", "stream_config_from_lamc",
+           "FIT_STATE_KIND", "save_fit_state", "load_fit_state"]
+
+logger = logging.getLogger("repro.streaming.fit")
+
+#: extra_meta["kind"] tag of a FitState checkpoint — distinguishes an
+#: in-progress fit from a servable CoclusterModel artifact.
+FIT_STATE_KIND = "stream_fit_state"
+_FIT_STATE_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,13 +213,25 @@ def _nbytes(x) -> int:
                else x.size * x.dtype.itemsize)
 
 
+def _chunk_fingerprint(chunk) -> tuple[str, np.dtype]:
+    """(format, value dtype) of one chunk — the trace-shaping properties a
+    stream must hold constant (validated per chunk, DESIGN.md §12)."""
+    if _sparse.is_bcoo(chunk):
+        return "bcoo", np.dtype(chunk.data.dtype)
+    return "dense", np.dtype(chunk.dtype)
+
+
 class StreamingCocluster:
     """Stateful out-of-core fitter: ``partial_fit`` chunks, then ``finalize``.
 
     State is model-sized only: per-chunk atom summaries (signatures,
     counts, anchor-feature sums — ``O(B * k * q)`` each), per-chunk local
     labels (``(B, r)`` ints), and the ``(anchor_rows, N)`` reservoir
-    sliver. The data chunks themselves are never retained.
+    sliver. The data chunks themselves are never retained. The whole
+    accumulator serializes to a checkpointable pytree (``state_tree``)
+    and rebuilds from one (``from_state_tree``) — every source of
+    randomness is counter-derived from ``(cfg.seed, chunk index)``, so a
+    rebuilt fitter continues bit-identically.
     """
 
     def __init__(self, cfg: StreamConfig):
@@ -206,10 +246,11 @@ class StreamingCocluster:
         self._atom_sums: list[np.ndarray] = []       # per chunk (B*k, q) raw
         self._chunk_labels: list[np.ndarray] = []    # per chunk (B, r) int32
         self._anchor_sum: np.ndarray | None = None   # (q,)
-        self._res_rng: np.random.Generator = np.random.default_rng(cfg.seed + 13)
         self._res_ids: np.ndarray | None = None      # (q_res,) global row ids
         self._res_vals: np.ndarray | None = None     # (q_res, N)
         self._res_fill = 0
+        self._chunk_format: str | None = None        # "dense" | "bcoo"
+        self._chunk_dtype: np.dtype | None = None
         self.rows_seen = 0
         self.chunks = 0
         self._t0 = time.perf_counter()
@@ -238,22 +279,78 @@ class StreamingCocluster:
         return _prob.spmm_route(chunk.nse / float(max(r * n, 1)),
                                 float(r) * n)
 
+    # --------------------------------------------------------------- validate
+
+    def _validate_chunk(self, chunk, t: int) -> None:
+        """Loud, chunk-indexed failure on a malformed mid-stream chunk.
+
+        Catches the three drifts that otherwise surface as a deep jit
+        shape/dtype error many frames below the ingest loop: wrong column
+        count, value-dtype drift, and a dense<->BCOO format flip.
+        """
+        if _sparse.is_bcoo(chunk):
+            _sparse.validate_bcoo(chunk)
+        shape = tuple(chunk.shape)
+        if len(shape) != 2:
+            raise ValueError(
+                f"chunk {t}: must be 2-D (rows, n_cols), got shape {shape}")
+        fmt, dtype = _chunk_fingerprint(chunk)
+        if self._n_cols is None:
+            return  # first chunk defines the stream fingerprint
+        if int(shape[1]) != self._n_cols:
+            raise ValueError(
+                f"chunk {t}: chunk has {shape[1]} columns, stream started "
+                f"with {self._n_cols} — expected shape "
+                f"(rows, {self._n_cols}), got {shape}")
+        if self._chunk_format is not None and fmt != self._chunk_format:
+            raise ValueError(
+                f"chunk {t}: stream started with {self._chunk_format} "
+                f"chunks, got {fmt} — a dense/BCOO flip mid-stream changes "
+                "the compiled chunk program; convert upstream "
+                "(data.synthetic.to_bcoo or .todense) instead")
+        if self._chunk_dtype is not None and dtype != self._chunk_dtype:
+            raise ValueError(
+                f"chunk {t}: value dtype drifted — stream started with "
+                f"{self._chunk_dtype}, got {dtype}; cast the chunk before "
+                "partial_fit")
+
+    def check_replayed_chunk(self, chunk, t: int) -> None:
+        """Validate a chunk being skipped on resume against the recorded
+        fold: its shape must match what checkpoint step ``t`` folded."""
+        if t >= self.chunks:
+            raise ValueError(
+                f"chunk {t} replayed but only {self.chunks} chunks are in "
+                "the restored state")
+        want_rows = int(self._chunk_labels[t].shape[1])
+        shape = tuple(chunk.shape)
+        if shape != (want_rows, self._n_cols):
+            raise ValueError(
+                f"resumed stream does not match the checkpoint: chunk {t} "
+                f"was folded with shape ({want_rows}, {self._n_cols}), the "
+                f"replayed stream yields {shape} — resume requires the "
+                "same chunking of the same stream")
+
     # -------------------------------------------------------------- reservoir
 
-    def _reservoir_update(self, chunk, r: int) -> None:
+    def _reservoir_update(self, chunk, r: int, t: int) -> None:
         """Algorithm R over the arriving rows (uniform over the stream).
 
         Vectorized per chunk: one RNG call draws every row's slot
         candidate, so ingest pays no per-row Python loop. Duplicate slot
         hits within a chunk resolve to the *last* arriving row (numpy
         fancy assignment applies writes in index order), matching the
-        sequential formulation.
+        sequential formulation. The generator is counter-derived from
+        ``(seed, t)`` — chunk ``t``'s draws are a pure function of the
+        chunk index, never of how many draws preceded them, so a fit
+        resumed from a checkpoint replays the identical reservoir
+        (DESIGN.md §12 RNG-provenance invariant).
         """
         cap = self.cfg.anchor_rows
+        rng = np.random.default_rng([self.cfg.seed + 13, t])
         gids = self.rows_seen + np.arange(r, dtype=np.int64)
         n_fill = min(max(cap - self._res_fill, 0), r)
         fill_slots = np.arange(self._res_fill, self._res_fill + n_fill)
-        j = self._res_rng.integers(0, gids[n_fill:] + 1)        # (r - n_fill,)
+        j = rng.integers(0, gids[n_fill:] + 1)                  # (r - n_fill,)
         keep = j < cap
         rows = np.concatenate([np.arange(n_fill), n_fill + np.nonzero(keep)[0]])
         slots = np.concatenate([fill_slots, j[keep]])
@@ -312,21 +409,18 @@ class StreamingCocluster:
 
     def partial_fit(self, chunk) -> "StreamingCocluster":
         """Fold one ``(r, N)`` row chunk (dense or BCOO) into the model."""
-        if _sparse.is_bcoo(chunk):
-            _sparse.validate_bcoo(chunk)
-        shape = chunk.shape
-        if len(shape) != 2:
-            raise ValueError(f"chunk must be 2-D (rows, n_cols), got {shape}")
+        t = self.chunks
+        self._validate_chunk(chunk, t)
+        shape = tuple(chunk.shape)
         if self._n_cols is None:
             self._init_state(int(shape[1]))
-        elif int(shape[1]) != self._n_cols:
-            raise ValueError(
-                f"chunk has {shape[1]} columns, stream started with "
-                f"{self._n_cols}")
+        if self._chunk_format is None:
+            # first chunk — or a fitter rebuilt from a tree without stream
+            # metadata (elastic restore): adopt this chunk's fingerprint
+            self._chunk_format, self._chunk_dtype = _chunk_fingerprint(chunk)
         r = int(shape[0])
         if r == 0:
             return self
-        t = self.chunks
         self._peak_chunk_bytes = max(self._peak_chunk_bytes, _nbytes(chunk))
 
         blocks, feats = self._blocks_and_feats(chunk, t)
@@ -340,9 +434,79 @@ class StreamingCocluster:
         self._chunk_labels.append(np.asarray(row_labels))
         self._anchor_sum += np.asarray(feats, dtype=np.float32).sum(axis=0)
 
-        self._reservoir_update(chunk, r)
+        self._reservoir_update(chunk, r, t)
         self.rows_seen += r
         self.chunks += 1
+        return self
+
+    # ------------------------------------------------------------- checkpoint
+
+    def state_tree(self) -> dict:
+        """The fit accumulator as a checkpointable pytree (host arrays).
+
+        Everything ``from_state_tree`` needs to continue the fit
+        bit-identically: atom summaries + local labels per chunk (keyed
+        by zero-padded chunk index so flattened leaf names sort), the
+        reservoir (ids, sliver, fill), the running anchor sum, and the
+        integer counters packed into one ``scalars`` vector. RNG state is
+        deliberately absent — all randomness is ``(seed, chunk)``
+        counter-derived, so provenance is the counters themselves.
+        """
+        if self._n_cols is None:
+            raise ValueError("no chunks folded yet — nothing to checkpoint")
+        scalars = np.asarray(
+            [self._n_cols, self.rows_seen, self.chunks, self._res_fill,
+             self._peak_chunk_bytes], np.int64)
+        return {
+            "scalars": scalars,
+            "anchor_cols": np.asarray(self._anchor_cols),
+            "anchor_sum": np.asarray(self._anchor_sum),
+            "res_ids": np.asarray(self._res_ids),
+            "res_vals": np.asarray(self._res_vals),
+            "atom_sigs": {f"{i:06d}": a for i, a in enumerate(self._atom_sigs)},
+            "atom_cnts": {f"{i:06d}": a for i, a in enumerate(self._atom_cnts)},
+            "atom_sums": {f"{i:06d}": a for i, a in enumerate(self._atom_sums)},
+            "chunk_labels": {f"{i:06d}": a
+                             for i, a in enumerate(self._chunk_labels)},
+        }
+
+    @classmethod
+    def from_state_tree(cls, cfg: StreamConfig, tree: dict,
+                        chunk_format: str | None = None,
+                        chunk_dtype: str | None = None
+                        ) -> "StreamingCocluster":
+        """Rebuild a fitter from a ``state_tree`` pytree (leaves may be
+        numpy or device arrays — an elastic restore hands sharded device
+        arrays straight in; they are gathered to host here)."""
+        self = cls(cfg)
+        sc = np.asarray(tree["scalars"]).astype(np.int64)
+        self._n_cols = int(sc[0])
+        self.rows_seen = int(sc[1])
+        self.chunks = int(sc[2])
+        self._res_fill = int(sc[3])
+        self._peak_chunk_bytes = int(sc[4])
+        self._anchor_cols = jnp.asarray(np.asarray(tree["anchor_cols"]))
+        # explicit copies: these are mutated in place by partial_fit, and
+        # np.asarray of a device array yields a read-only view
+        self._anchor_sum = np.array(tree["anchor_sum"], np.float32)
+        self._res_ids = np.array(tree["res_ids"], np.int64)
+        self._res_vals = np.array(tree["res_vals"], np.float32)
+        for field, dst in (("atom_sigs", self._atom_sigs),
+                           ("atom_cnts", self._atom_cnts),
+                           ("atom_sums", self._atom_sums),
+                           ("chunk_labels", self._chunk_labels)):
+            node = tree.get(field, {})
+            for key in sorted(node):
+                dst.append(np.asarray(node[key]))
+            if len(dst) != self.chunks:
+                raise ValueError(
+                    f"fit state is inconsistent: {self.chunks} chunks "
+                    f"recorded but {field} holds {len(dst)} entries — "
+                    "partial or foreign checkpoint")
+        if chunk_format is not None:
+            self._chunk_format = chunk_format
+        if chunk_dtype is not None:
+            self._chunk_dtype = np.dtype(chunk_dtype)
         return self
 
     # --------------------------------------------------------------- finalize
@@ -440,16 +604,240 @@ class StreamingCocluster:
         return model, stats
 
 
-def fit(chunks: Iterable, cfg: StreamConfig) -> tuple[CoclusterModel, FitStats]:
+# ---------------------------------------------------------------------------
+# FitState checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+
+def save_fit_state(ckpt_dir: str, fitter: StreamingCocluster) -> str:
+    """Checkpoint an in-progress fit (atomic, hash-manifested commit).
+
+    The checkpoint step is the number of chunks folded, so
+    ``checkpoint.latest_step`` IS the resume point.
+    """
+    meta = {
+        "kind": FIT_STATE_KIND,
+        "version": _FIT_STATE_VERSION,
+        "stream_config": dataclasses.asdict(fitter.cfg),
+        "chunks": fitter.chunks,
+        "rows_seen": fitter.rows_seen,
+        "chunk_format": fitter._chunk_format,
+        "chunk_dtype": (str(fitter._chunk_dtype)
+                        if fitter._chunk_dtype is not None else None),
+    }
+    return _ckpt.save(ckpt_dir, fitter.chunks, fitter.state_tree(),
+                      extra_meta=meta)
+
+
+def load_fit_state(ckpt_dir: str, cfg: StreamConfig, step: int | None = None
+                   ) -> tuple[StreamingCocluster, int]:
+    """Restore ``(fitter, chunks_folded)`` from a FitState checkpoint.
+
+    Loud failure modes: no committed checkpoint (``FileNotFoundError``),
+    foreign/stale checkpoint kind, and a config that differs from the
+    one the state was fit with — recovery equivalence (DESIGN.md §12)
+    only holds when the resumed fit runs the *same* program, so every
+    differing field is named instead of silently continuing. Corrupt or
+    truncated payloads surface as ``checkpoint.CheckpointCorruptError``
+    naming the bad leaf.
+    """
+    if step is None:
+        step = _ckpt.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(
+            f"no committed fit state under {ckpt_dir!r} — nothing to resume "
+            "from (the fit died before its first checkpoint, or the path is "
+            "wrong); rerun without resume_from")
+    tree, meta = _ckpt.restore_tree(ckpt_dir, step)
+    meta = meta or {}
+    if meta.get("kind") != FIT_STATE_KIND:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir!r} step {step} is "
+            f"kind={meta.get('kind')!r}, expected {FIT_STATE_KIND!r} — not "
+            "an in-progress streaming fit (a finished CoclusterModel "
+            "artifact loads via streaming.load_model instead)")
+    saved_cfg = meta.get("stream_config") or {}
+    want_cfg = dataclasses.asdict(cfg)
+    diffs = sorted(k for k in want_cfg
+                   if saved_cfg.get(k) != want_cfg[k])
+    if diffs:
+        detail = ", ".join(
+            f"{k}: checkpoint={saved_cfg.get(k)!r} vs resume={want_cfg[k]!r}"
+            for k in diffs)
+        raise ValueError(
+            "resume config mismatch — recovery equivalence requires the "
+            f"identical StreamConfig; differing fields: {detail}")
+    fitter = StreamingCocluster.from_state_tree(
+        cfg, tree, chunk_format=meta.get("chunk_format"),
+        chunk_dtype=meta.get("chunk_dtype"))
+    if fitter.chunks != int(meta.get("chunks", fitter.chunks)):
+        raise ValueError(
+            f"fit state at step {step} records {meta.get('chunks')} chunks "
+            f"in its meta but {fitter.chunks} in its tree — corrupt or "
+            "hand-edited checkpoint")
+    return fitter, fitter.chunks
+
+
+# ---------------------------------------------------------------------------
+# fit driver: plain loop, or resumable chunk steps through run_with_recovery
+# ---------------------------------------------------------------------------
+
+
+class _ChunkCursor:
+    """Stream cursor with a bounded replay buffer.
+
+    ``get(t)`` returns chunk ``t``: from the buffer when a recovery
+    rolled the step counter back, else by advancing the underlying
+    iterator (strictly sequential). The buffer keeps the last
+    ``save_every + 2`` chunks — exactly the window a restore from the
+    latest checkpoint can need to refold — so recovery never requires a
+    rewindable stream. Raises ``StopIteration`` on exhaustion (the
+    stream-driven termination signal of ``run_with_recovery``).
+    """
+
+    def __init__(self, it, start: int, keep: int):
+        self._it = it
+        self._next = start
+        self._keep = max(keep, 1)
+        self._buf: dict = {}
+
+    def get(self, t: int):
+        if t in self._buf:
+            return self._buf[t]
+        if t != self._next:
+            raise RuntimeError(
+                f"chunk {t} requested but the replay buffer holds "
+                f"{sorted(self._buf)} and the stream cursor is at "
+                f"{self._next} — the restore point fell behind the "
+                f"{self._keep}-chunk buffer (save_every too large for the "
+                "failure pattern?)")
+        chunk = next(self._it)          # StopIteration = stream exhausted
+        self._buf[t] = chunk
+        if len(self._buf) > self._keep:
+            del self._buf[min(self._buf)]
+        self._next = t + 1
+        return chunk
+
+
+def _skip_empty(chunk) -> bool:
+    return int(chunk.shape[0]) == 0 if len(chunk.shape) == 2 else False
+
+
+def fit(chunks: Iterable, cfg: StreamConfig, *,
+        ckpt_dir: str | None = None, save_every: int = 0,
+        resume_from: str | None = None,
+        failure_injector=None, max_retries: int = 8
+        ) -> tuple[CoclusterModel, FitStats]:
     """Out-of-core fit over an iterable of row chunks (dense or BCOO).
 
     Rows are assigned global ids by arrival order. Returns
     ``(model, stats)``; peak resident data is one chunk + the model-sized
     accumulators (``stats`` reports both).
+
+    Crash-consistent, resumable operation (DESIGN.md §12):
+
+    ``ckpt_dir`` + ``save_every``
+        checkpoint the ``FitState`` every ``save_every`` chunks (and at
+        stream end) via ``repro.checkpoint`` — atomic, fsync'd,
+        hash-manifested commits. The chunk loop runs through
+        ``runtime.fault_tolerance.run_with_recovery``.
+    ``resume_from``
+        restore the latest committed ``FitState`` from this directory
+        before consuming the stream; the already-folded chunks are drawn
+        off the iterable and shape-checked against the recorded folds.
+        Raises ``FileNotFoundError`` when nothing is committed there.
+    ``failure_injector``
+        a ``runtime.fault_tolerance.FailureInjector`` whose
+        ``maybe_fail(t)`` runs after each chunk fold — a
+        ``SimulatedFailure`` exercises the real restore path (state is
+        rebuilt from the latest checkpoint and the lost chunks refold
+        from a bounded replay buffer). Requires ``ckpt_dir``.
+
+    Equivalence guarantee: with equal seeds and the same stream, an
+    interrupted-and-resumed fit returns a bit-identical
+    ``CoclusterModel`` to an uninterrupted one — every chunk step's
+    randomness is ``(seed, t)`` counter-derived and the accumulator
+    round-trips exactly.
     """
-    fitter = StreamingCocluster(cfg)
-    for chunk in chunks:
-        fitter.partial_fit(chunk)
+    if save_every < 0:
+        raise ValueError(f"save_every must be >= 0, got {save_every}")
+    if (ckpt_dir is None) != (save_every == 0):
+        raise ValueError(
+            "checkpointing needs both knobs: pass ckpt_dir AND save_every "
+            f">= 1 together (got ckpt_dir={ckpt_dir!r}, "
+            f"save_every={save_every})")
+    recovery = ckpt_dir is not None
+    if failure_injector is not None and not recovery:
+        raise ValueError(
+            "failure_injector without ckpt_dir/save_every cannot recover — "
+            "there is no checkpoint to restore from")
+
+    if resume_from is not None:
+        fitter, start = load_fit_state(resume_from, cfg)
+        logger.info("resuming fit from %s at chunk %d (%d rows folded)",
+                    resume_from, start, fitter.rows_seen)
+    else:
+        fitter, start = StreamingCocluster(cfg), 0
+
+    it = iter(chunks)
+
+    # draw the already-folded chunks off the stream, checking each against
+    # the recorded fold — a different stream/chunking cannot silently
+    # masquerade as a resume
+    skipped = 0
+    while skipped < start:
+        try:
+            chunk = next(it)
+        except StopIteration:
+            raise ValueError(
+                f"resume_from state has {start} chunks folded but the "
+                f"stream ended after {skipped} — resuming needs the same "
+                "stream, re-chunked identically") from None
+        if _skip_empty(chunk):
+            continue
+        fitter.check_replayed_chunk(chunk, skipped)
+        skipped += 1
+
+    if not recovery:
+        for chunk in it:
+            fitter.partial_fit(chunk)
+        return fitter.finalize()
+
+    cursor = _ChunkCursor(it, start=start, keep=save_every + 2)
+
+    def step_fn(t: int, f: StreamingCocluster) -> StreamingCocluster:
+        chunk = cursor.get(t)
+        while _skip_empty(chunk):
+            chunk = cursor.get(t)   # empty chunks are not steps
+        f.partial_fit(chunk)
+        if failure_injector is not None:
+            # post-fold: the in-memory state is dirty, so recovery must
+            # genuinely rebuild from the checkpoint, not shrug and retry
+            failure_injector.maybe_fail(t)
+        return f
+
+    def restore_state(step: int) -> StreamingCocluster:
+        if step < 0:
+            # no checkpoint committed yet: from scratch (or the resume point)
+            if resume_from is not None:
+                f, _ = load_fit_state(resume_from, cfg)
+                return f
+            return StreamingCocluster(cfg)
+        f, _ = load_fit_state(ckpt_dir, cfg, step=step)
+        return f
+
+    from repro.runtime import fault_tolerance as _ft
+
+    fitter, loop_stats = _ft.run_with_recovery(
+        total_steps=None, step_fn=step_fn, state=fitter,
+        ckpt_dir=ckpt_dir, save_every=save_every,
+        restore_state=restore_state, max_retries=max_retries,
+        start_step=start,
+        save_fn=lambda _step, f: save_fit_state(ckpt_dir, f))
+    if loop_stats["failures"]:
+        logger.info("fit recovered from %d injected failure(s); final "
+                    "chunk step %d", loop_stats["failures"],
+                    loop_stats["final_step"])
     return fitter.finalize()
 
 
@@ -459,7 +847,9 @@ def iter_row_chunks(matrix: np.ndarray, chunk_rows: int,
 
     Test/benchmark helper: real out-of-core callers stream chunks from
     disk or the wire. ``format='bcoo'`` converts each chunk (only the
-    chunk — O(chunk nnz)) via ``data.synthetic.to_bcoo``.
+    chunk — O(chunk nnz)) via ``data.synthetic.to_bcoo``. The yielded
+    chunking is deterministic, so the same call replays the same stream
+    — what ``fit(resume_from=...)`` needs to continue a killed fit.
     """
     if format not in ("dense", "bcoo"):
         raise ValueError(f"format must be 'dense' or 'bcoo', got {format!r}")

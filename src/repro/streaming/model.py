@@ -141,12 +141,10 @@ def _model_template(ckpt_dir: str, step: int) -> CoclusterModel:
 
     The checkpoint machinery restores *into* a structure; for a model we
     only know the NamedTuple, so shapes come from the manifest itself.
+    Goes through ``checkpoint.read_manifest`` so a missing/truncated
+    manifest surfaces as ``CheckpointCorruptError``, not a JSON traceback.
     """
-    import json
-    import os
-
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
-        meta = json.load(f)
+    meta = _ckpt.read_manifest(ckpt_dir, step)
     leaves = meta["leaves"]
     # leaf names come from the checkpoint's own flattener so the template
     # construction can never drift from the save-side naming

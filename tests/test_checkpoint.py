@@ -90,3 +90,110 @@ class TestScalarAndIntTrees:
         ckpt.save(str(tmp_path), 3, tree)
         (tmp_path / "step_00000009").mkdir()  # no _COMMITTED sentinel
         assert ckpt.latest_step(str(tmp_path)) == 3
+
+    def test_latest_step_ignores_tmp_dirs(self, tmp_path):
+        # a crash mid-save leaves step_X.tmp behind; it must be invisible
+        tree = _model_tree()
+        ckpt.save(str(tmp_path), 3, tree)
+        crashed = tmp_path / "step_00000007.tmp"
+        crashed.mkdir()
+        (crashed / "_COMMITTED").write_text("ok")  # even with a sentinel
+        assert ckpt.available_steps(str(tmp_path)) == [3]
+
+
+class TestCrashConsistency:
+    """A corrupt checkpoint must raise CheckpointCorruptError naming the
+    damage — never restore silent garbage (DESIGN.md §12)."""
+
+    def _save_one(self, tmp_path):
+        tree = _model_tree()
+        path = ckpt.save(str(tmp_path), 0, tree, extra_meta={"kind": "t"})
+        return tree, path
+
+    def test_hash_mismatch_names_the_bad_leaf(self, tmp_path):
+        import json
+
+        tree, path = self._save_one(tmp_path)
+        # rewrite one leaf's recorded hash: the payload no longer matches
+        mpath = f"{path}/manifest.json"
+        meta = json.load(open(mpath))
+        meta["leaves"][".votes"]["sha256"] = "0" * 64
+        json.dump(meta, open(mpath, "w"))
+        with pytest.raises(ckpt.CheckpointCorruptError, match="votes"):
+            ckpt.restore(str(tmp_path), 0, tree)
+
+    def test_truncated_arrays_is_loud(self, tmp_path):
+        tree, path = self._save_one(tmp_path)
+        npz = f"{path}/arrays.npz"
+        blob = open(npz, "rb").read()
+        with open(npz, "wb") as f:
+            f.write(blob[: len(blob) // 2])
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore(str(tmp_path), 0, tree)
+
+    def test_flipped_payload_byte_is_loud(self, tmp_path):
+        tree, path = self._save_one(tmp_path)
+        npz = f"{path}/arrays.npz"
+        blob = bytearray(open(npz, "rb").read())
+        # flip a byte inside the votes payload (0.5f32 = 00 00 00 3f,
+        # stored verbatim — np.savez members are uncompressed)
+        needle = np.asarray(tree.votes).tobytes()[:16]
+        at = blob.find(needle)
+        assert at > 0, "votes payload not found in npz"
+        blob[at] ^= 0xFF
+        with open(npz, "wb") as f:
+            f.write(blob)
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore(str(tmp_path), 0, tree)
+
+    def test_missing_arrays_is_loud(self, tmp_path):
+        import os
+
+        tree, path = self._save_one(tmp_path)
+        os.remove(f"{path}/arrays.npz")
+        with pytest.raises(ckpt.CheckpointCorruptError, match="arrays.npz"):
+            ckpt.restore(str(tmp_path), 0, tree)
+
+    def test_corrupt_manifest_is_loud(self, tmp_path):
+        tree, path = self._save_one(tmp_path)
+        with open(f"{path}/manifest.json", "w") as f:
+            f.write('{"step": 0, "leav')  # truncated json
+        with pytest.raises(ckpt.CheckpointCorruptError, match="manifest"):
+            ckpt.read_manifest(str(tmp_path), 0)
+
+    def test_uncommitted_is_filenotfound_not_corrupt(self, tmp_path):
+        # no sentinel = "never finished", a different failure mode than
+        # "finished then damaged"
+        (tmp_path / "step_00000000").mkdir()
+        with pytest.raises(FileNotFoundError):
+            ckpt.read_manifest(str(tmp_path), 0)
+
+
+class TestRestoreTree:
+    def test_nested_dict_roundtrip_without_template(self, tmp_path):
+        tree = {
+            "scalars": np.asarray([5, 7], np.int64),
+            "per_chunk": {f"{i:06d}": np.full((2, 3), i, np.float32)
+                          for i in range(3)},
+        }
+        ckpt.save(str(tmp_path), 4, tree, extra_meta={"kind": "state"})
+        back, extra = ckpt.restore_tree(str(tmp_path), 4)
+        assert extra == {"kind": "state"}
+        np.testing.assert_array_equal(back["scalars"], [5, 7])
+        assert sorted(back["per_chunk"]) == ["000000", "000001", "000002"]
+        for i in range(3):
+            np.testing.assert_array_equal(back["per_chunk"][f"{i:06d}"],
+                                          np.full((2, 3), i))
+
+    def test_restore_tree_verifies_hashes(self, tmp_path):
+        tree = {"a": np.arange(8, dtype=np.float32)}
+        path = ckpt.save(str(tmp_path), 0, tree)
+        npz = f"{path}/arrays.npz"
+        blob = bytearray(open(npz, "rb").read())
+        at = blob.find(tree["a"].tobytes())
+        assert at > 0
+        blob[at] ^= 0xFF
+        with open(npz, "wb") as f:
+            f.write(blob)
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore_tree(str(tmp_path), 0)

@@ -1,0 +1,512 @@
+"""Fault tolerance end-to-end: the recovery loop itself, kill-and-resume
+equivalence for the streaming fit, elastic restore on a different device
+count, and the paper's statistical fault budget (T_p) tested
+differentially against real injected block failures (DESIGN.md §12).
+
+The recovery-equivalence invariant pinned here: with equal seeds and the
+same stream, a fit interrupted by ``SimulatedFailure`` (in-process) or
+SIGKILL (subprocess) and resumed from its latest ``FitState`` checkpoint
+produces a **bit-identical** ``CoclusterModel`` to the uninterrupted run.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro import checkpoint as ckpt
+from repro.core import probability as prob
+from repro.core.lamc import LAMCConfig, lamc_cocluster
+from repro.core.metrics import nmi
+from repro.core.partition import make_plan
+from repro.data import planted_cocluster_matrix
+from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
+                                           run_with_recovery)
+
+import importlib
+
+sfit = importlib.import_module("repro.streaming.fit")
+
+MODEL_FIELDS = ("row_labels", "col_labels", "row_votes", "col_votes",
+                "row_sigs", "col_sigs", "row_mean", "col_mean",
+                "anchor_rows", "anchor_cols")
+
+
+def assert_models_bit_identical(a, b):
+    for name in MODEL_FIELDS:
+        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert x.dtype == y.dtype, f"{name}: dtype {x.dtype} vs {y.dtype}"
+        assert np.array_equal(x, y), f"{name} differs"
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector (satellite: typed per-instance mutable field)
+# ---------------------------------------------------------------------------
+
+
+class TestFailureInjector:
+    def test_fires_once_per_step(self):
+        inj = FailureInjector(fail_at_steps=(2,))
+        inj.maybe_fail(0)
+        with pytest.raises(SimulatedFailure, match="step 2"):
+            inj.maybe_fail(2)
+        inj.maybe_fail(2)  # retried step passes
+
+    def test_fired_sets_are_per_instance(self):
+        # the dataclass field must be default_factory, not a shared class set
+        a = FailureInjector(fail_at_steps=(1,))
+        b = FailureInjector(fail_at_steps=(1,))
+        with pytest.raises(SimulatedFailure):
+            a.maybe_fail(1)
+        with pytest.raises(SimulatedFailure):
+            b.maybe_fail(1)  # a's firing must not consume b's
+
+
+# ---------------------------------------------------------------------------
+# run_with_recovery loop properties
+# ---------------------------------------------------------------------------
+
+
+def _drive_loop(tmp_path, *, total, save_every, fail_at=(), max_retries=8):
+    """Integer-counter harness over the real checkpoint machinery.
+
+    Returns (final_state_value, loop_stats, save_steps, restore_steps).
+    """
+    d = str(tmp_path)
+    inj = FailureInjector(fail_at_steps=tuple(fail_at))
+    saves, restores = [], []
+
+    def step_fn(t, s):
+        out = {"v": np.asarray(s["v"] + 1, np.int64)}
+        inj.maybe_fail(t)
+        return out
+
+    def save_fn(s, st):
+        saves.append(s)
+        ckpt.save(d, s, st, extra_meta={"step": s})
+
+    def restore_state(step):
+        restores.append(step)
+        if step < 0:
+            return {"v": np.asarray(0, np.int64)}
+        tree, _ = ckpt.restore(d, step, {"v": np.asarray(0, np.int64)})
+        return tree
+
+    state, stats = run_with_recovery(
+        total_steps=total, step_fn=step_fn,
+        state={"v": np.asarray(0, np.int64)},
+        ckpt_dir=d, save_every=save_every, restore_state=restore_state,
+        max_retries=max_retries, save_fn=save_fn)
+    return int(state["v"]), stats, saves, restores
+
+
+class TestRunWithRecovery:
+    def test_monotonic_progress_and_failure_count(self, tmp_path):
+        v, stats, saves, restores = _drive_loop(
+            tmp_path, total=7, save_every=2, fail_at=(0, 3, 5))
+        assert v == 7 and stats["final_step"] == 7
+        assert stats["failures"] == 3
+        # restores land on latest_step at failure time (or -1 pre-first-save)
+        assert restores == [-1, 2, 4]
+
+    def test_no_duplicate_save_when_final_step_hits_save_every(self, tmp_path):
+        # total=6, save_every=3: step 6 is both a periodic save and the
+        # final step — exactly one write must happen for it
+        v, stats, saves, _ = _drive_loop(tmp_path, total=6, save_every=3)
+        assert v == 6
+        assert saves == [3, 6]
+        assert ckpt.available_steps(str(tmp_path)) == [3, 6]
+
+    def test_bounded_retries(self, tmp_path):
+        class _AlwaysFail:
+            def maybe_fail(self, t):
+                raise SimulatedFailure("always")
+
+        inj = _AlwaysFail()
+
+        def step_fn(t, s):
+            inj.maybe_fail(t)
+            return s
+
+        with pytest.raises(RuntimeError, match="exceeded 3 retries"):
+            run_with_recovery(
+                total_steps=5, step_fn=step_fn, state={"v": np.asarray(0)},
+                ckpt_dir=str(tmp_path), save_every=2,
+                restore_state=lambda s: {"v": np.asarray(max(s, 0))},
+                max_retries=3)
+
+    def test_stream_driven_termination_saves_tail(self, tmp_path):
+        # total_steps=None: StopIteration ends the loop; the 5th step is
+        # not a save_every multiple, so the post-loop save must cover it
+        d = str(tmp_path)
+        items = iter(range(5))
+        saves = []
+
+        def step_fn(t, s):
+            next(items)
+            return {"v": np.asarray(s["v"] + 1, np.int64)}
+
+        def save_fn(s, st):
+            saves.append(s)
+            ckpt.save(d, s, st, extra_meta={"step": s})
+
+        state, stats = run_with_recovery(
+            total_steps=None, step_fn=step_fn,
+            state={"v": np.asarray(0, np.int64)},
+            ckpt_dir=d, save_every=2, save_fn=save_fn)
+        assert int(state["v"]) == 5 and stats["final_step"] == 5
+        assert saves == [2, 4, 5]
+
+    def test_sized_run_ends_early_is_loud(self, tmp_path):
+        def step_fn(t, s):
+            raise StopIteration
+
+        with pytest.raises(StopIteration):
+            run_with_recovery(
+                total_steps=3, step_fn=step_fn, state=None,
+                ckpt_dir=str(tmp_path), save_every=2,
+                save_fn=lambda s, st: None)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 12), st.integers(1, 5),
+           st.sets(st.integers(0, 11), max_size=4))
+    def test_property_progress_failures_saves(self, tmp_path_factory,
+                                              total, save_every, fail_set):
+        tmp_path = tmp_path_factory.mktemp("loop")
+        fail_at = tuple(s for s in fail_set if s < total)
+        v, stats, saves, _ = _drive_loop(
+            tmp_path, total=total, save_every=save_every, fail_at=fail_at,
+            max_retries=len(fail_at) + 2)
+        assert v == total == stats["final_step"]       # monotonic progress
+        assert stats["failures"] == len(fail_at)       # every failure counted
+        assert saves == sorted(set(saves))             # no duplicate saves
+        assert saves[-1] == total                      # final state durable
+        assert ckpt.latest_step(str(tmp_path)) == total
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume equivalence for the streaming fit (tentpole invariant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_stream():
+    rng = np.random.default_rng(0)
+    data = planted_cocluster_matrix(rng, 400, 360, k=4, d=3, signal=3.5,
+                                    noise=0.4)
+    cfg = sfit.StreamConfig(n_row_clusters=4, n_col_clusters=3, col_blocks=2,
+                            chunk_resamples=1, signature_dim=32,
+                            anchor_rows=32, seed=11, merge_restarts=2)
+    return data, cfg
+
+
+def _chunks(data, rows=100):
+    return sfit.iter_row_chunks(data.matrix, rows)
+
+
+class TestKillAndResume:
+    def test_injected_failures_are_bit_identical(self, small_stream, tmp_path):
+        data, cfg = small_stream
+        m0, _ = sfit.fit(_chunks(data), cfg)
+        inj = FailureInjector(fail_at_steps=(1, 3))
+        m1, _ = sfit.fit(_chunks(data), cfg, ckpt_dir=str(tmp_path),
+                         save_every=2, failure_injector=inj)
+        assert inj._fired == {1, 3}
+        assert_models_bit_identical(m0, m1)
+
+    def test_failure_before_first_checkpoint_restarts_clean(self, small_stream,
+                                                            tmp_path):
+        data, cfg = small_stream
+        m0, _ = sfit.fit(_chunks(data), cfg)
+        inj = FailureInjector(fail_at_steps=(0,))
+        m1, _ = sfit.fit(_chunks(data), cfg, ckpt_dir=str(tmp_path),
+                         save_every=2, failure_injector=inj)
+        assert_models_bit_identical(m0, m1)
+
+    def test_cross_process_style_resume(self, small_stream, tmp_path):
+        # first "process": dies (exception) after checkpointing 2 chunks
+        data, cfg = small_stream
+        d = str(tmp_path)
+        m0, _ = sfit.fit(_chunks(data), cfg)
+        with pytest.raises(SimulatedFailure):
+            f = sfit.StreamingCocluster(cfg)
+            for t, chunk in enumerate(_chunks(data)):
+                f.partial_fit(chunk)
+                if (t + 1) % 2 == 0:
+                    sfit.save_fit_state(d, f)
+                if t == 2:
+                    raise SimulatedFailure("poof")
+        # second "process": resumes from the committed state and finishes
+        m1, stats = sfit.fit(_chunks(data), cfg, resume_from=d,
+                             ckpt_dir=d, save_every=2)
+        assert_models_bit_identical(m0, m1)
+        assert stats.chunks == 4
+
+    def test_resume_nothing_committed_is_loud(self, small_stream, tmp_path):
+        data, cfg = small_stream
+        with pytest.raises(FileNotFoundError, match="nothing to resume"):
+            sfit.fit(_chunks(data), cfg, resume_from=str(tmp_path))
+
+    def test_resume_config_mismatch_is_loud(self, small_stream, tmp_path):
+        data, cfg = small_stream
+        d = str(tmp_path)
+        f = sfit.StreamingCocluster(cfg)
+        f.partial_fit(next(iter(_chunks(data))))
+        sfit.save_fit_state(d, f)
+        other = dataclasses.replace(cfg, seed=cfg.seed + 1)
+        with pytest.raises(ValueError, match="seed"):
+            sfit.load_fit_state(d, other)
+
+    def test_resume_different_stream_is_loud(self, small_stream, tmp_path):
+        data, cfg = small_stream
+        d = str(tmp_path)
+        f = sfit.StreamingCocluster(cfg)
+        it = _chunks(data)
+        f.partial_fit(next(it))
+        f.partial_fit(next(it))
+        sfit.save_fit_state(d, f)
+        # replay with a different chunking: skip validation must object
+        with pytest.raises(ValueError, match="same stream"):
+            sfit.fit(sfit.iter_row_chunks(data.matrix, 80), cfg,
+                     resume_from=d)
+
+    def test_failure_injector_without_ckpt_is_loud(self, small_stream):
+        data, cfg = small_stream
+        with pytest.raises(ValueError, match="no checkpoint"):
+            sfit.fit(_chunks(data), cfg,
+                     failure_injector=FailureInjector(fail_at_steps=(1,)))
+
+    def test_corrupt_checkpoint_never_restores_silently(self, small_stream,
+                                                        tmp_path):
+        data, cfg = small_stream
+        d = str(tmp_path)
+        f = sfit.StreamingCocluster(cfg)
+        for t, chunk in enumerate(_chunks(data)):
+            f.partial_fit(chunk)
+            if t == 1:
+                break
+        path = sfit.save_fit_state(d, f)
+        # flip bytes inside the committed payload
+        npz = os.path.join(path, "arrays.npz")
+        blob = bytearray(open(npz, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        with open(npz, "wb") as fh:
+            fh.write(blob)
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            sfit.load_fit_state(d, cfg)
+
+
+# ---------------------------------------------------------------------------
+# real SIGKILL + elastic restore (subprocess: own XLA_FLAGS / real death)
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess_script(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+
+
+_COMMON = """
+import numpy as np
+import importlib
+
+sfit = importlib.import_module("repro.streaming.fit")
+from repro.data import planted_cocluster_matrix
+
+rng = np.random.default_rng(0)
+data = planted_cocluster_matrix(rng, 512, 400, k=4, d=3, signal=3.5, noise=0.4)
+cfg = sfit.StreamConfig(n_row_clusters=4, n_col_clusters=3, col_blocks=2,
+                        chunk_resamples=1, signature_dim=32, anchor_rows=32,
+                        seed=11, merge_restarts=2)
+def chunks():
+    return sfit.iter_row_chunks(data.matrix, 128)
+"""
+
+_KILL_SCRIPT = textwrap.dedent("""
+    import os, signal, sys
+    """) + _COMMON + textwrap.dedent("""
+    class KillAt:
+        def __init__(self, at): self.at = at
+        def maybe_fail(self, t):
+            if t == self.at:
+                os.kill(os.getpid(), signal.SIGKILL)  # no cleanup, no excuses
+    sfit.fit(chunks(), cfg, ckpt_dir=sys.argv[1], save_every=2,
+             failure_injector=KillAt(2))
+    print("UNREACHABLE")
+""")
+
+_RESUME_SCRIPT = textwrap.dedent("""
+    import sys
+    """) + _COMMON + textwrap.dedent("""
+    m0, _ = sfit.fit(chunks(), cfg)
+    m1, _ = sfit.fit(chunks(), cfg, resume_from=sys.argv[1],
+                     ckpt_dir=sys.argv[1], save_every=2)
+    for name in %r:
+        a, b = np.asarray(getattr(m0, name)), np.asarray(getattr(m1, name))
+        assert a.dtype == b.dtype and np.array_equal(a, b), name
+    print("RESUME_EQUAL")
+""" % (MODEL_FIELDS,))
+
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    """) + _COMMON + textwrap.dedent("""
+    from repro import checkpoint as ckpt
+    from repro.runtime import shardings
+    from repro.runtime.fault_tolerance import elastic_restore
+
+    assert len(jax.devices()) == 8, jax.devices()
+    d = sys.argv[1]
+
+    # "process 1" (conceptually single-device): folds 2 chunks, checkpoints
+    it = chunks()
+    f = sfit.StreamingCocluster(cfg)
+    f.partial_fit(next(it))
+    f.partial_fit(next(it))
+    sfit.save_fit_state(d, f)
+
+    # "process 2": brings the FitState up sharded across all 8 devices
+    step = ckpt.latest_step(d)
+    template, extra = ckpt.restore_tree(d, step)
+    mesh = jax.make_mesh((8,), ("data",))
+    specs = shardings.stream_state_specs(template, mesh)
+    tree, extra2 = elastic_restore(d, step, template, mesh, specs)
+    assert extra2["kind"] == "stream_fit_state"
+    # the big leaves really are distributed: res_vals is (32, 400) -> the
+    # 400-col axis splits 8 ways, 50 columns per device
+    assert len(tree["res_vals"].sharding.device_set) == 8, (
+        tree["res_vals"].sharding)
+    f2 = sfit.StreamingCocluster.from_state_tree(
+        cfg, tree, chunk_format=extra2["chunk_format"],
+        chunk_dtype=extra2["chunk_dtype"])
+    for chunk in it:
+        f2.partial_fit(chunk)
+    m1, _ = f2.finalize()
+
+    m0, _ = sfit.fit(chunks(), cfg)
+    for name in %r:
+        a, b = np.asarray(getattr(m0, name)), np.asarray(getattr(m1, name))
+        assert a.dtype == b.dtype and np.array_equal(a, b), name
+    print("ELASTIC_EQUAL")
+""" % (MODEL_FIELDS,))
+
+
+@pytest.mark.slow
+def test_sigkill_and_resume_bit_identical(tmp_path):
+    """A real SIGKILL mid-fit, then a fresh process resumes to the same
+    model — no atexit, no flush, only the committed checkpoints survive."""
+    d = str(tmp_path / "ckpt")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    killed = subprocess.run(
+        [sys.executable, "-c", _KILL_SCRIPT, d],
+        capture_output=True, text=True, timeout=900, cwd=cwd, env=env)
+    assert killed.returncode == -9, (killed.returncode, killed.stderr)
+    assert "UNREACHABLE" not in killed.stdout
+    import repro.checkpoint as _c
+    assert _c.latest_step(d) == 2, _c.available_steps(d)
+
+    resumed = subprocess.run(
+        [sys.executable, "-c", _RESUME_SCRIPT, d],
+        capture_output=True, text=True, timeout=900, cwd=cwd, env=env)
+    assert resumed.returncode == 0, (
+        f"stdout:\n{resumed.stdout}\nstderr:\n{resumed.stderr}")
+    assert "RESUME_EQUAL" in resumed.stdout
+
+
+@pytest.mark.slow
+def test_elastic_restore_on_8_devices(tmp_path):
+    """FitState written ungrouped, restored sharded over an 8-device mesh
+    (stream_state_specs + elastic_restore), fit continued to bit-identical
+    completion."""
+    d = str(tmp_path / "ckpt")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = subprocess.run(
+        [sys.executable, "-c", _ELASTIC_SCRIPT, d],
+        capture_output=True, text=True, timeout=900, cwd=cwd, env=env)
+    assert res.returncode == 0, (
+        f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}")
+    assert "ELASTIC_EQUAL" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# statistical fault budget: the paper's T_p claim, tested differentially
+# ---------------------------------------------------------------------------
+
+
+class TestStatisticalFaultBudget:
+    def test_resamples_for_failures_restores_nmi(self):
+        """Drop b random blocks per resample; check that the
+        ``resamples_for_failures`` bump restores NMI to within tolerance
+        of the failure-free run (DESIGN.md §3's resilience budget)."""
+        rng = np.random.default_rng(0)
+        data = planted_cocluster_matrix(rng, 600, 500, k=5, d=4, signal=3.0,
+                                        noise=1.2)
+        cfg = LAMCConfig(n_row_clusters=5, n_col_clusters=4, seed=1)
+        plan = make_plan(600, 500, min_cocluster_rows=120,
+                         min_cocluster_cols=125, workers=4, seed=1, k=5)
+        base = dataclasses.replace(plan, t_p=2)
+        n_blocks = base.blocks_per_resample
+        b = 2  # half the blocks of every resample die
+
+        r0 = lamc_cocluster(data.matrix, cfg, base)
+        nmi0 = nmi(np.asarray(r0.row_labels), data.row_labels)
+
+        mask = prob.sample_block_failures(7, base.t_p, n_blocks, b)
+        r1 = lamc_cocluster(data.matrix, cfg, base, block_mask=mask)
+        nmi_degraded = nmi(np.asarray(r1.row_labels), data.row_labels)
+
+        t_p_rec = prob.resamples_for_failures(base.t_p, n_blocks, b)
+        assert t_p_rec > base.t_p
+        rec_plan = dataclasses.replace(plan, t_p=t_p_rec)
+        mask_rec = prob.sample_block_failures(7, t_p_rec, n_blocks, b)
+        r2 = lamc_cocluster(data.matrix, cfg, rec_plan, block_mask=mask_rec)
+        nmi_rec = nmi(np.asarray(r2.row_labels), data.row_labels)
+
+        # failures hurt; the budgeted extra resamples buy the quality back
+        assert nmi_degraded < nmi0 - 0.1, (nmi0, nmi_degraded)
+        assert nmi_rec >= nmi0 - 0.05, (nmi0, nmi_degraded, nmi_rec)
+
+    def test_all_true_mask_is_identity(self):
+        rng = np.random.default_rng(3)
+        data = planted_cocluster_matrix(rng, 480, 400, k=4, d=4, signal=4.0,
+                                        noise=0.5)
+        cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4, seed=2)
+        plan = make_plan(480, 400, min_cocluster_rows=120,
+                         min_cocluster_cols=100, workers=4, seed=2, k=4)
+        r0 = lamc_cocluster(data.matrix, cfg, plan)
+        full = np.ones((plan.t_p, plan.blocks_per_resample), bool)
+        r1 = lamc_cocluster(data.matrix, cfg, plan, block_mask=full)
+        assert np.array_equal(np.asarray(r0.row_labels),
+                              np.asarray(r1.row_labels))
+        assert np.array_equal(np.asarray(r0.col_votes),
+                              np.asarray(r1.col_votes))
+
+    def test_block_mask_shape_is_validated(self):
+        rng = np.random.default_rng(3)
+        data = planted_cocluster_matrix(rng, 480, 400, k=4, d=4)
+        cfg = LAMCConfig(n_row_clusters=4, n_col_clusters=4, seed=2)
+        plan = make_plan(480, 400, min_cocluster_rows=120,
+                         min_cocluster_cols=100, workers=4, seed=2, k=4)
+        with pytest.raises(ValueError, match="block_mask"):
+            lamc_cocluster(data.matrix, cfg, plan,
+                           block_mask=np.ones((1, 1), bool))

@@ -81,6 +81,24 @@ class TestFaultMargin:
         assert bumped >= base
         assert P.resamples_for_failures(base, 64, 16) >= bumped
 
+    def test_sample_block_failures_exact_count_per_resample(self):
+        mask = P.sample_block_failures(0, t_p=5, n_blocks=12, n_failed=3)
+        assert mask.shape == (5, 12) and mask.dtype == bool
+        assert ((~mask).sum(axis=1) == 3).all()
+
+    def test_sample_block_failures_deterministic_and_varied(self):
+        a = P.sample_block_failures(7, 4, 8, 2)
+        b = P.sample_block_failures(7, 4, 8, 2)
+        assert (a == b).all()                    # seeded = reproducible
+        c = P.sample_block_failures(8, 4, 8, 2)
+        assert not (a == c).all()                # seeds actually matter
+
+    def test_sample_block_failures_bounds(self):
+        assert P.sample_block_failures(0, 2, 4, 0).all()
+        assert not P.sample_block_failures(0, 2, 4, 4).any()
+        with pytest.raises(ValueError, match="n_failed"):
+            P.sample_block_failures(0, 2, 4, 5)
+
 
 class TestPlanner:
     def test_plan_feasible_and_constrained(self):

@@ -135,6 +135,38 @@ class TestStreamingFit:
         with pytest.raises(ValueError, match="empty"):
             streaming.fit([], streaming.stream_config_from_lamc(cfg))
 
+    def test_chunk_error_names_the_chunk_index(self, planted, batch_result):
+        cfg, _ = batch_result
+        fitter = streaming.StreamingCocluster(
+            streaming.stream_config_from_lamc(cfg))
+        fitter.partial_fit(jnp.asarray(planted.matrix[:100]))
+        fitter.partial_fit(jnp.asarray(planted.matrix[100:200]))
+        with pytest.raises(ValueError, match="chunk 2"):
+            fitter.partial_fit(jnp.asarray(planted.matrix[:100, :250]))
+
+    def test_dtype_drift_is_loud(self, planted, batch_result):
+        cfg, _ = batch_result
+        fitter = streaming.StreamingCocluster(
+            streaming.stream_config_from_lamc(cfg))
+        fitter.partial_fit(planted.matrix[:100].astype(np.float32))
+        with pytest.raises(ValueError, match="dtype"):
+            fitter.partial_fit(planted.matrix[100:200].astype(np.float16))
+
+    def test_dense_bcoo_flip_is_loud(self, planted, batch_result):
+        cfg, _ = batch_result
+        fitter = streaming.StreamingCocluster(
+            streaming.stream_config_from_lamc(cfg))
+        fitter.partial_fit(jnp.asarray(planted.matrix[:100]))
+        with pytest.raises(ValueError, match="BCOO"):
+            fitter.partial_fit(to_bcoo(planted.matrix[100:200]))
+
+    def test_wrong_rank_is_loud(self, planted, batch_result):
+        cfg, _ = batch_result
+        fitter = streaming.StreamingCocluster(
+            streaming.stream_config_from_lamc(cfg))
+        with pytest.raises(ValueError, match="2-D"):
+            fitter.partial_fit(jnp.asarray(planted.matrix[0]))
+
 
 class TestOutOfSampleAssignment:
     """Held-out rows scored against signatures must recover the clustering."""
