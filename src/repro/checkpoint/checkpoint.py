@@ -11,7 +11,11 @@ Crash consistency: writes go to ``step_X.tmp``; every file is fsync'd,
 then the temp directory is fsync'd, then atomically renamed, then the
 parent directory is fsync'd — a crash at any point leaves either the old
 committed checkpoint or a ``.tmp`` directory ``latest_step`` ignores,
-never a half-written checkpoint it would pick up. Restore verifies each
+never a half-written checkpoint it would pick up. Overwriting an already
+committed step displaces it to ``step_X.old`` first (removed only after
+the new directory is renamed in and the parent fsync'd); the restore and
+listing paths fall back to the ``.old`` copy, so a crash anywhere in the
+overwrite still leaves a committed, discoverable checkpoint. Restore verifies each
 leaf against its recorded sha256 and raises
 :class:`CheckpointCorruptError` *naming the bad leaf* on any mismatch,
 truncation, or missing payload — a corrupt checkpoint can never restore
@@ -119,21 +123,45 @@ def save(ckpt_dir: str, step: int, tree, extra_meta: dict | None = None) -> str:
         f.flush()
         os.fsync(f.fileno())
     _fsync_path(tmp)
+    # Overwriting a committed step must never pass through a state with no
+    # durable copy: displace the old directory to ``.old`` (restore paths
+    # fall back to it), rename the new one in, and only then drop the old.
+    old = final + ".old"
     if os.path.exists(final):
-        shutil.rmtree(final)
+        if os.path.exists(old):
+            shutil.rmtree(old)  # stale leftover from a crashed overwrite
+        os.rename(final, old)
     os.rename(tmp, final)
     _fsync_path(ckpt_dir)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return final
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    """Committed directory for ``step`` — the canonical path, or the
+    ``.old`` copy displaced mid-overwrite if a crash left only that."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(os.path.join(final, _SENTINEL)):
+        return final
+    old = final + ".old"
+    if os.path.exists(os.path.join(old, _SENTINEL)):
+        return old
     return final
 
 
 def available_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []
-    steps = []
+    steps = set()
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, _SENTINEL)):
-                steps.append(int(name.split("_")[1]))
+        # ``.old`` copies count: they are the committed checkpoint when a
+        # crash interrupted an overwrite between the two renames
+        stem = name[:-len(".old")] if name.endswith(".old") else name
+        if not (stem.startswith("step_") and stem[len("step_"):].isdigit()):
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, name, _SENTINEL)):
+            steps.add(int(stem[len("step_"):]))
     return sorted(steps)
 
 
@@ -144,7 +172,7 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 def read_manifest(ckpt_dir: str, step: int) -> dict:
     """Load + parse a committed checkpoint's manifest; loud on corruption."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    path = _step_dir(ckpt_dir, step)
     if not os.path.exists(os.path.join(path, _SENTINEL)):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     manifest_path = os.path.join(path, "manifest.json")
@@ -217,7 +245,7 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     manifest's content hash before placement (CheckpointCorruptError
     names the bad leaf on mismatch).
     """
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    path = _step_dir(ckpt_dir, step)
     meta = read_manifest(ckpt_dir, step)
     data = _open_arrays(path)
 
@@ -265,7 +293,7 @@ def restore_tree(ckpt_dir: str, step: int):
     streaming ``FitState`` with a per-chunk entry count). All leaves come
     back as host numpy arrays, hash-verified. Returns (tree, extra_meta).
     """
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    path = _step_dir(ckpt_dir, step)
     meta = read_manifest(ckpt_dir, step)
     data = _open_arrays(path)
     tree: dict = {}

@@ -127,14 +127,22 @@ def serve(ckpt_dir: str, *, batch: int = 64, requests: int = 32,
         t0 = time.perf_counter()
         out = jax.block_until_ready(step(x))
         lat_s.append(time.perf_counter() - t0)
-    lat_us = np.asarray(lat_s) * 1e6
+    if lat_s:
+        lat_us = np.asarray(lat_s) * 1e6
+        p50 = float(np.percentile(lat_us, 50))
+        p99 = float(np.percentile(lat_us, 99))
+    else:
+        # every batch was rejected: the error counter is the whole story —
+        # report it without crashing on empty percentiles / a None output
+        p50 = p99 = float("nan")
     qps = batch * len(lat_s) / max(float(np.sum(lat_s)), 1e-9)
     return {
-        f"serve_assign_{axis}_p50_us": float(np.percentile(lat_us, 50)),
-        f"serve_assign_{axis}_p99_us": float(np.percentile(lat_us, 99)),
+        f"serve_assign_{axis}_p50_us": p50,
+        f"serve_assign_{axis}_p99_us": p99,
         f"serve_assign_{axis}_qps": qps,
         f"serve_assign_{axis}_errors": errors,
-        "_labels_sample": np.asarray(out.labels[:8]).tolist(),
+        "_labels_sample": (np.asarray(out.labels[:8]).tolist()
+                           if out is not None else []),
         "_model_kind": meta.get("kind"),
         "_batch": batch,
     }

@@ -122,6 +122,15 @@ def run_with_recovery(
             if retries > max_retries:
                 raise RuntimeError(f"exceeded {max_retries} retries") from e
             latest = ckpt.latest_step(ckpt_dir)
+            if latest is not None and (last_saved is None
+                                       or latest > last_saved):
+                # ckpt_dir may hold stale steps from a previous run (fresh
+                # fit into a dirty directory): only restore what THIS run
+                # committed, else fall back to from-scratch/resume-point
+                logger.warning(
+                    "ignoring checkpoint step %s in %s: not written by this "
+                    "run (last saved here: %s)", latest, ckpt_dir, last_saved)
+                latest = last_saved
             logger.warning("step %d failed (%s); restoring from %s",
                            step, e, latest)
             if latest is None:

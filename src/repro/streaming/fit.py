@@ -712,6 +712,8 @@ class _ChunkCursor:
                 f"{self._keep}-chunk buffer (save_every too large for the "
                 "failure pattern?)")
         chunk = next(self._it)          # StopIteration = stream exhausted
+        while _skip_empty(chunk):
+            chunk = next(self._it)      # empty chunks are not steps
         self._buf[t] = chunk
         if len(self._buf) > self._keep:
             del self._buf[min(self._buf)]
@@ -806,10 +808,8 @@ def fit(chunks: Iterable, cfg: StreamConfig, *,
     cursor = _ChunkCursor(it, start=start, keep=save_every + 2)
 
     def step_fn(t: int, f: StreamingCocluster) -> StreamingCocluster:
-        chunk = cursor.get(t)
-        while _skip_empty(chunk):
-            chunk = cursor.get(t)   # empty chunks are not steps
-        f.partial_fit(chunk)
+        # the cursor never buffers empty chunks, so every step folds rows
+        f.partial_fit(cursor.get(t))
         if failure_injector is not None:
             # post-fold: the in-memory state is dirty, so recovery must
             # genuinely rebuild from the checkpoint, not shrug and retry

@@ -101,6 +101,43 @@ class TestScalarAndIntTrees:
         assert ckpt.available_steps(str(tmp_path)) == [3]
 
 
+class TestOverwrite:
+    """Re-saving a committed step must never pass through a state where a
+    crash loses the checkpoint: the old copy is displaced to ``.old`` and
+    stays restorable until the new one is committed."""
+
+    def test_overwrite_replaces_and_leaves_no_old(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 3, _model_tree())
+        newer = _model_tree()._replace(votes=jnp.full((12, 3), 2.0, jnp.float32))
+        ckpt.save(d, 3, newer)
+        back, _ = ckpt.restore(d, 3, newer)
+        np.testing.assert_allclose(np.asarray(back.votes), 2.0)
+        assert ckpt.available_steps(d) == [3]
+        assert not (tmp_path / "step_00000003.old").exists()
+
+    def test_crashed_overwrite_falls_back_to_displaced_copy(self, tmp_path):
+        # crash window: old dir already moved aside, new dir not yet renamed
+        d = str(tmp_path)
+        tree = _model_tree()
+        ckpt.save(d, 3, tree)
+        (tmp_path / "step_00000003").rename(tmp_path / "step_00000003.old")
+        assert ckpt.available_steps(d) == [3]
+        assert ckpt.latest_step(d) == 3
+        back, _ = ckpt.restore(d, 3, tree)
+        np.testing.assert_allclose(np.asarray(back.votes), 0.5)
+
+    def test_save_over_displaced_copy_cleans_it_up(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 3, _model_tree())
+        (tmp_path / "step_00000003").rename(tmp_path / "step_00000003.old")
+        newer = _model_tree()._replace(votes=jnp.full((12, 3), 2.0, jnp.float32))
+        ckpt.save(d, 3, newer)
+        assert not (tmp_path / "step_00000003.old").exists()
+        back, _ = ckpt.restore(d, 3, newer)
+        np.testing.assert_allclose(np.asarray(back.votes), 2.0)
+
+
 class TestCrashConsistency:
     """A corrupt checkpoint must raise CheckpointCorruptError naming the
     damage — never restore silent garbage (DESIGN.md §12)."""

@@ -173,6 +173,24 @@ class TestRunWithRecovery:
                 ckpt_dir=str(tmp_path), save_every=2,
                 save_fn=lambda s, st: None)
 
+    def test_stale_checkpoint_in_dirty_dir_not_restored(self, tmp_path):
+        # a fresh run into a directory holding a previous run's step 50
+        # must not jump to it — pre-first-save recovery restarts clean
+        ckpt.save(str(tmp_path), 50, {"v": np.asarray(999, np.int64)})
+        v, stats, saves, restores = _drive_loop(
+            tmp_path, total=5, save_every=2, fail_at=(1,))
+        assert v == 5 and stats["final_step"] == 5
+        assert restores == [-1]
+
+    def test_stale_checkpoint_not_restored_after_own_save(self, tmp_path):
+        # after this run's first save, recovery lands on *that* save, not
+        # the stale higher step left over in the directory
+        ckpt.save(str(tmp_path), 50, {"v": np.asarray(999, np.int64)})
+        v, stats, saves, restores = _drive_loop(
+            tmp_path, total=5, save_every=2, fail_at=(3,))
+        assert v == 5 and stats["final_step"] == 5
+        assert restores == [2]
+
     @settings(max_examples=25, deadline=None)
     @given(st.integers(1, 12), st.integers(1, 5),
            st.sets(st.integers(0, 11), max_size=4))
@@ -218,6 +236,28 @@ class TestKillAndResume:
         m1, _ = sfit.fit(_chunks(data), cfg, ckpt_dir=str(tmp_path),
                          save_every=2, failure_injector=inj)
         assert inj._fired == {1, 3}
+        assert_models_bit_identical(m0, m1)
+
+    def test_empty_chunks_in_recovery_stream_terminate(self, small_stream,
+                                                       tmp_path):
+        # empty chunks are not steps: the replay cursor must skip them
+        # instead of buffering one and spinning on it forever (also pins
+        # the trailing-empty StopIteration path)
+        data, cfg = small_stream
+        n = data.matrix.shape[1]
+
+        def with_empties():
+            for i, chunk in enumerate(_chunks(data)):
+                if i % 2 == 0:
+                    yield np.zeros((0, n), data.matrix.dtype)
+                yield chunk
+            yield np.zeros((0, n), data.matrix.dtype)
+
+        m0, _ = sfit.fit(_chunks(data), cfg)
+        inj = FailureInjector(fail_at_steps=(1,))
+        m1, stats = sfit.fit(with_empties(), cfg, ckpt_dir=str(tmp_path),
+                             save_every=2, failure_injector=inj)
+        assert stats.chunks == 4
         assert_models_bit_identical(m0, m1)
 
     def test_failure_before_first_checkpoint_restarts_clean(self, small_stream,

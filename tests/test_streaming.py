@@ -261,3 +261,19 @@ class TestServeDriver:
         assert out["serve_assign_rows_qps"] > 0
         assert out["_model_kind"] == streaming.MODEL_KIND
         assert len(out["_labels_sample"]) == 8
+
+    def test_all_requests_rejected_still_reports(self, tmp_path):
+        # every batch bounced: the error counter must come back without
+        # tripping over empty percentiles or a never-assigned output
+        from repro.launch import serve_lamc
+
+        ckpt_dir = str(tmp_path / "model")
+        serve_lamc.fit_demo_model(ckpt_dir, n_rows=128, n_cols=64, k=2,
+                                  chunk_rows=64)
+        out = serve_lamc.serve(ckpt_dir, batch=8, requests=0, warmup=1,
+                               axis="rows", adversarial=3)
+        assert out["serve_assign_rows_errors"] == 3
+        assert np.isnan(out["serve_assign_rows_p50_us"])
+        assert np.isnan(out["serve_assign_rows_p99_us"])
+        assert out["serve_assign_rows_qps"] == 0.0
+        assert out["_labels_sample"] == []
