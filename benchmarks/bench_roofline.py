@@ -12,7 +12,7 @@ from __future__ import annotations
 import json
 import os
 
-from repro.configs.base import SHAPES, cells, get_arch
+from repro.configs.base import cells
 from repro.launch.analytic import analytic_cell
 from repro.launch.roofline import HW, model_flops
 from repro.launch.steps import padded_cfg

@@ -1,0 +1,19 @@
+"""Static-analysis layer for the repro codebase (DESIGN.md §13).
+
+Two layers guard the invariants the paper's numbers depend on:
+
+* **AST lint** (:mod:`.ast_lint`) — rules R1-R4 over source: PRNG key
+  reuse, host sync in jitted scope, non-static captured state, and
+  wall-clock/legacy-RNG use where counter-derived keys are the contract.
+* **jaxpr audit** (:mod:`.jaxpr_audit`, :mod:`.entry_points`,
+  :mod:`.vmem`) — rules A1-A4 over the staged computation: RNG-into-
+  gather fusion (the PR 4 regression gate), dtype promotion, recompile
+  misses, and Pallas VMEM budgets.
+
+CLI: ``python -m repro.analysis [--strict] [--json]``. Suppress a
+finding in source with ``# repro: allow[RULE] reason``.
+"""
+
+from .findings import RULES, Finding, parse_pragmas  # noqa: F401
+
+__all__ = ["Finding", "RULES", "parse_pragmas"]

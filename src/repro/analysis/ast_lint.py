@@ -1,0 +1,633 @@
+"""Layer 1 — AST lint passes over ``src/`` (rules R1-R4, DESIGN.md §13).
+
+Repo-specific correctness rules that a generic linter cannot express:
+
+* **R1 — PRNG key reuse.** A ``jax.random`` key is a counter, not a
+  stream: consuming the same key twice yields *identical* samples. The
+  rule tracks key-typed names through one function body (linear walk,
+  branches merged, loop bodies walked twice to catch cross-iteration
+  reuse) and fires when a key is sampled/escaped twice without an
+  intervening rebind, or sampled after it was already ``split``/
+  ``fold_in``-derived from (the parent must die once children exist).
+
+* **R2 — host sync inside jitted scope.** ``float()``/``.item()``/
+  ``np.*`` on a traced value forces a device sync and graph break. The
+  rule builds the module call graph from every jit root (``@jax.jit``
+  decorations, ``jax.jit(f)`` calls, ``pallas_call``/``shard_map``
+  bodies) and flags host conversions applied to values tainted by
+  ``jnp.``/``jax.`` computation or function parameters.
+
+* **R3 — non-static Python state captured by jitted code.** Mutable
+  default arguments (shared across calls — silently baked into a trace),
+  ``global`` mutation inside jit-reachable functions, and writes to
+  module-level mutable containers from jit-reachable scope.
+
+* **R4 — wall-clock / legacy numpy RNG in ``src/repro``.** The repo's
+  reproducibility contract is counter-derived keys ``(seed, chunk,
+  block)``; the legacy ``np.random.*`` module samplers (hidden global
+  stream), unseeded ``default_rng()``, and ``time.*`` flowing into seeds
+  all break bit-replayability (the recovery-equivalence invariant of
+  DESIGN.md §12).
+
+False positives are suppressed in place with ``# repro: allow[RULE]
+reason`` (``findings.parse_pragmas``).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable
+
+from .findings import Finding, filter_suppressed, parse_pragmas
+
+__all__ = ["lint_source", "run_ast_lint", "iter_python_files"]
+
+# jax.random functions that *produce* keys rather than consume entropy.
+_KEY_PRODUCERS = {"key", "PRNGKey", "split", "fold_in", "wrap_key_data",
+                  "clone"}
+# jax.random functions that derive children but leave the parent logically
+# dead (sampling the parent afterwards correlates with every child).
+_KEY_DERIVERS = {"split", "fold_in", "clone"}
+# module-level legacy numpy samplers (the hidden global MT19937 stream);
+# everything else under np.random (default_rng, Generator, SeedSequence,
+# bit generators) is the counter-friendly API and allowed.
+_NP_LEGACY_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+                 "PCG64", "Philox", "SFC64", "MT19937"}
+_TIME_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns"}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Aliases:
+    """Resolve import aliases to canonical dotted module paths."""
+
+    def __init__(self, tree: ast.Module):
+        self.map: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.map[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name != "*":
+                        self.map[a.asname or a.name] = (
+                            f"{node.module}.{a.name}")
+
+    def resolve(self, name: str | None) -> str | None:
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        base = self.map.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+
+def _call_target(call: ast.Call, aliases: _Aliases) -> str | None:
+    return aliases.resolve(_dotted(call.func))
+
+
+def _is_jax_random(target: str | None) -> bool:
+    return bool(target) and (target.startswith("jax.random.")
+                             or target.startswith("jax._src.random."))
+
+
+def _names_in(node: ast.AST) -> Iterable[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+
+
+# --------------------------------------------------------------------------
+# R1 — PRNG key reuse
+# --------------------------------------------------------------------------
+
+_FRESH, _DERIVED, _CONSUMED = "fresh", "derived", "consumed"
+
+
+class _R1Scope:
+    """Linear symbolic walk of one function body tracking key states."""
+
+    def __init__(self, aliases: _Aliases, findings: list[Finding]):
+        self.aliases = aliases
+        self.findings = findings
+        self.state: dict[str, str] = {}
+        self.first_use: dict[str, int] = {}
+
+    # -- helpers -----------------------------------------------------------
+    def _producer_call(self, node: ast.AST) -> str | None:
+        """'key'/'split'/... if node is a key-producing jax.random call."""
+        if isinstance(node, ast.Call):
+            tgt = _call_target(node, self.aliases)
+            if _is_jax_random(tgt) and tgt.rsplit(".", 1)[-1] in _KEY_PRODUCERS:
+                return tgt.rsplit(".", 1)[-1]
+        return None
+
+    def _bind(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.state[target.id] = _FRESH
+            self.first_use.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt)
+
+    def _fire(self, name: str, node: ast.AST, how: str) -> None:
+        self.findings.append(Finding(
+            rule="R1", path="", line=node.lineno,
+            message=f"key {name!r} {how}",
+            evidence=f"previous use at line "
+                     f"{self.first_use.get(name, node.lineno)}; rebind or "
+                     f"derive a child via split/fold_in"))
+
+    def _consume(self, name: str, node: ast.AST, via: str) -> None:
+        st = self.state.get(name)
+        if st == _CONSUMED:
+            self._fire(name, node, f"consumed again by {via} after it was "
+                                   "already consumed")
+        elif st == _DERIVED:
+            self._fire(name, node, f"consumed by {via} after split/fold_in "
+                                   "derived children from it")
+        else:
+            self.state[name] = _CONSUMED
+            self.first_use.setdefault(name, node.lineno)
+
+    def _derive(self, name: str, node: ast.AST) -> None:
+        # deriving (split/fold_in/clone) is always safe, even from an
+        # already-consumed key: the child stream is distinct from the
+        # sample drawn earlier. Only *sampling* twice collides.
+        self.state[name] = _DERIVED
+        self.first_use.setdefault(name, node.lineno)
+
+    # -- statement walk ----------------------------------------------------
+    def run(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._expr(value)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            if value is not None and self._producer_call(value):
+                for t in targets:
+                    self._bind(t)
+            else:
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        self.state.pop(t.id, None)
+        elif isinstance(stmt, ast.If):
+            before = dict(self.state)
+            self.run(stmt.body)
+            after_if = self.state
+            self.state = dict(before)
+            self.run(stmt.orelse)
+            merged = dict(self.state)
+            for k, v in after_if.items():  # most-consumed state wins
+                order = {_FRESH: 0, _DERIVED: 1, _CONSUMED: 2}
+                if order.get(v, 0) > order.get(merged.get(k, _FRESH), 0):
+                    merged[k] = v
+            self.state = merged
+        elif isinstance(stmt, (ast.For, ast.While, ast.AsyncFor)):
+            # two passes over the body: the second catches keys consumed
+            # once per iteration without a per-iteration rebind/fold_in
+            iter_is_keys = False
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._expr(stmt.iter)
+                # the loop target is key-typed only when iterating keys
+                # (``for k in jax.random.split(...)`` or over a tracked
+                # key batch); any other loop variable shadows key state
+                iter_is_keys = (
+                    self._producer_call(stmt.iter) is not None
+                    or (isinstance(stmt.iter, ast.Name)
+                        and stmt.iter.id in self.state))
+                if not iter_is_keys:
+                    for name in _names_in(stmt.target):
+                        self.state.pop(name, None)
+            else:
+                self._expr(stmt.test)
+            for _pass in range(2):
+                if iter_is_keys:
+                    # each iteration rebinds the target to a fresh batch
+                    # element, so consumption never carries across passes
+                    self._bind(stmt.target)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run(stmt.body)
+            for h in stmt.handlers:
+                self.run(h.body)
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self._expr(stmt.value, returning=isinstance(stmt, ast.Return))
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pass  # nested defs get their own scope via the module walk
+        # other statements don't move keys
+
+    # -- expression walk ---------------------------------------------------
+    def _expr(self, node: ast.AST, returning: bool = False) -> None:
+        if isinstance(node, ast.Call):
+            self._call(node)
+            return
+        if isinstance(node, ast.Lambda):
+            self._expr(node.body)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._expr(child, returning=returning)
+
+    def _call(self, call: ast.Call) -> None:
+        for a in call.args:
+            self._expr(a)
+        for kw in call.keywords:
+            self._expr(kw.value)
+        tgt = _call_target(call, self.aliases)
+        if _is_jax_random(tgt):
+            fn = tgt.rsplit(".", 1)[-1]
+            if fn in {"key", "PRNGKey", "wrap_key_data", "key_data"}:
+                return  # constructors consume ints, not keys
+            first = call.args[0] if call.args else None
+            if isinstance(first, ast.Name) and first.id in self.state:
+                if fn in _KEY_DERIVERS:
+                    self._derive(first.id, call)
+                else:
+                    self._consume(first.id, call, f"jax.random.{fn}")
+            return
+        # any other call: a key passed *whole* escapes (the callee will
+        # consume it — a second escape of the same key is reuse). Only
+        # bare names count: ``fn(keys[i])`` hands over one element of a
+        # key batch, which is the standard fan-out idiom, not reuse.
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in self.state:
+                self._consume(arg.id, call, f"call to {tgt or '<expr>'}")
+
+
+def _r1_function(fn: ast.AST, aliases: _Aliases,
+                 findings: list[Finding]) -> None:
+    scope = _R1Scope(aliases, findings)
+    body = fn.body if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Module)) else []
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        # params used as the key argument of any jax.random call are
+        # key-typed and start fresh
+        key_params = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                tgt = _call_target(sub, aliases)
+                if (_is_jax_random(tgt)
+                        and tgt.rsplit(".", 1)[-1] not in
+                        {"key", "PRNGKey", "wrap_key_data"}
+                        and sub.args and isinstance(sub.args[0], ast.Name)):
+                    key_params.add(sub.args[0].id)
+        args = fn.args
+        all_params = [a.arg for a in (args.posonlyargs + args.args
+                                      + args.kwonlyargs)]
+        for p in all_params:
+            if p in key_params:
+                scope.state[p] = _FRESH
+    scope.run(body)
+
+
+# --------------------------------------------------------------------------
+# R2/R3 — jit reachability + host sync + captured state
+# --------------------------------------------------------------------------
+
+def _decorator_is_jit(dec: ast.AST, aliases: _Aliases) -> bool:
+    tgt = aliases.resolve(_dotted(dec))
+    if tgt in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        # functools.partial(jax.jit, ...) / jax.jit(...) as decorator factory
+        head = aliases.resolve(_dotted(dec.func))
+        if head in ("jax.jit", "jit"):
+            return True
+        if head in ("functools.partial", "partial") and dec.args:
+            return aliases.resolve(_dotted(dec.args[0])) in ("jax.jit", "jit")
+    return False
+
+
+def _jit_roots(tree: ast.Module, aliases: _Aliases,
+               functions: dict[str, ast.AST]) -> set[str]:
+    roots: set[str] = set()
+    for name, fn in functions.items():
+        for dec in getattr(fn, "decorator_list", []):
+            if _decorator_is_jit(dec, aliases):
+                roots.add(name)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = _call_target(node, aliases)
+        args = node.args
+        if tgt in ("jax.jit", "jit") and args:
+            n = _dotted(args[0])
+            if n in functions:
+                roots.add(n)
+        # pallas kernel bodies and shard_map bodies trace under jit
+        if tgt and (tgt.endswith("pallas_call") or tgt.endswith("shard_map")):
+            if args:
+                n = _dotted(args[0])
+                if n in functions:
+                    roots.add(n)
+    return roots
+
+
+def _reachable(functions: dict[str, ast.AST], roots: set[str]) -> set[str]:
+    calls: dict[str, set[str]] = {}
+    for name, fn in functions.items():
+        refs = {n for n in _names_in(fn) if n in functions and n != name}
+        calls[name] = refs
+    seen = set(roots)
+    frontier = list(roots)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in calls.get(cur, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    return seen
+
+
+_TRACED_ROOTS = ("jnp.", "jax.", "lax.")
+_STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "plan", "mesh",
+                       "interpret"}
+
+
+def _r2_r3_function(fn: ast.AST, aliases: _Aliases,
+                    module_mutables: set[str],
+                    findings: list[Finding]) -> None:
+    # shallow taint: params + names assigned from jax/jnp expressions
+    traced: set[str] = set()
+    args = fn.args
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        if a.arg not in _STATIC_PARAM_NAMES:
+            traced.add(a.arg)
+
+    def expr_traced(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in traced:
+                return True
+            if isinstance(sub, ast.Call):
+                tgt = aliases.resolve(_dotted(sub.func)) or ""
+                if tgt.startswith(("jax.", "jnp.", "jax.numpy.")):
+                    return True
+        return False
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and expr_traced(node.value):
+            for t in node.targets:
+                for n in _names_in(t):
+                    traced.add(n)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Global):
+            findings.append(Finding(
+                rule="R3", path="", line=node.lineno,
+                message=f"'global {', '.join(node.names)}' inside "
+                        "jit-reachable code — module state mutated after "
+                        "trace is silently stale",
+                evidence="thread state through function arguments instead"))
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                base = t
+                while isinstance(base, (ast.Subscript, ast.Attribute)):
+                    base = base.value
+                if (isinstance(base, ast.Name) and base.id in module_mutables
+                        and not isinstance(t, ast.Name)):
+                    findings.append(Finding(
+                        rule="R3", path="", line=node.lineno,
+                        message=f"write into module-level mutable "
+                                f"{base.id!r} from jit-reachable code",
+                        evidence="jit captures the object at trace time; "
+                                 "later writes don't retrace"))
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = aliases.resolve(_dotted(node.func)) or ""
+        # .item() on anything traced-ish
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and expr_traced(node.func.value)):
+            findings.append(Finding(
+                rule="R2", path="", line=node.lineno,
+                message=".item() inside jit-reachable code blocks on device "
+                        "sync (or fails under trace)",
+                evidence="keep the value on device, or hoist the readback "
+                         "out of the jitted scope"))
+        elif tgt in ("float", "int", "bool") and node.args and expr_traced(
+                node.args[0]) and not isinstance(node.args[0], ast.Constant):
+            findings.append(Finding(
+                rule="R2", path="", line=node.lineno,
+                message=f"{tgt}() applied to a traced value inside "
+                        "jit-reachable code forces a host sync",
+                evidence="use jnp casts / keep the value abstract"))
+        elif (tgt.startswith(("np.", "numpy."))
+              and not tgt.startswith(("np.random.", "numpy.random."))
+              and any(expr_traced(a) for a in node.args)):
+            findings.append(Finding(
+                rule="R2", path="", line=node.lineno,
+                message=f"{tgt}(...) on a traced value inside jit-reachable "
+                        "code materializes on host",
+                evidence="use the jnp equivalent"))
+
+
+def _mutable_defaults(tree: ast.Module, findings: list[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set))
+            if isinstance(d, ast.Call):
+                callee = _dotted(d.func)
+                bad = callee in ("list", "dict", "set")
+            if bad:
+                findings.append(Finding(
+                    rule="R3", path="", line=d.lineno,
+                    message="mutable default argument is shared across "
+                            "calls and baked into any jit trace",
+                    evidence="default to None and construct inside the body"))
+
+
+def _module_mutables(tree: ast.Module) -> set[str]:
+    out = set()
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and isinstance(
+                stmt.value, (ast.List, ast.Dict, ast.Set)):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+# --------------------------------------------------------------------------
+# R4 — wall clock / legacy numpy RNG
+# --------------------------------------------------------------------------
+
+def _strip_annotations(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a tree skipping annotation subtrees (np.random.Generator type
+    hints are not calls into the legacy stream)."""
+    skip: set[int] = set()
+    for node in ast.walk(fn):
+        ann = getattr(node, "annotation", None)
+        if ann is not None:
+            for sub in ast.walk(ann):
+                skip.add(id(sub))
+        if isinstance(node, ast.AnnAssign) and node.annotation is not None:
+            for sub in ast.walk(node.annotation):
+                skip.add(id(sub))
+    for node in ast.walk(fn):
+        if id(node) not in skip:
+            yield node
+
+
+def _r4_module(tree: ast.Module, aliases: _Aliases,
+               findings: list[Finding]) -> None:
+    for node in _strip_annotations(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = aliases.resolve(_dotted(node.func)) or ""
+        norm = tgt.replace("numpy.", "np.", 1)
+        if norm.startswith("np.random."):
+            fn = norm.split(".", 2)[2] if norm.count(".") >= 2 else ""
+            leaf = fn.split(".")[0]
+            if leaf == "default_rng" and not node.args and not node.keywords:
+                findings.append(Finding(
+                    rule="R4", path="", line=node.lineno,
+                    message="np.random.default_rng() without a seed draws "
+                            "from OS entropy — not replayable",
+                    evidence="derive the seed from the (seed, step) "
+                             "counters the repo keys everything on"))
+            elif leaf and leaf not in _NP_LEGACY_OK:
+                findings.append(Finding(
+                    rule="R4", path="", line=node.lineno,
+                    message=f"legacy np.random.{leaf} uses the hidden "
+                            "global stream — not counter-derived",
+                    evidence="use np.random.default_rng([seed, step]) or "
+                             "jax.random with fold_in"))
+        if norm.startswith("time.") and norm.split(".")[1] in _TIME_FNS:
+            # only a problem when the clock flows into randomness/seeds —
+            # detected one level up (call-arg / seed-assign contexts)
+            continue
+    # clock-into-seed contexts
+    for node in _strip_annotations(tree):
+        time_call = None
+        ctx = None
+        if isinstance(node, ast.Call):
+            tgt = aliases.resolve(_dotted(node.func)) or ""
+            norm = tgt.replace("numpy.", "np.", 1)
+            if (norm.startswith(("np.random.", "jax.random."))
+                    or norm.endswith((".default_rng", ".key", ".PRNGKey"))):
+                for a in list(node.args) + [k.value for k in node.keywords]:
+                    for sub in ast.walk(a):
+                        if isinstance(sub, ast.Call):
+                            t2 = aliases.resolve(_dotted(sub.func)) or ""
+                            if (t2.startswith("time.")
+                                    and t2.split(".")[1] in _TIME_FNS):
+                                time_call, ctx = sub, norm
+        elif isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if any("seed" in n.lower() for n in names):
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Call):
+                        t2 = aliases.resolve(_dotted(sub.func)) or ""
+                        if (t2.startswith("time.")
+                                and t2.split(".")[1] in _TIME_FNS):
+                            time_call, ctx = sub, f"seed name {names!r}"
+        if time_call is not None:
+            findings.append(Finding(
+                rule="R4", path="", line=time_call.lineno,
+                message="wall clock flows into a seed/RNG — every run "
+                        "draws a different stream",
+                evidence=f"context: {ctx}; pass an explicit counter-derived "
+                         "seed instead"))
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def lint_source(path: str, source: str) -> list[Finding]:
+    """All R-rule findings for one file (pragmas NOT yet applied)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:  # surfaced as its own finding, not a crash
+        return [Finding(rule="R0", path=path, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}")]
+    aliases = _Aliases(tree)
+    raw: list[Finding] = []
+
+    functions: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            functions.setdefault(node.name, node)
+
+    # R1 over every function and the module body
+    for fn in functions.values():
+        _r1_function(fn, aliases, raw)
+    _r1_function(tree, aliases, raw)
+
+    # R2/R3 over jit-reachable functions
+    roots = _jit_roots(tree, aliases, functions)
+    reach = _reachable(functions, roots)
+    mutables = _module_mutables(tree)
+    for name in reach:
+        _r2_r3_function(functions[name], aliases, mutables, raw)
+    _mutable_defaults(tree, raw)
+
+    # R4 only where counter keys are the contract
+    if "src/repro" in path.replace(os.sep, "/") or path.startswith("repro/"):
+        _r4_module(tree, aliases, raw)
+
+    seen = set()
+    out = []
+    for f in raw:
+        f = Finding(rule=f.rule, path=path, line=f.line, message=f.message,
+                    evidence=f.evidence)
+        if f.key() not in seen:
+            seen.add(f.key())
+            out.append(f)
+    return out
+
+
+def iter_python_files(paths: list[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def run_ast_lint(paths: list[str]) -> tuple[list[Finding], list[Finding]]:
+    """Lint every .py under ``paths``; returns (active, suppressed)."""
+    findings: list[Finding] = []
+    pragmas: dict[str, dict[int, set[str]]] = {}
+    for path in iter_python_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        pragmas[path] = parse_pragmas(source)
+        findings.extend(lint_source(path, source))
+    return filter_suppressed(findings, pragmas)

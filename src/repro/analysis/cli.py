@@ -1,0 +1,84 @@
+"""``python -m repro.analysis`` — run the analyzer and report findings.
+
+Layers are selectable so CI can split them into fast/slow steps:
+
+* ``--ast-only``   — Layer 1 AST lint over the source tree (no JAX import)
+* ``--audit-only`` — Layer 2 jaxpr audit (A1/A2 over the entry-point
+  registry, A4 over the kernel BlockSpec registry); needs JAX
+* default          — both layers
+
+``--strict`` exits 1 on any active (non-suppressed) finding; ``--json``
+emits the machine-readable report for pre-commit/tooling consumers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import ast_lint
+from .findings import Finding, render_json, render_text
+
+_DEFAULT_PATHS = ("src",)
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/cli.py -> repo root is three levels above src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _run_audits(entries: list[str] | None) -> tuple[list[Finding],
+                                                    list[Finding]]:
+    # deferred: the AST layer must work without importing JAX (fast path,
+    # and usable from tooling that cannot initialize a backend)
+    from . import entry_points, vmem
+    findings = entry_points.audit_entry_points(entries)
+    findings += vmem.audit_vmem(platform="tpu")
+    return findings, []
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + jaxpr trace audit for the repro codebase")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src/ at repo root)")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit 1 if any active finding remains")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable findings report")
+    layer = parser.add_mutually_exclusive_group()
+    layer.add_argument("--ast-only", action="store_true",
+                       help="run only the Layer 1 AST lint")
+    layer.add_argument("--audit-only", action="store_true",
+                       help="run only the Layer 2 jaxpr/VMEM audits")
+    parser.add_argument("--entry", action="append", dest="entries",
+                        help="audit only this entry point (repeatable)")
+    args = parser.parse_args(argv)
+
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+
+    if not args.audit_only:
+        paths = args.paths or [os.path.join(_repo_root(), p)
+                               for p in _DEFAULT_PATHS]
+        active, supp = ast_lint.run_ast_lint(paths)
+        findings += active
+        suppressed += supp
+
+    if not args.ast_only:
+        active, supp = _run_audits(args.entries)
+        findings += active
+        suppressed += supp
+
+    if args.as_json:
+        print(render_json(findings, suppressed))
+    else:
+        print(render_text(findings, suppressed, args.strict))
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,236 @@
+"""Traceable registry of the repo's real jit entry points (DESIGN.md §13).
+
+Each entry builds ``(fn, example_args)`` at *representative small shapes*
+— large enough to exercise every branch the production shapes take
+(multi-block scan, sparse operator route, tiled SpMM grid), small enough
+that tracing is sub-second. The jaxpr audit does not execute these
+functions; it only stages them with ``jax.make_jaxpr``, so entries are
+cheap even where a real call would not be.
+
+Adding an entry point here is the whole integration story for a new
+subsystem: the A1/A2 audits and the CI lane pick it up by name. A3
+(recompile guard) executes for real, so it has its own smaller registry
+(:func:`recompile_targets`) of public drivers worth running twice.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from . import jaxpr_audit
+from .findings import Finding
+
+__all__ = ["ENTRY_POINTS", "trace_entry", "audit_entry_points",
+           "recompile_targets"]
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def _dense(seed: int, *shape: int) -> jax.Array:
+    import jax.numpy as jnp
+    return jnp.asarray(_rng(seed).standard_normal(shape), dtype=jnp.float32)
+
+
+def _bcoo(seed: int, m: int, n: int, density: float = 0.1):
+    from jax.experimental import sparse as jsparse
+    import jax.numpy as jnp
+    g = _rng(seed)
+    mask = g.random((m, n)) < density
+    mask[0, 0] = True  # never empty
+    dense = np.where(mask, g.standard_normal((m, n)), 0.0)
+    return jsparse.BCOO.fromdense(jnp.asarray(dense, dtype=jnp.float32))
+
+
+def _small_cfg(**overrides):
+    from repro.core.lamc import LAMCConfig
+    base = dict(n_row_clusters=2, n_col_clusters=2, svd_iters=2,
+                kmeans_iters=2, merge_kmeans_iters=2, merge_restarts=1,
+                signature_dim=8, seed=0)
+    base.update(overrides)
+    return LAMCConfig(**base)
+
+
+def _small_plan(**overrides):
+    from repro.core.partition import PartitionPlan
+    base = dict(n_rows=32, n_cols=32, m=2, n=2, phi=16, psi=16, t_p=2,
+                seed=0)
+    base.update(overrides)
+    return PartitionPlan(**base)
+
+
+# -- builders ---------------------------------------------------------------
+
+def _lamc_dense():
+    from repro.core import lamc
+    cfg, plan = _small_cfg(), _small_plan()
+    return (lambda a: lamc._lamc_jit(a, cfg, plan),
+            (_dense(0, 32, 32),))
+
+
+def _lamc_sparse():
+    from repro.core import lamc, sparse as _sparse
+    cfg = _small_cfg(input_format="bcoo", spmm_impl="dual_ell")
+    plan = _small_plan(m=1, n=1, phi=32, psi=32, spmm_route="dual_ell")
+    a = _bcoo(1, 32, 32, density=0.2)
+    operator = _sparse.prepare_operator(a, "dual_ell")
+    return (lambda mat: lamc._lamc_jit(mat, cfg, plan, operator), (a,))
+
+
+def _distributed_step():
+    from jax.sharding import Mesh
+    from repro.core import distributed
+    cfg, plan = _small_cfg(), _small_plan()
+    devices = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devices, ("data", "model"))
+    step, _, _ = distributed.lamc_step_fn(cfg, plan, mesh, ("data", "model"))
+
+    def fn(a):
+        with mesh:
+            return step(a)
+    return fn, (_dense(2, 32, 32),)
+
+
+def _streaming_chunk():
+    import importlib
+
+    import jax.numpy as jnp
+
+    # the package re-exports a `fit` *function*, shadowing the module
+    fit = importlib.import_module("repro.streaming.fit")
+    cfg = fit.StreamConfig(n_row_clusters=2, n_col_clusters=2, col_blocks=2,
+                           signature_dim=8, anchor_rows=8, svd_iters=2,
+                           kmeans_iters=2)
+    blocks = _dense(3, cfg.blocks_per_chunk, 16, 16)
+    feats = _dense(4, 16, 8)
+    return (lambda b, f, t: fit._chunk_atoms(cfg, b, f, t),
+            (blocks, feats, jnp.int32(0)))
+
+
+def _cosine_assign():
+    from repro.kernels import ops
+    return ops.cosine_assign, (_dense(5, 256, 64), _dense(6, 4, 64))
+
+
+def _cosine_topk():
+    from repro.kernels import ops
+    return (lambda x, s: ops.cosine_topk(x, s, 2),
+            (_dense(7, 256, 64), _dense(8, 4, 64)))
+
+
+def _spmm():
+    from repro.kernels import ops
+    a = _bcoo(9, 64, 64)
+    return (lambda mat, b: ops.spmm(mat, b), (a, _dense(10, 64, 16)))
+
+
+def _tiled_operand():
+    from repro.kernels import spmm as kspmm
+    return kspmm.bcoo_to_block_sparse(_bcoo(11, 256, 256), bm=128, bk=128)
+
+
+def _spmm_tiled():
+    from repro.kernels import ops
+    a = _tiled_operand()
+    return (lambda mat, b: ops.spmm_tiled(mat, b), (a, _dense(12, 256, 128)))
+
+
+def _spmm_ata():
+    from repro.kernels import ops
+    a = _tiled_operand()
+    return (lambda mat, x: ops.spmm_ata(mat, x), (a, _dense(13, 256, 128)))
+
+
+#: name -> () -> (fn, example_args); every jit surface the audits gate.
+ENTRY_POINTS: dict[str, Callable[[], tuple[Callable, tuple]]] = {
+    "lamc_dense": _lamc_dense,
+    "lamc_sparse": _lamc_sparse,
+    "distributed_step": _distributed_step,
+    "streaming_chunk": _streaming_chunk,
+    "cosine_assign": _cosine_assign,
+    "cosine_topk": _cosine_topk,
+    "spmm": _spmm,
+    "spmm_tiled": _spmm_tiled,
+    "spmm_ata": _spmm_ata,
+}
+
+
+def trace_entry(name: str, x64: bool = False):
+    """Stage one entry point to a ClosedJaxpr (no execution).
+
+    ``x64=True`` re-traces under ``jax_enable_x64`` so A2 can see f64
+    avals that default tracing silently truncates; the flag is always
+    restored. Inputs are built before the flag flips so their dtypes stay
+    the production f32/int32 — any f64 in the trace is then the
+    function's own promotion, not an artifact of the harness.
+    """
+    fn, example_args = ENTRY_POINTS[name]()
+    if not x64:
+        return jax.make_jaxpr(fn)(*example_args)
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        return jax.make_jaxpr(fn)(*example_args)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def audit_entry_points(names: list[str] | None = None,
+                       x64: bool = True) -> list[Finding]:
+    """A1 (+A2 under x64) over the registry; trace failures are findings
+    too — an entry point that stops tracing is itself a regression."""
+    findings: list[Finding] = []
+    for name in names or sorted(ENTRY_POINTS):
+        try:
+            closed = trace_entry(name, x64=x64)
+        except Exception as exc:  # noqa: BLE001 — report, don't crash the lane
+            findings.append(Finding(
+                rule="A1", path=f"entry:{name}", line=0,
+                message="entry point failed to trace",
+                evidence=f"{type(exc).__name__}: {exc}"))
+            continue
+        findings.extend(
+            jaxpr_audit.audit_entry_jaxpr(name, closed, x64_traced=x64))
+    return findings
+
+
+def recompile_targets() -> dict[str, tuple[Callable, Callable[[], tuple]]]:
+    """A3 targets: public drivers called for real, twice, at fixed shape.
+
+    ``make_args`` builds fresh buffers per call so a cache miss cannot
+    hide behind buffer identity.
+    """
+    from repro.core import lamc
+    from repro.streaming import assign, model as smodel
+
+    cfg, plan = _small_cfg(), _small_plan()
+    counter = {"n": 0}
+
+    def lamc_args():
+        counter["n"] += 1
+        return (_dense(100 + counter["n"], 32, 32), cfg, plan)
+
+    k, q, n_cols = 2, 8, 32
+    model = smodel.CoclusterModel(
+        row_labels=np.zeros(32, np.int32), col_labels=np.zeros(32, np.int32),
+        row_votes=np.zeros((32, k), np.float32),
+        col_votes=np.zeros((32, k), np.float32),
+        row_sigs=np.asarray(_dense(200, k, q)),
+        col_sigs=np.asarray(_dense(201, k, q)),
+        row_mean=np.zeros(q, np.float32), col_mean=np.zeros(q, np.float32),
+        anchor_rows=np.arange(q, dtype=np.int32),
+        anchor_cols=np.arange(q, dtype=np.int32),
+    )
+
+    def assign_args():
+        counter["n"] += 1
+        return (model, _dense(300 + counter["n"], 16, n_cols))
+
+    return {
+        "lamc_cocluster": (lamc.lamc_cocluster, lamc_args),
+        "assign_rows": (assign.assign_rows, assign_args),
+    }

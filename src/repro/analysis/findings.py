@@ -1,0 +1,127 @@
+"""Finding records, ``# repro: allow[RULE]`` pragmas, and report rendering.
+
+Every analyzer layer (AST lint, jaxpr audit, VMEM estimator) emits
+:class:`Finding` records. A finding names its rule, where it anchors
+(``path:line`` for lint findings, an entry-point name for trace-audit
+findings), and the evidence that makes it actionable.
+
+Suppression is source-anchored: a ``# repro: allow[R1]`` comment on the
+offending line (or on a comment-only line directly above it) silences
+that rule there. Pragmas carry a free-text justification after the
+bracket — the lint layer does not parse it, but CI review should:
+an allow pragma without a reason is a smell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Iterable
+
+__all__ = ["Finding", "parse_pragmas", "filter_suppressed",
+           "render_text", "render_json", "RULES"]
+
+#: rule id -> one-line description (the catalog DESIGN.md §13 documents)
+RULES = {
+    "R1": "PRNG key reuse: a key consumed twice without split/fold_in",
+    "R2": "host sync inside jitted scope (float()/.item()/np.* on traced values)",
+    "R3": "non-static Python state captured by jitted code (mutable defaults, "
+          "mutated module globals)",
+    "R4": "wall-clock or legacy numpy RNG where counter-derived keys are the "
+          "contract",
+    "A1": "RNG generation feeding a gather-heavy op without a materialization "
+          "barrier (the PR 4 threefry-into-SpMM fusion), or RNG inside a "
+          "while body",
+    "A2": "unintended dtype promotion (non-weak f64/c128 in a traced entry "
+          "point)",
+    "A3": "jit cache miss on a same-shape/dtype repeat call (hidden recompile)",
+    "A4": "Pallas kernel VMEM-resident blocks + scratch exceed the per-"
+          "platform budget, or block shape does not tile the array",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str       # "R1".."R4" (lint) / "A1".."A4" (trace audit)
+    path: str       # repo-relative file path, or "entry:<name>" for audits
+    line: int       # 1-based source line; 0 when not source-anchored
+    message: str    # what is wrong, in one sentence
+    evidence: str = ""  # the snippet / primitive path / byte math backing it
+
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.line, self.message)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "evidence": self.evidence}
+
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9*,\s]+)\]")
+
+
+def parse_pragmas(source: str) -> dict[int, set[str]]:
+    """Map line number -> set of allowed rule ids (``{"*"}`` allows all).
+
+    A pragma on a code line covers that line. A pragma on a line whose
+    code content is only the comment covers the *next* line as well, so
+    long statements can carry the pragma above them.
+    """
+    allowed: dict[int, set[str]] = {}
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        allowed.setdefault(i, set()).update(rules)
+        if text[: m.start()].strip() == "":  # comment-only line
+            allowed.setdefault(i + 1, set()).update(rules)
+    return allowed
+
+
+def _covers(rules: set[str], rule: str) -> bool:
+    return "*" in rules or rule in rules
+
+
+def filter_suppressed(findings: Iterable[Finding],
+                      pragmas_by_path: dict[str, dict[int, set[str]]],
+                      ) -> tuple[list[Finding], list[Finding]]:
+    """Split findings into (active, suppressed) using per-file pragmas.
+
+    Multi-line statements anchor their finding at the statement's first
+    line, which is where the pragma must sit (or the comment line above).
+    """
+    active, suppressed = [], []
+    for f in findings:
+        rules = pragmas_by_path.get(f.path, {}).get(f.line, set())
+        (suppressed if _covers(rules, f.rule) else active).append(f)
+    return active, suppressed
+
+
+def render_text(findings: list[Finding], suppressed: list[Finding],
+                strict: bool) -> str:
+    out = []
+    for f in sorted(findings, key=Finding.key):
+        loc = f.path if f.line == 0 else f"{f.path}:{f.line}"
+        out.append(f"{loc}: [{f.rule}] {f.message}")
+        if f.evidence:
+            for ln in f.evidence.splitlines():
+                out.append(f"    {ln}")
+    n, s = len(findings), len(suppressed)
+    tail = f"{n} finding{'s' if n != 1 else ''}"
+    if s:
+        tail += f" ({s} suppressed by pragma)"
+    if strict and n:
+        tail += " — failing (--strict)"
+    out.append(tail)
+    return "\n".join(out)
+
+
+def render_json(findings: list[Finding], suppressed: list[Finding]) -> str:
+    return json.dumps(
+        {"findings": [f.to_dict() for f in sorted(findings, key=Finding.key)],
+         "suppressed": [f.to_dict() for f in sorted(suppressed,
+                                                    key=Finding.key)],
+         "rules": RULES},
+        indent=2)

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "register", "get_arch",
            "list_archs", "cells", "reduced"]

@@ -16,14 +16,7 @@ from .merging import (
     memberships_from_votes,
     signature_merge,
 )
-from .metrics import (
-    ari,
-    cocluster_scores,
-    membership_from_labels,
-    nmi,
-    omega_index,
-    overlap_f1,
-)
+from .metrics import ari, cocluster_scores, membership_from_labels, nmi, omega_index, overlap_f1
 from .nmtf import nmtf
 from .partition import (
     PartitionPlan,
@@ -33,12 +26,7 @@ from .partition import (
     make_plan,
     resample_indices,
 )
-from .probability import (
-    detection_probability,
-    failure_bound,
-    min_resamples,
-    plan_partition,
-)
+from .probability import detection_probability, failure_bound, min_resamples, plan_partition
 from .spectral import normalize_bipartite, randomized_svd, scc
 
 __all__ = [

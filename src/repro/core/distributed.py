@@ -26,7 +26,6 @@ The pipeline is one jitted program; resamples run under ``lax.scan``.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -37,8 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import merging, partition
 from . import sparse as _sparse
-from .lamc import (LAMCConfig, LAMCResult, _atom_fn, anchor_features,
-                   validate_assignment)
+from .lamc import LAMCConfig, LAMCResult, _atom_fn, anchor_features, validate_assignment
 
 
 def _validate_input_format(a, cfg: LAMCConfig) -> None:

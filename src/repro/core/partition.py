@@ -16,7 +16,6 @@ per-resample misses. ``coverage_probability`` quantifies it.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

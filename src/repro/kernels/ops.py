@@ -15,20 +15,25 @@ Set ``REPRO_FORCE_INTERPRET=1`` to force interpret mode on any backend.
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import vmem
+
 from . import ref
 from .bipartite_normalize import scale_apply_pallas
 from .flash_attention import flash_attention_pallas
-from .kmeans_assign import (cosine_assign_pallas, cosine_topk_pallas,
-                            kmeans_assign_pallas)
+from .kmeans_assign import cosine_assign_pallas, cosine_topk_pallas, kmeans_assign_pallas
 from .kmeans_update import kmeans_update_pallas
-from .spmm import (BlockSparseMatrix, bcoo_to_block_sparse, spmm_ata_pallas,
-                   spmm_pallas, spmm_t_pallas)
+from .spmm import (
+    BlockSparseMatrix,
+    bcoo_to_block_sparse,
+    spmm_ata_pallas,
+    spmm_pallas,
+    spmm_t_pallas,
+)
 
 __all__ = ["kmeans_assign", "kmeans_update", "cosine_assign", "cosine_topk",
            "bipartite_normalize", "flash_attention", "spmm", "sddmm",
@@ -77,7 +82,6 @@ def kmeans_assign(x: jax.Array, centroids: jax.Array,
     so argmin never selects them; padded points are sliced off the output.
     """
     p, d = x.shape
-    k = centroids.shape[0]
     xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
     cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
     labels, d2 = kmeans_assign_pallas(xp, cp, tile_p=tile_p, interpret=_interpret())
@@ -217,11 +221,6 @@ def spmm_tiled(a: BlockSparseMatrix, b: jax.Array, *,
     return out[:out_rows, : b.shape[1]]
 
 
-# VMEM budget for the fused kernel's resident Y stripe + output stripe
-# (f32 bytes); past this the wrapper decomposes into two tiled products.
-_ATA_VMEM_BUDGET = 12 * 2**20
-
-
 def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
     """Fused normal-equations pass: ``A.T @ (A @ x)`` in one sweep.
 
@@ -243,8 +242,10 @@ def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
         out = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
                                  n_tr, n_tc, y, transpose=True)
         return out[:k, : x.shape[1]]
-    stripes = (n_tr * bm + n_tc * bk) * bn * 4
-    if stripes > _ATA_VMEM_BUDGET:
+    # fused-kernel residency (Y stripe + output stripe) priced by the same
+    # estimator the A4 static audit uses — one budget, runtime and lint
+    stripes = vmem.ata_resident_bytes(n_tr, n_tc, bm, bk, bn)
+    if stripes > vmem.vmem_budget_bytes("tpu"):
         y = spmm_tiled(a, x, bn=bn)
         return spmm_tiled(a, y, transpose=True, bn=bn)
     interp = backend == "interpret"

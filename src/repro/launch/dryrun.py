@@ -29,7 +29,6 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import SHAPES, cells, get_arch  # noqa: E402
 from repro.core import LAMCConfig  # noqa: E402

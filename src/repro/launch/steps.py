@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import build_model
-from repro.models import transformer
 from repro.optim import AdamWConfig, adamw_init, adamw_update, wsd_schedule
 from repro.runtime import shardings as sh
 

@@ -14,8 +14,6 @@ repeat (Hq % Hkv == 0).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

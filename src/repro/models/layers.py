@@ -11,7 +11,6 @@ Conventions:
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

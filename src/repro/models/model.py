@@ -7,9 +7,8 @@ assembly details live in ``transformer.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig

@@ -20,7 +20,6 @@ for local attention); recurrent blocks carry O(1) states.
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 
@@ -728,7 +727,6 @@ def decode_step(cfg: ArchConfig, params, token, cache, pos, extra=None,
     """One decode step. token: (B,) int32; pos: scalar int32 (same for all
     rows — continuous batching offsets are handled a level up).
     Returns (logits (B, V), new_cache)."""
-    b = token.shape[0]
     x = layers.embed(params["embed"], token[:, None], dtype)
     if cfg.enc_dec:
         x = x + jax.lax.dynamic_slice_in_dim(

@@ -68,7 +68,6 @@ def _chunked_scan(cell, state, xs, chunk: int = SEQ_CHUNK):
 
 
 def mlstm_block_init(key, d: int, n_heads: int, dtype=jnp.float32) -> dict:
-    dh = d // n_heads
     ks = jax.random.split(key, 7)
     s = 1.0 / math.sqrt(d)
     return {

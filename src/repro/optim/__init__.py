@@ -1,6 +1,6 @@
+from . import grad_compress
 from .adamw import AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm
 from .schedule import cosine_schedule, wsd_schedule
-from . import grad_compress
 
 __all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
            "global_norm", "cosine_schedule", "wsd_schedule", "grad_compress"]

@@ -12,7 +12,7 @@ clipping, and optional gradient compression hooks (see grad_compress.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -19,9 +19,6 @@ for §Roofline uses the compact payload size).
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

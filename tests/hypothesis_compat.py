@@ -11,6 +11,8 @@ Usage in test modules::
     from hypothesis_compat import given, settings, st
 """
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

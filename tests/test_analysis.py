@@ -1,0 +1,565 @@
+"""Unit tests for the ``repro.analysis`` layer (DESIGN.md §13).
+
+Each lint rule gets a violation/clean fixture pair; the jaxpr audits are
+exercised on hand-built traces, including a deliberate re-introduction of
+the PR 4 threefry-into-SpMM fusion (A1 must fire) next to its shipped
+QR-orthonormalized fix (A1 must stay silent). The VMEM estimator is
+checked against hand-computed byte counts for the shipped ``spmm_tiled``
+tile config, and A3 is asserted against the two real drivers the issue
+names: ``lamc_cocluster`` and ``streaming.assign_rows``.
+"""
+
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import sparse as jsparse
+
+from repro.analysis import entry_points, findings as fmod, vmem
+from repro.analysis.ast_lint import lint_source
+from repro.analysis.cli import main as cli_main
+from repro.analysis.jaxpr_audit import (
+    audit_dtypes,
+    audit_rng_gather,
+    count_recompiles,
+)
+from repro.kernels import ops as kops
+
+
+def lint(src: str, path: str = "src/repro/_fixture.py"):
+    return lint_source(path, textwrap.dedent(src))
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------
+# R1 — PRNG key reuse
+# --------------------------------------------------------------------------
+
+
+class TestR1:
+    def test_double_sample_fires(self):
+        fs = lint("""
+            import jax
+
+            def f(seed):
+                k = jax.random.key(seed)
+                a = jax.random.normal(k, (4,))
+                b = jax.random.normal(k, (4,))
+                return a + b
+        """)
+        assert rules_of(fs) == ["R1"]
+
+    def test_sample_after_split_fires(self):
+        fs = lint("""
+            import jax
+
+            def f(seed):
+                k = jax.random.key(seed)
+                k1, k2 = jax.random.split(k)
+                return jax.random.normal(k, (4,))
+        """)
+        assert rules_of(fs) == ["R1"]
+
+    def test_fold_in_after_sample_is_clean(self):
+        # deriving a child from a consumed key is safe: the child stream
+        # is distinct from the sample already drawn (the "sample then
+        # fold_in the same parent" idiom in models/transformer.py)
+        fs = lint("""
+            import jax
+
+            def f(seed):
+                k = jax.random.key(seed)
+                a = jax.random.normal(k, (4,))
+                k2 = jax.random.fold_in(k, 1)
+                return a + jax.random.normal(k2, (4,))
+        """)
+        assert fs == []
+
+    def test_split_fanout_is_clean(self):
+        # fn(keys[i]) hands over one element of a key batch, not the batch
+        fs = lint("""
+            import jax
+
+            def g(k):
+                return jax.random.normal(k, (4,))
+
+            def f(seed):
+                keys = jax.random.split(jax.random.key(seed), 4)
+                return g(keys[0]) + g(keys[1])
+        """)
+        assert fs == []
+
+    def test_whole_key_escapes_twice_fires(self):
+        fs = lint("""
+            import jax
+
+            def g(k):
+                return jax.random.normal(k, (4,))
+
+            def f(seed):
+                k = jax.random.key(seed)
+                return g(k) + g(k)
+        """)
+        assert "R1" in rules_of(fs)
+
+    def test_loop_reconsume_fires_and_rebind_is_clean(self):
+        bad = lint("""
+            import jax
+
+            def f(k, xs):
+                out = 0.0
+                for x in xs:
+                    out = out + x * jax.random.normal(k, ())
+                return out
+        """)
+        assert "R1" in rules_of(bad)
+        good = lint("""
+            import jax
+
+            def f(seed, n):
+                out = 0.0
+                for k in jax.random.split(jax.random.key(seed), n):
+                    out = out + jax.random.normal(k, ())
+                return out
+        """)
+        assert good == []
+
+
+# --------------------------------------------------------------------------
+# R2 — host sync in jitted scope
+# --------------------------------------------------------------------------
+
+
+class TestR2:
+    def test_float_on_traced_value_fires(self):
+        fs = lint("""
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                return float(jnp.sum(x))
+        """)
+        assert rules_of(fs) == ["R2"]
+
+    def test_item_in_jit_reachable_callee_fires(self):
+        fs = lint("""
+            import jax
+            import jax.numpy as jnp
+
+            def helper(x):
+                return x.item()
+
+            @jax.jit
+            def f(x):
+                return helper(jnp.sum(x))
+        """)
+        assert rules_of(fs) == ["R2"]
+
+    def test_host_sync_outside_jit_is_clean(self):
+        fs = lint("""
+            import jax.numpy as jnp
+
+            def report(x):
+                return float(jnp.sum(x))
+        """)
+        assert fs == []
+
+    def test_jnp_only_jit_body_is_clean(self):
+        fs = lint("""
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                return jnp.sum(x) * 2.0
+        """)
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R3 — non-static Python state
+# --------------------------------------------------------------------------
+
+
+class TestR3:
+    def test_mutable_default_fires(self):
+        fs = lint("""
+            def f(x, acc=[]):
+                acc.append(x)
+                return acc
+        """)
+        assert rules_of(fs) == ["R3"]
+
+    def test_global_mutation_in_jit_fires(self):
+        fs = lint("""
+            import jax
+
+            _COUNT = 0
+
+            @jax.jit
+            def f(x):
+                global _COUNT
+                _COUNT += 1
+                return x
+        """)
+        assert "R3" in rules_of(fs)
+
+    def test_none_default_is_clean(self):
+        fs = lint("""
+            def f(x, acc=None):
+                acc = [] if acc is None else acc
+                acc.append(x)
+                return acc
+        """)
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# R4 — wall clock / legacy numpy RNG (src/repro only)
+# --------------------------------------------------------------------------
+
+
+class TestR4:
+    def test_legacy_sampler_fires(self):
+        fs = lint("""
+            import numpy as np
+
+            def f():
+                return np.random.rand(3)
+        """)
+        assert rules_of(fs) == ["R4"]
+
+    def test_unseeded_default_rng_fires(self):
+        fs = lint("""
+            import numpy as np
+
+            def f():
+                return np.random.default_rng().normal(size=3)
+        """)
+        assert rules_of(fs) == ["R4"]
+
+    def test_seeded_default_rng_is_clean(self):
+        fs = lint("""
+            import numpy as np
+
+            def f(seed, step):
+                return np.random.default_rng([seed, step]).normal(size=3)
+        """)
+        assert fs == []
+
+    def test_clock_into_seed_fires(self):
+        fs = lint("""
+            import time
+
+            import jax
+
+            def f():
+                seed = int(time.time())
+                return jax.random.key(seed)
+        """)
+        assert "R4" in rules_of(fs)
+
+    def test_rule_scoped_to_src_repro(self):
+        # tests/benchmarks may use ad-hoc numpy RNG freely
+        fs = lint("""
+            import numpy as np
+
+            def f():
+                return np.random.rand(3)
+        """, path="tests/helpers.py")
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# pragmas
+# --------------------------------------------------------------------------
+
+
+class TestPragmas:
+    SRC = textwrap.dedent("""
+        import numpy as np
+
+        def f():
+            return np.random.rand(3)  # repro: allow[R4] fixture noise only
+    """)
+
+    def test_same_line_pragma_suppresses(self):
+        path = "src/repro/_fixture.py"
+        raw = lint_source(path, self.SRC)
+        active, suppressed = fmod.filter_suppressed(
+            raw, {path: fmod.parse_pragmas(self.SRC)})
+        assert active == []
+        assert [f.rule for f in suppressed] == ["R4"]
+
+    def test_comment_line_above_covers_next_line(self):
+        src = textwrap.dedent("""
+            import numpy as np
+
+            def f():
+                # repro: allow[R4] exercised below
+                return np.random.rand(3)
+        """)
+        path = "src/repro/_fixture.py"
+        active, suppressed = fmod.filter_suppressed(
+            lint_source(path, src), {path: fmod.parse_pragmas(src)})
+        assert active == [] and len(suppressed) == 1
+
+    def test_pragma_for_other_rule_does_not_suppress(self):
+        src = self.SRC.replace("allow[R4]", "allow[R1]")
+        path = "src/repro/_fixture.py"
+        active, suppressed = fmod.filter_suppressed(
+            lint_source(path, src), {path: fmod.parse_pragmas(src)})
+        assert [f.rule for f in active] == ["R4"] and suppressed == []
+
+    def test_star_allows_all(self):
+        src = self.SRC.replace("allow[R4]", "allow[*]")
+        path = "src/repro/_fixture.py"
+        active, suppressed = fmod.filter_suppressed(
+            lint_source(path, src), {path: fmod.parse_pragmas(src)})
+        assert active == [] and len(suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# A4 — VMEM estimator
+# --------------------------------------------------------------------------
+
+
+class TestVmem:
+    def test_spmm_tiled_oracle(self):
+        # shipped config: g=64 payload tiles of (1, 128, 128), rhs block
+        # (128, 128), out block (128, 128) — all already granule-aligned,
+        # so each block is exactly 128*128*4 B = 64 KiB; three blocks.
+        est = vmem.KERNEL_SPECS["spmm_tiled"]()
+        per_block = 128 * 128 * 4
+        assert [b.nbytes() for b in est.blocks] == [per_block] * 3
+        assert est.total_bytes == 3 * per_block == 196_608
+        assert est.budget_bytes == int(16 * 2**20 * 0.75) == 12_582_912
+        assert est.fits
+
+    def test_granule_padding(self):
+        # (4, 100) f32 pads to the (8, 128) tiling granule
+        b = vmem.BlockUse("x", (4, 100))
+        assert b.padded_block() == (8, 128)
+        assert b.nbytes() == 8 * 128 * 4
+
+    def test_divisibility_violation_detected(self):
+        b = vmem.BlockUse("x", (96, 128), array_shape=(256, 128))
+        assert b.divisibility_issues()  # 256 % 96 != 0
+        est = vmem.estimate_kernel("bad", [b])
+        assert not est.fits
+
+    def test_over_budget_not_fits(self):
+        huge = vmem.BlockUse("x", (4096, 4096))  # 64 MiB > 12 MiB budget
+        est = vmem.estimate_kernel("huge", [huge])
+        assert est.total_bytes > est.budget_bytes and not est.fits
+
+    def test_ata_bytes_match_ops_fallback_threshold(self):
+        # the runtime fallback in kernels.ops.spmm_ata prices stripes with
+        # this exact function; spot-check the closed form
+        assert vmem.ata_resident_bytes(16, 16, 128, 128, 128) == (
+            (16 * 128 + 16 * 128) * 128 * 4)
+
+    def test_registry_all_fit(self):
+        assert vmem.audit_vmem("tpu") == []
+
+    def test_non_tpu_budget_is_unbounded(self):
+        assert vmem.vmem_budget_bytes("cpu") > 2**60
+
+
+# --------------------------------------------------------------------------
+# A1 — RNG-into-gather fusion (the PR 4 regression gate)
+# --------------------------------------------------------------------------
+
+
+def _fixture_bcoo(m: int = 32, n: int = 32, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((m, n)) < 0.2
+    mask[0, 0] = True
+    dense = np.where(mask, rng.standard_normal((m, n)), 0.0).astype(np.float32)
+    return jsparse.BCOO.fromdense(jnp.asarray(dense))
+
+
+class TestA1:
+    def test_pr4_pattern_fires(self):
+        # the original bug: a raw gaussian sketch fed straight into the
+        # SpMM gather — XLA fuses threefry into the gather loop
+        a = _fixture_bcoo()
+
+        def bad(key):
+            sketch = jax.random.normal(key, (32, 8))
+            return kops.spmm(a, sketch, transpose=True)
+
+        closed = jax.make_jaxpr(bad)(jax.random.key(0))
+        fs = audit_rng_gather("fixture_bad", closed)
+        assert fs and all(f.rule == "A1" for f in fs)
+
+    def test_orthonormalized_sketch_is_clean(self):
+        # the shipped fix: QR materializes the sketch before the product
+        a = _fixture_bcoo()
+
+        def good(key):
+            sketch = jax.random.normal(key, (32, 8))
+            q, _ = jnp.linalg.qr(sketch)
+            return kops.spmm(a, q, transpose=True)
+
+        closed = jax.make_jaxpr(good)(jax.random.key(0))
+        assert audit_rng_gather("fixture_good", closed) == []
+
+    def test_rng_in_while_body_fires(self):
+        def bad(key):
+            def cond(c):
+                return c[0] < 3
+
+            def body(c):
+                i, k, x = c
+                k = jax.random.fold_in(k, i)
+                return i + 1, k, x + jax.random.normal(k, x.shape)
+
+            return jax.lax.while_loop(
+                cond, body, (jnp.int32(0), key, jnp.zeros((4,))))
+
+        closed = jax.make_jaxpr(bad)(jax.random.key(0))
+        fs = audit_rng_gather("fixture_while", closed)
+        assert fs and all(f.rule == "A1" for f in fs)
+
+    def test_scan_body_counter_keys_are_clean(self):
+        # per-step fold_in inside scan is the repo's reproducibility
+        # contract and must not be flagged
+        def good(key, x):
+            def body(carry, i):
+                return carry + jax.random.normal(
+                    jax.random.fold_in(key, i), x.shape), None
+
+            out, _ = jax.lax.scan(body, x, jnp.arange(3))
+            return out
+
+        closed = jax.make_jaxpr(good)(jax.random.key(0), jnp.zeros((4,)))
+        assert audit_rng_gather("fixture_scan", closed) == []
+
+
+# --------------------------------------------------------------------------
+# A2 — dtype promotion
+# --------------------------------------------------------------------------
+
+
+def _trace_x64(fn, *args):
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        return jax.make_jaxpr(fn)(*args)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+class TestA2:
+    def test_f64_promotion_fires(self):
+        x = jnp.ones((4,), jnp.float32)
+        closed = _trace_x64(lambda v: v * np.float64(2.0), x)
+        fs = audit_dtypes("fixture_promo", closed)
+        assert fs and all(f.rule == "A2" for f in fs)
+
+    def test_explicit_f32_is_clean(self):
+        x = jnp.ones((4,), jnp.float32)
+        closed = _trace_x64(lambda v: v * jnp.float32(2.0), x)
+        assert audit_dtypes("fixture_f32", closed) == []
+
+
+# --------------------------------------------------------------------------
+# A3 — recompile guard
+# --------------------------------------------------------------------------
+
+
+class TestA3:
+    def test_detector_catches_per_call_jit(self):
+        # a fresh jit wrapper per call can never hit the cache
+        def leaky(x):
+            return jax.jit(lambda y: y * 2.0)(x)
+
+        counter = {"n": 0}
+
+        def make_args():
+            counter["n"] += 1
+            return (jnp.full((8,), float(counter["n"])),)
+
+        misses, fs = count_recompiles("fixture_leaky", leaky, make_args)
+        assert misses > 0 and [f.rule for f in fs] == ["A3"]
+
+    def test_stable_jit_is_clean(self):
+        fn = jax.jit(lambda x: x * 2.0)
+
+        counter = {"n": 0}
+
+        def make_args():
+            counter["n"] += 1
+            return (jnp.full((8,), float(counter["n"])),)
+
+        misses, fs = count_recompiles("fixture_stable", fn, make_args)
+        assert misses == 0 and fs == []
+
+    def test_real_drivers_do_not_recompile(self):
+        # the two drivers the issue pins: lamc_cocluster and the
+        # streaming serving path assign_rows
+        targets = entry_points.recompile_targets()
+        assert set(targets) == {"lamc_cocluster", "assign_rows"}
+        for name, (fn, make_args) in sorted(targets.items()):
+            misses, fs = count_recompiles(name, fn, make_args)
+            assert misses == 0, f"{name}: {[f.message for f in fs]}"
+
+
+# --------------------------------------------------------------------------
+# entry-point registry + CLI
+# --------------------------------------------------------------------------
+
+
+class TestEntryPoints:
+    def test_registry_covers_required_surfaces(self):
+        assert {"lamc_dense", "lamc_sparse", "distributed_step",
+                "streaming_chunk", "cosine_assign", "cosine_topk",
+                "spmm", "spmm_tiled", "spmm_ata"} <= set(
+                    entry_points.ENTRY_POINTS)
+
+    def test_kernel_entries_audit_clean(self):
+        # cheap smoke of the registry plumbing; the CI lane audits all
+        fs = entry_points.audit_entry_points(
+            ["cosine_assign", "cosine_topk", "spmm"], x64=True)
+        assert fs == []
+
+
+class TestCli:
+    def _violating_file(self, tmp_path):
+        p = tmp_path / "bad.py"
+        p.write_text(textwrap.dedent("""
+            def f(x, acc=[]):
+                acc.append(x)
+                return acc
+        """))
+        return p
+
+    def test_non_strict_reports_but_exits_zero(self, tmp_path, capsys):
+        p = self._violating_file(tmp_path)
+        assert cli_main([str(p), "--ast-only"]) == 0
+        out = capsys.readouterr().out
+        assert "[R3]" in out and "1 finding" in out
+
+    def test_strict_exits_nonzero_on_findings(self, tmp_path, capsys):
+        p = self._violating_file(tmp_path)
+        assert cli_main([str(p), "--ast-only", "--strict"]) == 1
+
+    def test_json_output_parses(self, tmp_path, capsys):
+        p = self._violating_file(tmp_path)
+        cli_main([str(p), "--ast-only", "--json"])
+        doc = json.loads(capsys.readouterr().out)
+        assert [f["rule"] for f in doc["findings"]] == ["R3"]
+        assert doc["suppressed"] == []
+        assert set(doc["rules"]) == set(fmod.RULES)
+
+    def test_clean_file_strict_exits_zero(self, tmp_path, capsys):
+        p = tmp_path / "ok.py"
+        p.write_text("def f(x):\n    return x + 1\n")
+        assert cli_main([str(p), "--ast-only", "--strict"]) == 0

@@ -10,6 +10,7 @@ produces a **bit-identical** ``CoclusterModel`` to the uninterrupted run.
 """
 
 import dataclasses
+import importlib
 import os
 import subprocess
 import sys
@@ -17,7 +18,6 @@ import textwrap
 
 import numpy as np
 import pytest
-
 from hypothesis_compat import given, settings, st
 
 from repro import checkpoint as ckpt
@@ -26,10 +26,7 @@ from repro.core.lamc import LAMCConfig, lamc_cocluster
 from repro.core.metrics import nmi
 from repro.core.partition import make_plan
 from repro.data import planted_cocluster_matrix
-from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
-                                           run_with_recovery)
-
-import importlib
+from repro.runtime.fault_tolerance import FailureInjector, SimulatedFailure, run_with_recovery
 
 sfit = importlib.import_module("repro.streaming.fit")
 

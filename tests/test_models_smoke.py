@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_arch, list_archs, reduced
+from repro.configs import list_archs, reduced
 from repro.models import build_model
 from repro.models import transformer
 

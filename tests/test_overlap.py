@@ -22,18 +22,11 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (
-    LAMCConfig,
-    lamc_cocluster,
-    memberships_from_votes,
-    omega_index,
-    overlap_f1,
-)
+from repro.core import LAMCConfig, lamc_cocluster, memberships_from_votes, omega_index, overlap_f1
 from repro.core.merging import finalize_assignment
 from repro.core.partition import PartitionPlan
 from repro.data import planted_cocluster_matrix, to_bcoo

@@ -1,7 +1,5 @@
 """Theorem-1 probabilistic model: bound validity, monotonicity, Eq.4 solver."""
 
-import math
-
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st

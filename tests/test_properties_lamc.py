@@ -16,11 +16,10 @@ Invariants locked down:
     whenever the sparse formats are admissible at all.
 """
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
-
-import jax.numpy as jnp
 
 from repro.core import partition, probability
 from repro.core.partition import PartitionPlan

@@ -15,7 +15,6 @@ from repro.core.partition import PartitionPlan
 from repro.core.spectral import normalize_bipartite, randomized_svd, scc
 from repro.data import planted_cocluster_matrix, to_bcoo
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 
 
 @pytest.fixture(scope="module")

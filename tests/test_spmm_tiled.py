@@ -100,7 +100,7 @@ class TestSpmmAtaFused:
 
     def test_fused_vmem_fallback(self, tier, monkeypatch):
         """Operands past the VMEM budget decompose into two products."""
-        monkeypatch.setattr(kops, "_ATA_VMEM_BUDGET", 1)
+        monkeypatch.setattr(kops.vmem, "vmem_budget_bytes", lambda p="tpu": 1)
         rng = np.random.default_rng(3)
         mat = _rand_sparse(rng, 128, 128, 0.1)
         a = kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64)

@@ -11,7 +11,6 @@ Covers the DESIGN.md §10 contracts:
   * the Pallas cosine scoring kernel matches its ref oracle.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -11,11 +11,15 @@ from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.data.tokens import TokenBatchSpec, make_batch
-from repro.optim import (AdamWConfig, adamw_init, adamw_update,
-                         cosine_schedule, global_norm, grad_compress,
-                         wsd_schedule)
-from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
-                                           run_with_recovery)
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    grad_compress,
+    wsd_schedule,
+)
+from repro.runtime.fault_tolerance import FailureInjector, SimulatedFailure, run_with_recovery
 
 
 class TestAdamW:
