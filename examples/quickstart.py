@@ -4,7 +4,9 @@ model, and assign new rows against the restored artifact.
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the full production loop: batch fit -> score -> save the
-CoclusterModel checkpoint -> load it back -> out-of-sample assign_rows.
+CoclusterModel checkpoint -> load it back -> out-of-sample assign_rows —
+then prints the fit's phase-span trace (repro.obs, DESIGN.md §14) so the
+wall-clock breakdown of what just ran is part of the demo.
 """
 
 import tempfile
@@ -13,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import streaming
+from repro import obs, streaming
 from repro.core import LAMCConfig, lamc_cocluster, cocluster_scores
 from repro.core.baselines import scc_full
 from repro.core.metrics import nmi
@@ -21,6 +23,8 @@ from repro.data import planted_cocluster_matrix
 
 
 def main():
+    obs.configure(enabled=True)  # span-trace the whole loop (DESIGN.md §14)
+    obs.reset_trace()
     rng = np.random.default_rng(0)
     # 1400 rows planted; fit on the first 1200, hold out 200 for serving
     data = planted_cocluster_matrix(rng, 1400, 900, k=5, d=5,
@@ -61,6 +65,10 @@ def main():
         agree = nmi(np.asarray(res.labels), data.row_labels[1200:])
         print(f"held-out assign_rows: NMI vs planted truth = {agree:.3f}, "
               f"mean score {float(np.mean(np.asarray(res.score))):.3f}")
+
+    # where the time went: the fenced span tree of everything above
+    print("\nfit trace (python -m repro.obs renders saved traces):")
+    print(obs.render_trace())
 
 
 if __name__ == "__main__":

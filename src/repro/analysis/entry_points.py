@@ -145,6 +145,33 @@ def _spmm_ata():
     return (lambda mat, x: ops.spmm_ata(mat, x), (a, _dense(13, 256, 128)))
 
 
+def _with_obs(builder: Callable[[], tuple[Callable, tuple]]
+              ) -> Callable[[], tuple[Callable, tuple]]:
+    """Obs-enabled variant of an entry builder.
+
+    The wrapped fn flips ``obs.configure(enabled=True)`` for the duration
+    of the call and runs inside an active span, so staging it proves the
+    telemetry hooks add nothing to the lowered program: the audit rules
+    (R2 host-sync, A1 RNG-gather, op census) see the *same* jaxpr as the
+    plain entry — ``tests/test_obs.py`` pins jaxpr equality directly.
+    """
+    def build():
+        from repro import obs
+
+        fn, example_args = builder()
+
+        def wrapped(*args):
+            was = obs.enabled()
+            obs.configure(enabled=True)
+            try:
+                with obs.span("audit_entry"):
+                    return fn(*args)
+            finally:
+                obs.configure(enabled=was)
+        return wrapped, example_args
+    return build
+
+
 #: name -> () -> (fn, example_args); every jit surface the audits gate.
 ENTRY_POINTS: dict[str, Callable[[], tuple[Callable, tuple]]] = {
     "lamc_dense": _lamc_dense,
@@ -156,6 +183,15 @@ ENTRY_POINTS: dict[str, Callable[[], tuple[Callable, tuple]]] = {
     "spmm": _spmm,
     "spmm_tiled": _spmm_tiled,
     "spmm_ata": _spmm_ata,
+    # obs-enabled twins: same functions staged with telemetry switched on
+    # (spans active, kernel_dispatch events firing). Auditing these keeps
+    # the obs layer honest — if a hook ever leaked a primitive or a host
+    # sync into traced code, these entries would diverge from their plain
+    # twins and the A1/R2 rules would fire here first.
+    "lamc_dense_obs": _with_obs(_lamc_dense),
+    "streaming_chunk_obs": _with_obs(_streaming_chunk),
+    "cosine_assign_obs": _with_obs(_cosine_assign),
+    "spmm_ata_obs": _with_obs(_spmm_ata),
 }
 
 

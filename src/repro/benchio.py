@@ -11,13 +11,77 @@ Each trajectory file owns a key namespace (``BENCH_sparse.json`` owns
 via ``own_prefixes`` / ``foreign_prefixes`` and stale foreign keys —
 rows a previous, differently-routed writer left behind — are scrubbed on
 rewrite instead of accreting forever.
+
+Every write also refreshes a **provenance sidecar**, ``BENCH_meta.json``
+in the same directory: per trajectory file, the git SHA, JAX version,
+backend/device kind, and UTC timestamp of its last writer. The bare
+numbers in the trajectory files are only a trend if each point is
+attributable to a commit and a machine; the sidecar makes the BENCH
+history carry that attribution instead of relying on git archaeology.
 """
 
 from __future__ import annotations
 
+import datetime
 import json
+import os
+import subprocess
 
-__all__ = ["merge_rows"]
+__all__ = ["merge_rows", "provenance", "META_BASENAME"]
+
+#: sidecar filename, written next to each trajectory file.
+META_BASENAME = "BENCH_meta.json"
+
+
+def provenance() -> dict:
+    """Environment fingerprint for one benchmark write.
+
+    Never raises: outside a git checkout (or before JAX is importable)
+    the fields degrade to ``"unavailable"`` — a bench row with partial
+    provenance still beats one with none.
+    """
+    sha = "unavailable"
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        if proc.returncode == 0 and proc.stdout.strip():
+            sha = proc.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    info = {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        info["jax_version"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["device_kind"] = jax.devices()[0].device_kind
+    except Exception:  # noqa: BLE001 — provenance must never fail a bench
+        info.setdefault("jax_version", "unavailable")
+        info.setdefault("backend", "unavailable")
+        info.setdefault("device_kind", "unavailable")
+    return info
+
+
+def _write_meta_sidecar(path: str, n_rows: int) -> None:
+    meta_path = os.path.join(
+        os.path.dirname(os.path.abspath(path)), META_BASENAME)
+    merged = {}
+    try:
+        with open(meta_path) as f:
+            merged = json.load(f)
+        if not isinstance(merged, dict):
+            merged = {}
+    except (OSError, ValueError):
+        pass
+    entry = provenance()
+    entry["rows"] = n_rows
+    merged[os.path.basename(path)] = entry
+    with open(meta_path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
 
 
 def merge_rows(path: str, new_rows: dict,
@@ -30,6 +94,9 @@ def merge_rows(path: str, new_rows: dict,
     ``foreign_prefixes``: pre-existing keys matching any of these are
     dropped (keys owned by *another* trajectory file). Both scrubs apply
     only to what is already on disk — ``new_rows`` always lands as given.
+
+    Side effect: the ``BENCH_meta.json`` sidecar next to ``path`` gains
+    (or refreshes) this file's provenance entry.
     """
     merged = {}
     try:
@@ -46,4 +113,5 @@ def merge_rows(path: str, new_rows: dict,
     merged.update(new_rows)
     with open(path, "w") as f:
         json.dump(merged, f, indent=2, sort_keys=True)
+    _write_meta_sidecar(path, len(merged))
     return len(merged)

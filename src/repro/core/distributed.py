@@ -34,6 +34,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .. import obs
 from . import merging, partition
 from . import sparse as _sparse
 from .lamc import LAMCConfig, LAMCResult, _atom_fn, anchor_features, validate_assignment
@@ -348,16 +349,29 @@ def distributed_lamc(mesh: Mesh, a: jax.Array, cfg: LAMCConfig,
                      resample_axis: str | None = None) -> LAMCResult:
     """Run distributed LAMC on ``mesh``. See module docstring."""
     _validate_input_format(a, cfg)
-    step, in_sh, out_sh = lamc_step_fn(cfg, plan, mesh, block_axes,
-                                       resample_axis=resample_axis)
-    step_c = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
-    with mesh:
-        out = step_c(a)
-    return LAMCResult(out["row_labels"], out["col_labels"],
-                      out["row_votes"], out["col_votes"], plan,
-                      row_sigs=out["row_sigs"], col_sigs=out["col_sigs"],
-                      row_mean=out["row_mean"], col_mean=out["col_mean"],
-                      anchor_rows=out["anchor_rows"],
-                      anchor_cols=out["anchor_cols"],
-                      row_membership=out["row_membership"],
-                      col_membership=out["col_membership"])
+    with obs.span("distributed_lamc", devices=mesh.size,
+                  mesh=str(dict(mesh.shape)),
+                  block_axes="/".join(block_axes),
+                  resample_axis=resample_axis or "",
+                  m=plan.m, n=plan.n, phi=plan.phi, psi=plan.psi,
+                  t_p=plan.t_p, spmm_route=plan.spmm_route):
+        with obs.span("build_step"):
+            step, in_sh, out_sh = lamc_step_fn(cfg, plan, mesh, block_axes,
+                                               resample_axis=resample_axis)
+            step_c = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        # All three distributed phases (scatter -> atoms -> merge) are one
+        # XLA program; one fenced span covers the lot (DESIGN.md §14).
+        with obs.span("pipeline",
+                      phases="scatter->atom->merge") as ps:
+            with mesh:
+                out = ps.fence(step_c(a))
+        with obs.span("finalize") as fs:
+            return fs.fence(LAMCResult(
+                out["row_labels"], out["col_labels"],
+                out["row_votes"], out["col_votes"], plan,
+                row_sigs=out["row_sigs"], col_sigs=out["col_sigs"],
+                row_mean=out["row_mean"], col_mean=out["col_mean"],
+                anchor_rows=out["anchor_rows"],
+                anchor_cols=out["anchor_cols"],
+                row_membership=out["row_membership"],
+                col_membership=out["col_membership"]))

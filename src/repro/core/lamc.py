@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from . import merging, nmtf, partition, probability, spectral
 from . import sparse as _sparse
 
@@ -287,56 +288,71 @@ def lamc_cocluster(a, cfg: LAMCConfig,
     else:
         density = 1.0
     n_rows, n_cols = a.shape
-    if plan is None:
-        plan = partition.make_plan(
-            n_rows, n_cols,
-            min_cocluster_rows=cfg.min_cocluster_rows,
-            min_cocluster_cols=cfg.min_cocluster_cols,
-            p_thresh=cfg.p_thresh,
-            workers=cfg.workers,
-            seed=cfg.seed,
-            k=cfg.atom_k,
-            expected_failed_blocks=cfg.expected_failed_blocks,
-            grid_candidates=cfg.grid_candidates,
-            svd_method=cfg.svd_method,
-            density=density,
-            spmm_impl=cfg.spmm_impl,
-        )
-    operator = None
-    if cfg.input_format == "bcoo":
-        # Only a single-block SCC plan covering the whole matrix can run
-        # on the sparse operator (a subsampling (1,1) plan — phi < M or
-        # psi < N — still needs the per-resample extraction); every other
-        # plan densifies its blocks, so its route is "dense" whatever the
-        # knob says. The shared resolver keeps this decision identical to
-        # the plan search's pricing/surfacing — what runs is what was
-        # priced.
-        single = (plan.blocks_per_resample == 1 and cfg.atom == "scc"
-                  and plan.phi == plan.n_rows and plan.psi == plan.n_cols)
-        route = probability.resolve_spmm_route(
-            cfg.spmm_impl, density, float(plan.phi) * plan.psi,
-            single=single, svd_method=cfg.svd_method)
-        if plan.spmm_route != route:
-            plan = dataclasses.replace(plan, spmm_route=route)
-        if single and route != "dense":
-            # single-block plan: the block IS the matrix — keep it sparse.
-            # One host-side conversion, reused by every resample's ~10
-            # subspace-iteration products (the amortization the tiled /
-            # dual-ELL formats are built around).
-            operator = _sparse.prepare_operator(a, route)
-    if block_mask is not None:
-        block_mask = jnp.asarray(block_mask, dtype=bool)
-        want = (plan.t_p, plan.blocks_per_resample)
-        if tuple(block_mask.shape) != want:
-            raise ValueError(
-                f"block_mask must be (t_p, blocks_per_resample) = {want}, "
-                f"got {tuple(block_mask.shape)}")
-    merged, anchor_rows, anchor_cols = _lamc_jit(a, cfg, plan, operator,
-                                                 block_mask)
-    return LAMCResult(merged.row_labels, merged.col_labels,
-                      merged.row_votes, merged.col_votes, plan,
-                      row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,
-                      row_mean=merged.row_mean, col_mean=merged.col_mean,
-                      anchor_rows=anchor_rows, anchor_cols=anchor_cols,
-                      row_membership=merged.row_membership,
-                      col_membership=merged.col_membership)
+    with obs.span("lamc", rows=int(n_rows), cols=int(n_cols),
+                  input_format=cfg.input_format, atom=cfg.atom) as root:
+        if plan is None:
+            with obs.span("plan"):
+                plan = partition.make_plan(
+                    n_rows, n_cols,
+                    min_cocluster_rows=cfg.min_cocluster_rows,
+                    min_cocluster_cols=cfg.min_cocluster_cols,
+                    p_thresh=cfg.p_thresh,
+                    workers=cfg.workers,
+                    seed=cfg.seed,
+                    k=cfg.atom_k,
+                    expected_failed_blocks=cfg.expected_failed_blocks,
+                    grid_candidates=cfg.grid_candidates,
+                    svd_method=cfg.svd_method,
+                    density=density,
+                    spmm_impl=cfg.spmm_impl,
+                )
+        operator = None
+        if cfg.input_format == "bcoo":
+            # Only a single-block SCC plan covering the whole matrix can run
+            # on the sparse operator (a subsampling (1,1) plan — phi < M or
+            # psi < N — still needs the per-resample extraction); every other
+            # plan densifies its blocks, so its route is "dense" whatever the
+            # knob says. The shared resolver keeps this decision identical to
+            # the plan search's pricing/surfacing — what runs is what was
+            # priced.
+            single = (plan.blocks_per_resample == 1 and cfg.atom == "scc"
+                      and plan.phi == plan.n_rows and plan.psi == plan.n_cols)
+            route = probability.resolve_spmm_route(
+                cfg.spmm_impl, density, float(plan.phi) * plan.psi,
+                single=single, svd_method=cfg.svd_method)
+            if plan.spmm_route != route:
+                plan = dataclasses.replace(plan, spmm_route=route)
+            if single and route != "dense":
+                # single-block plan: the block IS the matrix — keep it sparse.
+                # One host-side conversion, reused by every resample's ~10
+                # subspace-iteration products (the amortization the tiled /
+                # dual-ELL formats are built around).
+                with obs.span("prepare_operator", route=route):
+                    operator = _sparse.prepare_operator(a, route)
+        # Resolved-plan attributes on the root span: what actually ran.
+        root.set(m=plan.m, n=plan.n, phi=plan.phi, psi=plan.psi,
+                 t_p=plan.t_p, spmm_route=plan.spmm_route,
+                 density=round(float(density), 6))
+        if block_mask is not None:
+            block_mask = jnp.asarray(block_mask, dtype=bool)
+            want = (plan.t_p, plan.blocks_per_resample)
+            if tuple(block_mask.shape) != want:
+                raise ValueError(
+                    f"block_mask must be (t_p, blocks_per_resample) = {want}, "
+                    f"got {tuple(block_mask.shape)}")
+        # The partition/extract -> atom -> merge phases fuse into one XLA
+        # program (_lamc_jit), so they share one fenced span: splitting it
+        # would mean splitting the jit (DESIGN.md §14).
+        with obs.span("pipeline",
+                      phases="partition/extract->atom->merge") as ps:
+            merged, anchor_rows, anchor_cols = ps.fence(
+                _lamc_jit(a, cfg, plan, operator, block_mask))
+        with obs.span("finalize") as fs:
+            return fs.fence(LAMCResult(
+                merged.row_labels, merged.col_labels,
+                merged.row_votes, merged.col_votes, plan,
+                row_sigs=merged.row_sigs, col_sigs=merged.col_sigs,
+                row_mean=merged.row_mean, col_mean=merged.col_mean,
+                anchor_rows=anchor_rows, anchor_cols=anchor_cols,
+                row_membership=merged.row_membership,
+                col_membership=merged.col_membership))

@@ -11,6 +11,12 @@ Each op:
     dominates.
 
 Set ``REPRO_FORCE_INTERPRET=1`` to force interpret mode on any backend.
+
+Every wrapper records which tier it dispatched to via
+``obs.kernel_dispatch`` (a labeled counter + optional trace event). The
+hook runs at *trace time* with static values only — under jit it counts
+compiled dispatch decisions, not executions — so it adds nothing to the
+lowered program (the obs-enabled jaxpr-audit entries pin this).
 """
 
 from __future__ import annotations
@@ -20,6 +26,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.analysis import vmem
 
 from . import ref
@@ -82,6 +89,8 @@ def kmeans_assign(x: jax.Array, centroids: jax.Array,
     so argmin never selects them; padded points are sliced off the output.
     """
     p, d = x.shape
+    _obs.kernel_dispatch(
+        "kmeans_assign", "interpret" if _interpret() else "pallas")
     xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
     cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
     labels, d2 = kmeans_assign_pallas(xp, cp, tile_p=tile_p, interpret=_interpret())
@@ -101,6 +110,8 @@ def cosine_assign(x: jax.Array, signatures: jax.Array,
     """
     p, d = x.shape
     k = signatures.shape[0]
+    _obs.kernel_dispatch(
+        "cosine_assign", "interpret" if _interpret() else "pallas")
     xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
     sp = _pad_to(_pad_to(signatures, 1, 128), 0, 8)
     labels, score = cosine_assign_pallas(
@@ -125,6 +136,8 @@ def cosine_topk(x: jax.Array, signatures: jax.Array, k: int,
         raise ValueError(
             f"top-k width must be in [1, {n_sigs}] (the signature count), "
             f"got k={k}")
+    _obs.kernel_dispatch(
+        "cosine_topk", "interpret" if _interpret() else "pallas")
     xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
     sp = _pad_to(_pad_to(signatures, 1, 128), 0, 8)
     labels, scores = cosine_topk_pallas(
@@ -147,6 +160,8 @@ def kmeans_update(x: jax.Array, centroids: jax.Array,
     """
     p, d = x.shape
     k = centroids.shape[0]
+    _obs.kernel_dispatch(
+        "kmeans_update", "interpret" if _interpret() else "pallas")
     w = jnp.ones((p,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     xp = _pad_to(_pad_to(x, 1, 128), 0, tile_p)
     cp = _pad_to(_pad_to(centroids, 1, 128), 0, 8, value=1e6)
@@ -167,6 +182,7 @@ def spmm(a, b: jax.Array, *, transpose: bool = False) -> jax.Array:
     tile-level kernel keeps the contraction on the MXU instead of the
     scatter unit.
     """
+    _obs.kernel_dispatch("spmm", "ref")
     rows, cols = a.indices[:, 0], a.indices[:, 1]
     if transpose:
         rows, cols = cols, rows
@@ -183,6 +199,7 @@ def sddmm(x: jax.Array, y: jax.Array, indices: jax.Array) -> jax.Array:
     and per-element dynamic gathers don't map onto TPU DMA without the
     tile-level format ``spmm_tiled`` uses.
     """
+    _obs.kernel_dispatch("sddmm", "ref")
     return ref.sddmm_ref(x, y, indices[:, 0], indices[:, 1])
 
 
@@ -203,6 +220,7 @@ def spmm_tiled(a: BlockSparseMatrix, b: jax.Array, *,
     bm, bk = a.tile_shape
     n_tr, n_tc = a.n_tiles
     backend = _tiled_backend()
+    _obs.kernel_dispatch("spmm_tiled", backend, transpose=transpose)
     out_rows = k if transpose else m
     if backend == "jnp":
         bp = _pad_to(b.astype(jnp.float32), 0, bm if transpose else bk)
@@ -236,6 +254,7 @@ def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
     n_tr, n_tc = a.n_tiles
     backend = _tiled_backend()
     if backend == "jnp":
+        _obs.kernel_dispatch("spmm_ata", "jnp", fused=False)
         xp = _pad_to(x.astype(jnp.float32), 0, bk)
         y = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
                                n_tr, n_tc, xp)
@@ -245,9 +264,17 @@ def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
     # fused-kernel residency (Y stripe + output stripe) priced by the same
     # estimator the A4 static audit uses — one budget, runtime and lint
     stripes = vmem.ata_resident_bytes(n_tr, n_tc, bm, bk, bn)
-    if stripes > vmem.vmem_budget_bytes("tpu"):
+    budget = vmem.vmem_budget_bytes("tpu")
+    if stripes > budget:
+        _obs.kernel_dispatch("spmm_ata", backend, fused=False,
+                             vmem_bytes=stripes, vmem_budget=budget)
+        _obs.get_registry().counter(
+            "spmm_ata_vmem_fallback",
+            help="fused A.T@(A@x) declined by the VMEM estimator").inc()
         y = spmm_tiled(a, x, bn=bn)
         return spmm_tiled(a, y, transpose=True, bn=bn)
+    _obs.kernel_dispatch("spmm_ata", backend, fused=True,
+                         vmem_bytes=stripes, vmem_budget=budget)
     interp = backend == "interpret"
     xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bk), 1, bn)
     out = spmm_ata_pallas(a.block_rows, a.block_cols, a.blocks, xp,
@@ -263,6 +290,8 @@ def bipartite_normalize(a: jax.Array, eps: float = 1e-8,
     ``core.spectral.normalize_bipartite``.
     """
     m, n = a.shape
+    _obs.kernel_dispatch(
+        "bipartite_normalize", "interpret" if _interpret() else "pallas")
     aa = jnp.abs(a)
     d1 = jnp.sum(aa, axis=1)
     d2 = jnp.sum(aa, axis=0)
@@ -289,6 +318,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
     assert hq % hkv == 0, f"GQA heads mismatch: {hq} % {hkv}"
+    _obs.kernel_dispatch(
+        "flash_attention", "interpret" if _interpret() else "pallas")
     if hkv != hq:
         rep = hq // hkv
         k = jnp.repeat(k, rep, axis=1)

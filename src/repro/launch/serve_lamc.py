@@ -17,19 +17,27 @@ per request* — counted in ``serve_assign_*_errors`` next to p50/p99 —
 instead of crashing the loop or poisoning the latency stats with NaN
 scores. ``--adversarial N`` interleaves N bad batches into the stream to
 demonstrate the path (the smoke lane runs it).
+
+Latency aggregation runs on an ``obs.Histogram`` (fixed geometric
+buckets), not a materialized sample list: memory stays O(buckets)
+however long the request stream runs — an adversarial flood cannot grow
+the process — and p50/p99 come from the bucket interpolation the oracle
+test in ``tests/test_obs.py`` pins against ``np.percentile``. With
+``REPRO_OBS=1`` (or ``--trace-out``) the loop also emits a span trace.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import streaming
+from repro import obs, streaming
 from repro.data import planted_cocluster_matrix
 
 __all__ = ["fit_demo_model", "validate_request", "serve", "main"]
@@ -89,58 +97,76 @@ def _adversarial_batch(i: int, batch: int, dim: int):
 
 def serve(ckpt_dir: str, *, batch: int = 64, requests: int = 32,
           warmup: int = 3, axis: str = "rows", seed: int = 1,
-          adversarial: int = 0) -> dict:
+          adversarial: int = 0, registry: obs.Registry | None = None) -> dict:
     """Serve ``requests`` batches of synthetic vectors; report latency/QPS.
 
     ``adversarial`` extra malformed batches are interleaved into the
     stream; each is rejected (logged + counted), never timed — the
     error counter rides next to the latency stats so a deploy that
     starts bouncing requests is visible in the same bench row.
+
+    Latencies fold into a ``serve_assign_{axis}_latency_us`` histogram on
+    ``registry`` (default: a fresh per-call :class:`obs.Registry`, so one
+    serve's stats never bleed into another's); rejections increment
+    ``serve_assign_{axis}_errors``. Memory is O(buckets) regardless of
+    stream length. When every batch was rejected the percentiles are NaN
+    (empty histogram) — the error counter is the whole story.
     """
-    model, meta = streaming.load_model(ckpt_dir)
-    dim = model.n_cols if axis == "rows" else model.n_rows
-    assign = streaming.assign_rows if axis == "rows" else streaming.assign_cols
-    step = jax.jit(lambda x: assign(model, x))
+    reg = registry if registry is not None else obs.Registry()
+    hist = reg.histogram(f"serve_assign_{axis}_latency_us",
+                         help="per-batch assign latency, µs")
+    err_ct = reg.counter(f"serve_assign_{axis}_errors",
+                         help="rejected request batches")
+    with obs.span("serve", axis=axis, batch=batch, requests=requests,
+                  adversarial=adversarial) as root:
+        model, meta = streaming.load_model(ckpt_dir)
+        dim = model.n_cols if axis == "rows" else model.n_rows
+        assign = (streaming.assign_rows if axis == "rows"
+                  else streaming.assign_cols)
+        step = jax.jit(lambda x: assign(model, x))
 
-    rng = np.random.default_rng(seed)
-    reqs = jnp.asarray(rng.normal(size=(batch, dim)).astype(np.float32))
-    for _ in range(warmup):
-        jax.block_until_ready(step(reqs))
+        rng = np.random.default_rng(seed)
+        reqs = jnp.asarray(rng.normal(size=(batch, dim)).astype(np.float32))
+        with obs.span("warmup", iters=warmup):
+            for _ in range(warmup):
+                jax.block_until_ready(step(reqs))
 
-    # interleave adversarial batches roughly uniformly through the stream
-    stream: list[tuple[bool, object]] = [
-        (True, i) for i in range(requests)]
-    for i in range(adversarial):
-        pos = min(len(stream), 1 + i * max(1, requests // max(adversarial, 1)))
-        stream.insert(pos, (False, i))
+        # interleave adversarial batches roughly uniformly through the stream
+        stream: list[tuple[bool, object]] = [
+            (True, i) for i in range(requests)]
+        for i in range(adversarial):
+            pos = min(len(stream),
+                      1 + i * max(1, requests // max(adversarial, 1)))
+            stream.insert(pos, (False, i))
 
-    lat_s = []
-    errors = 0
-    out = None
-    for ok, i in stream:
-        x = (reqs + jnp.float32(i)) if ok else _adversarial_batch(i, batch, dim)
-        reason = validate_request(x, dim)
-        if reason is not None:
-            errors += 1
-            print(f"serve[{axis}]: rejected request: {reason}")
-            continue
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(step(x))
-        lat_s.append(time.perf_counter() - t0)
-    if lat_s:
-        lat_us = np.asarray(lat_s) * 1e6
-        p50 = float(np.percentile(lat_us, 50))
-        p99 = float(np.percentile(lat_us, 99))
-    else:
-        # every batch was rejected: the error counter is the whole story —
-        # report it without crashing on empty percentiles / a None output
-        p50 = p99 = float("nan")
-    qps = batch * len(lat_s) / max(float(np.sum(lat_s)), 1e-9)
+        out = None
+        with obs.span("request_loop", total=len(stream)):
+            for ok, i in stream:
+                x = ((reqs + jnp.float32(i)) if ok
+                     else _adversarial_batch(i, batch, dim))
+                reason = validate_request(x, dim)
+                if reason is not None:
+                    err_ct.inc()
+                    obs.event("request_rejected", reason=reason)
+                    print(f"serve[{axis}]: rejected request: {reason}")
+                    continue
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(step(x))
+                hist.observe((time.perf_counter() - t0) * 1e6)
+
+        # percentiles straight off the bucket counts; NaN when every batch
+        # was rejected (empty histogram) — same contract as before
+        p50 = hist.percentile(50)
+        p99 = hist.percentile(99)
+        qps = (batch * hist.count / max(hist.sum / 1e6, 1e-9)
+               if hist.count else 0.0)
+        root.set(served=hist.count, errors=int(err_ct.value),
+                 p50_us=None if math.isnan(p50) else round(p50, 1))
     return {
         f"serve_assign_{axis}_p50_us": p50,
         f"serve_assign_{axis}_p99_us": p99,
         f"serve_assign_{axis}_qps": qps,
-        f"serve_assign_{axis}_errors": errors,
+        f"serve_assign_{axis}_errors": int(err_ct.value),
         "_labels_sample": (np.asarray(out.labels[:8]).tolist()
                            if out is not None else []),
         "_model_kind": meta.get("kind"),
@@ -162,8 +188,15 @@ def main(argv=None):
                          "counted, never crash the loop)")
     ap.add_argument("--bench-out", default="BENCH_stream.json",
                     help="merge latency rows into this file ('' to skip)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the serve span trace as JSONL here "
+                         "(implies enabling obs spans)")
     args = ap.parse_args(argv)
 
+    if args.trace_out:
+        obs.configure(enabled=True)
+    if obs.enabled():
+        obs.reset_trace()
     if args.fit_demo:
         fit_demo_model(args.ckpt)
     axes = ["rows", "cols"] if args.axis == "both" else [args.axis]
@@ -180,6 +213,9 @@ def main(argv=None):
 
         merge_rows(args.bench_out, bench_rows,
                    own_prefixes=("stream_", "serve_"))
+    if args.trace_out:
+        obs.write_trace_jsonl(args.trace_out)
+        print(f"serve trace -> {args.trace_out}")
     print(json.dumps({**bench_rows, "batch": args.batch,
                       "requests": args.requests}, indent=2))
 

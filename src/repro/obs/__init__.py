@@ -1,0 +1,83 @@
+"""Unified telemetry layer (DESIGN.md §14): spans, metrics, trace export.
+
+Three pieces, one import:
+
+* ``trace``   — nestable ``span("phase")`` context managers with
+  block-until-ready fencing at span exit (honest device time under JAX
+  async dispatch) and structured ``event``s; **off by default**
+  (``configure(enabled=True)`` or ``REPRO_OBS=1``), disabled spans are a
+  shared no-op singleton.
+* ``metrics`` — typed counters/gauges/fixed-bucket histograms in a
+  global default :class:`Registry` (always on: host-side, O(1),
+  bounded memory), with ``snapshot``/``diff`` and ``to_rows`` for
+  ``benchio`` export.
+* ``export``  — per-run JSONL trace files, a schema validator (the CI
+  obs-smoke gate), and the ``python -m repro.obs trace.jsonl``
+  flamegraph-text pretty-printer.
+
+Sync-safety contract: every hook lives strictly outside jit-compiled
+code paths. The one exception is :func:`kernel_dispatch`, which the
+``kernels.ops`` wrappers call with *static* dispatch facts (tier, tile
+config, VMEM verdict) — under tracing it runs once at trace time, touches
+no tracer values, and adds nothing to the jaxpr; the obs-enabled entries
+in ``analysis.entry_points`` keep that provable in CI.
+"""
+
+from .export import (
+    read_trace_jsonl,
+    render_rows,
+    render_trace,
+    trace_rows,
+    validate_rows,
+    validate_trace_jsonl,
+    write_trace_jsonl,
+)
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    default_latency_buckets_us,
+    get_registry,
+    reset_metrics,
+)
+from .trace import (
+    TRACE_SCHEMA_VERSION,
+    Span,
+    Trace,
+    configure,
+    current_trace,
+    enabled,
+    event,
+    reset_trace,
+    span,
+)
+
+__all__ = [
+    "TRACE_SCHEMA_VERSION", "Span", "Trace", "span", "event", "configure",
+    "enabled", "current_trace", "reset_trace",
+    "Counter", "Gauge", "Histogram", "Registry", "get_registry",
+    "reset_metrics", "default_latency_buckets_us",
+    "trace_rows", "write_trace_jsonl", "read_trace_jsonl",
+    "validate_trace_jsonl", "validate_rows", "render_rows", "render_trace",
+    "kernel_dispatch",
+]
+
+
+def kernel_dispatch(op: str, tier: str, **attrs) -> None:
+    """Record one kernel-dispatch decision (which tier ran, and why).
+
+    Increments ``kernel_dispatch{op=...,tier=...}`` in the default
+    registry and, when spans are enabled, attaches a ``kernel_dispatch``
+    event (carrying ``attrs`` — e.g. the VMEM-estimator verdict) to the
+    current span. All arguments must be static host values: inside a jit
+    trace this runs once, at trace time, so the counters meter *compiled
+    dispatch decisions*, not per-call execution — exactly the property
+    that makes it safe to leave in traced code.
+    """
+    get_registry().counter(
+        "kernel_dispatch",
+        help="kernel tier decisions, by op (counted per trace)",
+    ).labels(op=op, tier=tier).inc()
+    if enabled():
+        event("kernel_dispatch", op=op, tier=tier, **attrs)

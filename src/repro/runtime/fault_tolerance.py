@@ -44,6 +44,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro import obs
 from repro.checkpoint import checkpoint as ckpt
 
 logger = logging.getLogger("repro.fault_tolerance")
@@ -99,6 +100,8 @@ def run_with_recovery(
     failures = 0
     last_saved: int | None = None
 
+    _metrics = obs.get_registry()
+
     def _save(s: int, st: Any) -> None:
         nonlocal last_saved
         if s == last_saved:
@@ -108,6 +111,10 @@ def run_with_recovery(
         else:
             ckpt.save(ckpt_dir, s, state_for_save(st), extra_meta={"step": s})
         last_saved = s
+        obs.event("recovery.checkpoint_saved", step=s)
+        _metrics.counter(
+            "recovery_checkpoints",
+            help="checkpoints committed by run_with_recovery").inc()
 
     while total_steps is None or step < total_steps:
         try:
@@ -119,7 +126,12 @@ def run_with_recovery(
         except SimulatedFailure as e:
             failures += 1
             retries += 1
+            _metrics.counter(
+                "recovery_failures",
+                help="step failures seen by run_with_recovery").inc()
             if retries > max_retries:
+                obs.event("recovery.retries_exhausted", failed_step=step,
+                          retries=retries - 1, max_retries=max_retries)
                 raise RuntimeError(f"exceeded {max_retries} retries") from e
             latest = ckpt.latest_step(ckpt_dir)
             if latest is not None and (last_saved is None
@@ -130,9 +142,21 @@ def run_with_recovery(
                 logger.warning(
                     "ignoring checkpoint step %s in %s: not written by this "
                     "run (last saved here: %s)", latest, ckpt_dir, last_saved)
+                obs.event("recovery.stale_checkpoint", ignored_step=latest,
+                          last_saved=last_saved)
+                _metrics.counter(
+                    "recovery_stale_checkpoints",
+                    help="foreign checkpoint steps ignored on restore").inc()
                 latest = last_saved
             logger.warning("step %d failed (%s); restoring from %s",
                            step, e, latest)
+            obs.event("recovery.restore", failed_step=step,
+                      target=-1 if latest is None else latest,
+                      retries=retries, chunks_replayed=(
+                          step - (step0 if latest is None else latest)))
+            _metrics.counter(
+                "recovery_restores",
+                help="restore-from-checkpoint recoveries").inc()
             if latest is None:
                 step = step0  # restart from scratch
                 if restore_state is not None:

@@ -73,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as _ckpt
+from repro import obs
 from repro.core import merging as _merging
 from repro.core import sparse as _sparse
 from repro.core import spectral as _spectral
@@ -407,8 +408,14 @@ class StreamingCocluster:
             sub.reshape(r, cfg.blocks_per_chunk, psi), (1, 0, 2))
         return blocks, feats.astype(jnp.float32)
 
-    def partial_fit(self, chunk) -> "StreamingCocluster":
-        """Fold one ``(r, N)`` row chunk (dense or BCOO) into the model."""
+    def partial_fit(self, chunk, *, replayed: bool = False
+                    ) -> "StreamingCocluster":
+        """Fold one ``(r, N)`` row chunk (dense or BCOO) into the model.
+
+        ``replayed=True`` marks the chunk span as a refold — the fit
+        driver passes it when a recovery rolled the step counter back, so
+        a trace distinguishes first-time folds from recovery replays.
+        """
         t = self.chunks
         self._validate_chunk(chunk, t)
         shape = tuple(chunk.shape)
@@ -420,21 +427,25 @@ class StreamingCocluster:
             self._chunk_format, self._chunk_dtype = _chunk_fingerprint(chunk)
         r = int(shape[0])
         if r == 0:
-            return self
+            return self  # not a step: no span either (one span per fold)
         self._peak_chunk_bytes = max(self._peak_chunk_bytes, _nbytes(chunk))
 
-        blocks, feats = self._blocks_and_feats(chunk, t)
-        row_labels, sigs, counts, raw_sums = _chunk_atoms(
-            self.cfg, blocks, feats, jnp.int32(t))
+        with obs.span("chunk", t=t, rows=r, replayed=replayed):
+            with obs.span("blocks"):
+                blocks, feats = self._blocks_and_feats(chunk, t)
+            with obs.span("atoms") as asp:
+                row_labels, sigs, counts, raw_sums = asp.fence(_chunk_atoms(
+                    self.cfg, blocks, feats, jnp.int32(t)))
 
-        q = sigs.shape[-1]
-        self._atom_sigs.append(np.asarray(sigs).reshape(-1, q))
-        self._atom_cnts.append(np.asarray(counts).reshape(-1))
-        self._atom_sums.append(np.asarray(raw_sums).reshape(-1, q))
-        self._chunk_labels.append(np.asarray(row_labels))
-        self._anchor_sum += np.asarray(feats, dtype=np.float32).sum(axis=0)
+            q = sigs.shape[-1]
+            self._atom_sigs.append(np.asarray(sigs).reshape(-1, q))
+            self._atom_cnts.append(np.asarray(counts).reshape(-1))
+            self._atom_sums.append(np.asarray(raw_sums).reshape(-1, q))
+            self._chunk_labels.append(np.asarray(row_labels))
+            self._anchor_sum += np.asarray(feats, dtype=np.float32).sum(axis=0)
 
-        self._reservoir_update(chunk, r, t)
+            with obs.span("reservoir"):
+                self._reservoir_update(chunk, r, t)
         self.rows_seen += r
         self.chunks += 1
         return self
@@ -520,77 +531,86 @@ class StreamingCocluster:
         k = cfg.atom_k
         b = cfg.blocks_per_chunk
 
-        # global atom alignment: the batch merge's signature k-means over
-        # ALL chunk atoms (count-weighted, best-of-restarts) — the top of
-        # the streaming hierarchy (block -> signature -> global clusters)
-        flat_sigs = jnp.asarray(np.concatenate(self._atom_sigs, axis=0))
-        flat_cnt = jnp.asarray(np.concatenate(self._atom_cnts, axis=0))
-        kmerge = jax.random.fold_in(jax.random.key(cfg.seed + 7), 2)
-        atom_global = np.asarray(_merging.cluster_atoms_best(
-            kmerge, flat_sigs, flat_cnt, k_row,
-            cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts))
+        with obs.span("finalize", chunks=self.chunks,
+                      rows=self.rows_seen) as fin:
+            # global atom alignment: the batch merge's signature k-means over
+            # ALL chunk atoms (count-weighted, best-of-restarts) — the top of
+            # the streaming hierarchy (block -> signature -> global clusters)
+            with obs.span("align", atoms=sum(len(c) for c in self._atom_cnts)):
+                flat_sigs = jnp.asarray(np.concatenate(self._atom_sigs, axis=0))
+                flat_cnt = jnp.asarray(np.concatenate(self._atom_cnts, axis=0))
+                kmerge = jax.random.fold_in(jax.random.key(cfg.seed + 7), 2)
+                atom_global = np.asarray(_merging.cluster_atoms_best(
+                    kmerge, flat_sigs, flat_cnt, k_row,
+                    cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts))
 
-        # per-row votes through each chunk's aligned atoms (numpy: chunk
-        # sizes vary, keep this off the jit cache)
-        vote_rows = []
-        for t, labels in enumerate(self._chunk_labels):
-            ag = atom_global[t * b * k:(t + 1) * b * k].reshape(b, k)
-            point_global = np.take_along_axis(ag, labels, axis=1)   # (B, r)
-            r = labels.shape[1]
-            votes = np.zeros((r, k_row), np.float32)
-            np.add.at(votes, (np.arange(r)[None, :].repeat(b, 0), point_global),
-                      1.0)
-            vote_rows.append(votes)
-        row_votes = jnp.asarray(np.concatenate(vote_rows, axis=0))
-        # assignment semantics shared with the batch drivers (§11):
-        # overlap mode marks rows whose vote share clears no cluster as
-        # outliers (-1); the vote tables ride in the model either way
-        row_labels, _ = _merging.finalize_assignment(
-            row_votes, cfg.assignment, cfg.overlap_threshold,
-            cfg.min_membership)
+            with obs.span("votes") as vsp:
+                # per-row votes through each chunk's aligned atoms (numpy:
+                # chunk sizes vary, keep this off the jit cache)
+                vote_rows = []
+                for t, labels in enumerate(self._chunk_labels):
+                    ag = atom_global[t * b * k:(t + 1) * b * k].reshape(b, k)
+                    point_global = np.take_along_axis(ag, labels, axis=1)  # (B, r)
+                    r = labels.shape[1]
+                    votes = np.zeros((r, k_row), np.float32)
+                    np.add.at(votes,
+                              (np.arange(r)[None, :].repeat(b, 0), point_global),
+                              1.0)
+                    vote_rows.append(votes)
+                row_votes = jnp.asarray(np.concatenate(vote_rows, axis=0))
+                # assignment semantics shared with the batch drivers (§11):
+                # overlap mode marks rows whose vote share clears no cluster as
+                # outliers (-1); the vote tables ride in the model either way
+                row_labels, _ = _merging.finalize_assignment(
+                    row_votes, cfg.assignment, cfg.overlap_threshold,
+                    cfg.min_membership)
 
-        # row serving signatures: atom anchor-feature sums grouped by the
-        # atoms' global cluster, centered by the global anchor mean
-        row_mean = jnp.asarray(self._anchor_sum / self.rows_seen)
-        sums = np.concatenate(self._atom_sums, axis=0)          # (A, q)
-        cnts = np.concatenate(self._atom_cnts, axis=0)          # (A,)
-        sig_sum = np.zeros((k_row, sums.shape[1]), np.float32)
-        sig_cnt = np.zeros((k_row,), np.float32)
-        np.add.at(sig_sum, atom_global, sums)
-        np.add.at(sig_cnt, atom_global, cnts)
-        sig = (jnp.asarray(sig_sum) / jnp.maximum(
-            jnp.asarray(sig_cnt)[:, None], 1.0)) - row_mean[None, :]
-        row_sigs = sig / jnp.maximum(
-            jnp.linalg.norm(sig, axis=1, keepdims=True), 1e-12)
+                # row serving signatures: atom anchor-feature sums grouped by
+                # the atoms' global cluster, centered by the global anchor mean
+                row_mean = jnp.asarray(self._anchor_sum / self.rows_seen)
+                sums = np.concatenate(self._atom_sums, axis=0)      # (A, q)
+                cnts = np.concatenate(self._atom_cnts, axis=0)      # (A,)
+                sig_sum = np.zeros((k_row, sums.shape[1]), np.float32)
+                sig_cnt = np.zeros((k_row,), np.float32)
+                np.add.at(sig_sum, atom_global, sums)
+                np.add.at(sig_cnt, atom_global, cnts)
+                sig = (jnp.asarray(sig_sum) / jnp.maximum(
+                    jnp.asarray(sig_cnt)[:, None], 1.0)) - row_mean[None, :]
+                row_sigs = sig / jnp.maximum(
+                    jnp.linalg.norm(sig, axis=1, keepdims=True), 1e-12)
+                vsp.fence((row_labels, row_sigs))
 
-        # columns: clustered in the reservoir-sliver feature space (the
-        # anchor-row features serving uses), centered + unit-normalized so
-        # profile *direction* decides, then the same best-of-restarts
-        # k-means as the row alignment
-        fill = max(self._res_fill, 1)
-        sliver = jnp.asarray(self._res_vals[:fill])             # (q_res, N)
-        feats_c = sliver.T                                      # (N, q_res)
-        feats_c = feats_c - jnp.mean(feats_c, axis=0, keepdims=True)
-        feats_c = feats_c / jnp.maximum(
-            jnp.linalg.norm(feats_c, axis=1, keepdims=True), 1e-12)
-        kcols = jax.random.fold_in(jax.random.key(cfg.seed + 7), 3)
-        col_labels = _merging.cluster_atoms_best(
-            kcols, feats_c, jnp.ones((n,), jnp.float32), k_col,
-            cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts)
-        col_votes = jax.nn.one_hot(col_labels, k_col, dtype=jnp.float32)
-        col_sigs, col_mean, _ = _merging.cluster_signatures(
-            sliver.T, col_labels, k_col)
-        anchor_rows = jnp.asarray(self._res_ids[:fill].astype(np.int32))
+            with obs.span("columns") as csp:
+                # columns: clustered in the reservoir-sliver feature space
+                # (the anchor-row features serving uses), centered +
+                # unit-normalized so profile *direction* decides, then the
+                # same best-of-restarts k-means as the row alignment
+                fill = max(self._res_fill, 1)
+                sliver = jnp.asarray(self._res_vals[:fill])         # (q_res, N)
+                feats_c = sliver.T                                  # (N, q_res)
+                feats_c = feats_c - jnp.mean(feats_c, axis=0, keepdims=True)
+                feats_c = feats_c / jnp.maximum(
+                    jnp.linalg.norm(feats_c, axis=1, keepdims=True), 1e-12)
+                kcols = jax.random.fold_in(jax.random.key(cfg.seed + 7), 3)
+                col_labels = _merging.cluster_atoms_best(
+                    kcols, feats_c, jnp.ones((n,), jnp.float32), k_col,
+                    cfg.merge_kmeans_iters, n_restarts=cfg.merge_restarts)
+                col_votes = jax.nn.one_hot(col_labels, k_col, dtype=jnp.float32)
+                col_sigs, col_mean, _ = _merging.cluster_signatures(
+                    sliver.T, col_labels, k_col)
+                anchor_rows = jnp.asarray(self._res_ids[:fill].astype(np.int32))
 
-        model = CoclusterModel(
-            row_labels=row_labels, col_labels=col_labels.astype(jnp.int32),
-            row_votes=row_votes, col_votes=col_votes,
-            row_sigs=row_sigs, col_sigs=col_sigs,
-            row_mean=row_mean.astype(jnp.float32),
-            col_mean=col_mean.astype(jnp.float32),
-            anchor_rows=anchor_rows,
-            anchor_cols=self._anchor_cols.astype(jnp.int32),
-        )
+                model = csp.fence(CoclusterModel(
+                    row_labels=row_labels,
+                    col_labels=col_labels.astype(jnp.int32),
+                    row_votes=row_votes, col_votes=col_votes,
+                    row_sigs=row_sigs, col_sigs=col_sigs,
+                    row_mean=row_mean.astype(jnp.float32),
+                    col_mean=col_mean.astype(jnp.float32),
+                    anchor_rows=anchor_rows,
+                    anchor_cols=self._anchor_cols.astype(jnp.int32),
+                ))
+            fin.fence(model)
         dt = time.perf_counter() - self._t0
         state_bytes = int(
             sum(v.nbytes for vs in (self._atom_sigs, self._atom_cnts,
@@ -781,64 +801,78 @@ def fit(chunks: Iterable, cfg: StreamConfig, *,
     else:
         fitter, start = StreamingCocluster(cfg), 0
 
-    it = iter(chunks)
+    with obs.span("stream_fit", resumed=resume_from is not None,
+                  resume_step=start, recovery=recovery) as root:
+        it = iter(chunks)
 
-    # draw the already-folded chunks off the stream, checking each against
-    # the recorded fold — a different stream/chunking cannot silently
-    # masquerade as a resume
-    skipped = 0
-    while skipped < start:
-        try:
-            chunk = next(it)
-        except StopIteration:
-            raise ValueError(
-                f"resume_from state has {start} chunks folded but the "
-                f"stream ended after {skipped} — resuming needs the same "
-                "stream, re-chunked identically") from None
-        if _skip_empty(chunk):
-            continue
-        fitter.check_replayed_chunk(chunk, skipped)
-        skipped += 1
+        # draw the already-folded chunks off the stream, checking each
+        # against the recorded fold — a different stream/chunking cannot
+        # silently masquerade as a resume. Each skipped fold gets a trivial
+        # span so the trace still shows one chunk span per non-empty chunk,
+        # marked as a replay that was not re-folded.
+        skipped = 0
+        while skipped < start:
+            try:
+                chunk = next(it)
+            except StopIteration:
+                raise ValueError(
+                    f"resume_from state has {start} chunks folded but the "
+                    f"stream ended after {skipped} — resuming needs the same "
+                    "stream, re-chunked identically") from None
+            if _skip_empty(chunk):
+                continue
+            with obs.span("chunk", t=skipped, rows=int(chunk.shape[0]),
+                          replayed=True, skipped=True):
+                fitter.check_replayed_chunk(chunk, skipped)
+            skipped += 1
 
-    if not recovery:
-        for chunk in it:
-            fitter.partial_fit(chunk)
-        return fitter.finalize()
+        if not recovery:
+            for chunk in it:
+                fitter.partial_fit(chunk)
+            out = fitter.finalize()
+            root.set(chunks=out[1].chunks, rows_seen=out[1].rows_seen)
+            return out
 
-    cursor = _ChunkCursor(it, start=start, keep=save_every + 2)
+        cursor = _ChunkCursor(it, start=start, keep=save_every + 2)
+        hi = {"max": start}  # high-water chunk step: steps below it are refolds
 
-    def step_fn(t: int, f: StreamingCocluster) -> StreamingCocluster:
-        # the cursor never buffers empty chunks, so every step folds rows
-        f.partial_fit(cursor.get(t))
-        if failure_injector is not None:
-            # post-fold: the in-memory state is dirty, so recovery must
-            # genuinely rebuild from the checkpoint, not shrug and retry
-            failure_injector.maybe_fail(t)
-        return f
+        def step_fn(t: int, f: StreamingCocluster) -> StreamingCocluster:
+            # the cursor never buffers empty chunks, so every step folds rows
+            f.partial_fit(cursor.get(t), replayed=t < hi["max"])
+            hi["max"] = max(hi["max"], t + 1)
+            if failure_injector is not None:
+                # post-fold: the in-memory state is dirty, so recovery must
+                # genuinely rebuild from the checkpoint, not shrug and retry
+                failure_injector.maybe_fail(t)
+            return f
 
-    def restore_state(step: int) -> StreamingCocluster:
-        if step < 0:
-            # no checkpoint committed yet: from scratch (or the resume point)
-            if resume_from is not None:
-                f, _ = load_fit_state(resume_from, cfg)
-                return f
-            return StreamingCocluster(cfg)
-        f, _ = load_fit_state(ckpt_dir, cfg, step=step)
-        return f
+        def restore_state(step: int) -> StreamingCocluster:
+            if step < 0:
+                # no checkpoint committed yet: from scratch (or the
+                # resume point)
+                if resume_from is not None:
+                    f, _ = load_fit_state(resume_from, cfg)
+                    return f
+                return StreamingCocluster(cfg)
+            f, _ = load_fit_state(ckpt_dir, cfg, step=step)
+            return f
 
-    from repro.runtime import fault_tolerance as _ft
+        from repro.runtime import fault_tolerance as _ft
 
-    fitter, loop_stats = _ft.run_with_recovery(
-        total_steps=None, step_fn=step_fn, state=fitter,
-        ckpt_dir=ckpt_dir, save_every=save_every,
-        restore_state=restore_state, max_retries=max_retries,
-        start_step=start,
-        save_fn=lambda _step, f: save_fit_state(ckpt_dir, f))
-    if loop_stats["failures"]:
-        logger.info("fit recovered from %d injected failure(s); final "
-                    "chunk step %d", loop_stats["failures"],
-                    loop_stats["final_step"])
-    return fitter.finalize()
+        fitter, loop_stats = _ft.run_with_recovery(
+            total_steps=None, step_fn=step_fn, state=fitter,
+            ckpt_dir=ckpt_dir, save_every=save_every,
+            restore_state=restore_state, max_retries=max_retries,
+            start_step=start,
+            save_fn=lambda _step, f: save_fit_state(ckpt_dir, f))
+        if loop_stats["failures"]:
+            logger.info("fit recovered from %d injected failure(s); final "
+                        "chunk step %d", loop_stats["failures"],
+                        loop_stats["final_step"])
+        out = fitter.finalize()
+        root.set(chunks=out[1].chunks, rows_seen=out[1].rows_seen,
+                 failures=loop_stats["failures"])
+        return out
 
 
 def iter_row_chunks(matrix: np.ndarray, chunk_rows: int,
