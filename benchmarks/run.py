@@ -7,13 +7,14 @@ exit, writes machine-readable ``{name: µs/call}`` trajectory files so
 per-PR perf trajectories can be diffed without parsing stdout. Each file
 owns one key namespace — ``sparse_*`` rows go (only) to
 ``BENCH_sparse.json``, ``stream_*``/``serve_*`` rows to
-``BENCH_stream.json``, and every other row to ``BENCH_atoms.json`` —
-and stale foreign keys are scrubbed on rewrite. Sections (described in
-benchmarks/README.md):
+``BENCH_stream.json``, ``roofline_*`` rows to ``BENCH_roofline.json``,
+and every other row to ``BENCH_atoms.json`` — and stale foreign keys are
+scrubbed on rewrite. Sections (described in benchmarks/README.md):
   table2_*      running-time reproduction (paper Table II)
   table3_*      NMI/ARI reproduction (paper Table III)
   prob_bound_*  Theorem-1 bound tightness (paper Eq. 3)
-  roofline_*    per-cell roofline terms (benchmarks/README.md §Roofline)
+  roofline_*    achieved-vs-peak FLOPs/bytes for the repo's hot kernels
+                (-> ``BENCH_roofline.json``)
   kernel_*      Pallas kernel micro-benches (interpret-mode correctness +
                 jnp-path wall time; TPU wall time requires hardware)
   sparse_*      sparse atom phase: routed SpMM backends vs the
@@ -135,7 +136,7 @@ def main(argv=None) -> None:
         bench_probability.run(report)
     if "roofline" in sections:
         from benchmarks import bench_roofline
-        bench_roofline.run(report)
+        bench_roofline.run(report, quick=args.quick)
     if "kernel" in sections:
         _kernel_micro(report)
     if "sparse" in sections:
@@ -168,17 +169,28 @@ def main(argv=None) -> None:
     sparse_rows = {k: v for k, v in rows.items() if k.startswith("sparse_")}
     stream_rows = {k: v for k, v in rows.items()
                    if k.startswith(("stream_", "serve_"))}
+    roofline_rows = {k: v for k, v in rows.items()
+                     if k.startswith("roofline_")}
     atom_rows = {k: v for k, v in rows.items()
-                 if k not in sparse_rows and k not in stream_rows}
+                 if k not in sparse_rows and k not in stream_rows
+                 and k not in roofline_rows}
     if atom_rows:
         _merge_write("BENCH_atoms.json", atom_rows,
-                     foreign_prefixes=("sparse_", "stream_", "serve_"))
+                     foreign_prefixes=("sparse_", "stream_", "serve_",
+                                       "roofline_"))
     if sparse_rows:
+        # replace_prefixes: the sparse section regenerates its whole row
+        # family every run, so renamed/retired rows can't accrete
         _merge_write("BENCH_sparse.json", sparse_rows,
-                     own_prefixes=("sparse_",))
+                     own_prefixes=("sparse_",),
+                     replace_prefixes=("sparse_",))
     if stream_rows:
         _merge_write("BENCH_stream.json", stream_rows,
                      own_prefixes=("stream_", "serve_"))
+    if roofline_rows:
+        _merge_write("BENCH_roofline.json", roofline_rows,
+                     own_prefixes=("roofline_",),
+                     replace_prefixes=("roofline_",))
 
 
 if __name__ == "__main__":

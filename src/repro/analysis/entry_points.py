@@ -145,6 +145,46 @@ def _spmm_ata():
     return (lambda mat, x: ops.spmm_ata(mat, x), (a, _dense(13, 256, 128)))
 
 
+def _scaled_operand():
+    import jax.numpy as jnp
+    from repro.kernels import spmm as kspmm
+    a = _tiled_operand()
+    n_tr, n_tc = a.n_tiles
+    bm, bk = a.tile_shape
+    rs = jnp.abs(_dense(14, n_tr, bm)) + 0.5
+    cs = jnp.abs(_dense(15, n_tc, bk)) + 0.5
+    return kspmm.BlockSparseMatrix(
+        blocks=a.blocks, block_rows=a.block_rows, block_cols=a.block_cols,
+        t_order=a.t_order, shape=a.shape, row_scale=rs, col_scale=cs)
+
+
+def _spmm_tiled_scaled():
+    from repro.kernels import ops
+    a = _scaled_operand()
+    return (lambda mat, b: ops.spmm_tiled(mat, b), (a, _dense(16, 256, 128)))
+
+
+def _spmm_ata_gram():
+    from repro.kernels import ops
+    a = _scaled_operand()
+    return (lambda mat, x: ops.spmm_ata(mat, x, with_gram=True),
+            (a, _dense(17, 256, 16)))
+
+
+def _tiled_convert():
+    # stage 2 of the device conversion (the static-G build); stage 1's
+    # occupancy pass and popcount sync run at build time here, so the
+    # traced program is exactly what executes per conversion on device
+    import jax.numpy as jnp
+    from repro.kernels import spmm as kspmm
+    a = _bcoo(18, 256, 256)
+    rows, cols = a.indices[:, 0], a.indices[:, 1]
+    occ, count = kspmm.block_sparse_pattern_device(rows, cols, 2, 2, 128, 128)
+    g = int(count)
+    return (lambda r, c, v, o: kspmm.block_sparse_build_device(
+        r, c, v, o, g, 2, 128, 128), (rows, cols, a.data, occ))
+
+
 def _with_obs(builder: Callable[[], tuple[Callable, tuple]]
               ) -> Callable[[], tuple[Callable, tuple]]:
     """Obs-enabled variant of an entry builder.
@@ -183,6 +223,9 @@ ENTRY_POINTS: dict[str, Callable[[], tuple[Callable, tuple]]] = {
     "spmm": _spmm,
     "spmm_tiled": _spmm_tiled,
     "spmm_ata": _spmm_ata,
+    "spmm_tiled_scaled": _spmm_tiled_scaled,
+    "spmm_ata_gram": _spmm_ata_gram,
+    "tiled_convert": _tiled_convert,
     # obs-enabled twins: same functions staged with telemetry switched on
     # (spans active, kernel_dispatch events firing). Auditing these keeps
     # the obs layer honest — if a hook ever leaked a primitive or a host

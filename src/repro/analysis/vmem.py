@@ -127,33 +127,62 @@ def estimate_kernel(name: str, blocks: list[BlockUse],
 
 
 def ata_resident_bytes(n_tile_rows: int, n_tile_cols: int, bm: int, bk: int,
-                       bn: int, itemsize: int = 4) -> int:
+                       bn: int, itemsize: int = 4, *,
+                       with_gram: bool = False,
+                       scaled: bool = False) -> int:
     """Resident bytes of the fused ``A.T @ (A @ x)`` kernel per column
     stripe: the whole-height VMEM Y scratch ``(n_tr * bm, bn)`` plus the
     whole-height output stripe ``(n_tc * bk, bn)`` (both live across the
     full payload sweep — see ``kernels.spmm.spmm_ata_pallas``). The
     payload/x blocks stream through and are amortized against double-
-    buffering headroom, not this figure."""
-    return (n_tile_rows * bm + n_tile_cols * bk) * bn * itemsize
+    buffering headroom, not this figure.
+
+    ``with_gram`` adds the ``(bn, bn)`` Gram output of the fused
+    subspace-iteration step; ``scaled`` adds the per-payload row/col
+    scale slivers (``(1, bm)`` + ``(1, bk)``, priced at their padded
+    sublane granule)."""
+    total = (n_tile_rows * bm + n_tile_cols * bk) * bn * itemsize
+    if with_gram:
+        total += bn * bn * itemsize
+    if scaled:
+        total += (_SUBLANE * max(bm, _LANE) + _SUBLANE * max(bk, _LANE)) \
+            * itemsize
+    return total
+
+
+def _scale_blocks(bm: int, bk: int) -> list[BlockUse]:
+    return [
+        BlockUse("row_scale", (1, bm)),
+        BlockUse("col_scale", (1, bk)),
+    ]
 
 
 def _spmm_tiled_blocks(g: int, bm: int, bk: int, bn: int, n_pad: int,
-                       m_out: int) -> list[BlockUse]:
-    return [
+                       m_out: int, scaled: bool = False) -> list[BlockUse]:
+    blocks = [
         BlockUse("payload", (1, bm, bk), array_shape=(g, bm, bk)),
         BlockUse("rhs", (bk, bn), array_shape=(bk * 4, n_pad)),
         BlockUse("out", (bm, bn), array_shape=(m_out, n_pad)),
     ]
+    if scaled:
+        blocks += _scale_blocks(bm, bk)
+    return blocks
 
 
-def _spmm_ata_blocks(n_tr: int, n_tc: int, bm: int, bk: int,
-                     bn: int) -> list[BlockUse]:
-    return [
+def _spmm_ata_blocks(n_tr: int, n_tc: int, bm: int, bk: int, bn: int,
+                     scaled: bool = False,
+                     with_gram: bool = False) -> list[BlockUse]:
+    blocks = [
         BlockUse("payload", (1, bm, bk)),
         BlockUse("x", (bk, bn)),
         BlockUse("out_stripe", (n_tc * bk, bn)),
         BlockUse("y_scratch", (n_tr * bm, bn)),
     ]
+    if scaled:
+        blocks += _scale_blocks(bm, bk)
+    if with_gram:
+        blocks.append(BlockUse("gram", (bn, bn)))
+    return blocks
 
 
 #: kernel name -> () -> KernelEstimate at its shipped default tile config.
@@ -216,6 +245,18 @@ KERNEL_SPECS: dict[str, Callable[[], KernelEstimate]] = {
     "spmm_ata": lambda: estimate_kernel(
         "spmm_ata", _spmm_ata_blocks(n_tr=16, n_tc=16, bm=128, bk=128,
                                      bn=128)),
+    # scale-fused variants (normalize_bipartite applied in VMEM): the two
+    # per-payload scale slivers ride along with every payload block
+    "spmm_tiled_scaled": lambda: estimate_kernel(
+        "spmm_tiled_scaled", _spmm_tiled_blocks(g=64, bm=128, bk=128,
+                                                bn=128, n_pad=512,
+                                                m_out=1024, scaled=True)),
+    # fused subspace-iteration step: scaled SpMM -> Gram of the resident
+    # output stripe, all in one launch (see ops.spmm_ata with_gram=True)
+    "spmm_ata_fused_step": lambda: estimate_kernel(
+        "spmm_ata_fused_step", _spmm_ata_blocks(n_tr=16, n_tc=16, bm=128,
+                                                bk=128, bn=128, scaled=True,
+                                                with_gram=True)),
 }
 
 

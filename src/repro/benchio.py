@@ -86,14 +86,20 @@ def _write_meta_sidecar(path: str, n_rows: int) -> None:
 
 def merge_rows(path: str, new_rows: dict,
                own_prefixes: tuple[str, ...] | None = None,
-               foreign_prefixes: tuple[str, ...] = ()) -> int:
+               foreign_prefixes: tuple[str, ...] = (),
+               replace_prefixes: tuple[str, ...] = ()) -> int:
     """Merge ``new_rows`` into the JSON dict at ``path``; returns total size.
 
     ``own_prefixes``: if given, pre-existing keys *not* matching any of
     these prefixes are dropped (the file owns exactly that namespace).
     ``foreign_prefixes``: pre-existing keys matching any of these are
-    dropped (keys owned by *another* trajectory file). Both scrubs apply
-    only to what is already on disk — ``new_rows`` always lands as given.
+    dropped (keys owned by *another* trajectory file).
+    ``replace_prefixes``: pre-existing keys matching any of these are
+    dropped even when they belong to this file's own namespace — for
+    writers that regenerate a whole row family per run, so renamed or
+    retired rows cannot accrete alongside their successors. All three
+    scrubs apply only to what is already on disk — ``new_rows`` always
+    lands as given.
 
     Side effect: the ``BENCH_meta.json`` sidecar next to ``path`` gains
     (or refreshes) this file's provenance entry.
@@ -110,6 +116,9 @@ def merge_rows(path: str, new_rows: dict,
     if foreign_prefixes:
         merged = {k: v for k, v in merged.items()
                   if not k.startswith(tuple(foreign_prefixes))}
+    if replace_prefixes:
+        merged = {k: v for k, v in merged.items()
+                  if not k.startswith(tuple(replace_prefixes))}
     merged.update(new_rows)
     with open(path, "w") as f:
         json.dump(merged, f, indent=2, sort_keys=True)

@@ -324,9 +324,11 @@ def lamc_cocluster(a, cfg: LAMCConfig,
                 plan = dataclasses.replace(plan, spmm_route=route)
             if single and route != "dense":
                 # single-block plan: the block IS the matrix — keep it sparse.
-                # One host-side conversion, reused by every resample's ~10
-                # subspace-iteration products (the amortization the tiled /
-                # dual-ELL formats are built around).
+                # One conversion (device-resident on TPU), reused by every
+                # resample's ~10 subspace-iteration products, and served
+                # from the pattern cache (core.opcache) when the fit loop
+                # re-prepares a matrix whose sparsity pattern it has seen —
+                # a repeat fit/resample pays a values refresh at most.
                 with obs.span("prepare_operator", route=route):
                     operator = _sparse.prepare_operator(a, route)
         # Resolved-plan attributes on the root span: what actually ran.

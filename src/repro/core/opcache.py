@@ -1,0 +1,150 @@
+"""Pattern-keyed sparse-operator conversion cache (DESIGN.md §9).
+
+The resample loop (``lamc_cocluster``/``scc``) and the streaming
+re-chunk path repeatedly prepare operators whose *sparsity pattern* is
+stable while values change (normalization rescales data in place;
+resamples reuse the same matrix outright). Conversion cost splits the
+same way — the pattern half (tile discovery, visit order, scatter
+offsets: ``kernels.spmm.block_sparse_plan`` / ``sparse.ell_plan``) is
+the expensive part; the values half is one flat scatter. This cache
+keys converted operators by ``(indices fingerprint, shape, tile config,
+values dtype)`` so:
+
+  * same indices object + same data object  -> **hit**: the cached
+    operator is returned as-is (zero work);
+  * same pattern, new values               -> **refresh**: the cached
+    plan re-applies in one scatter, no tile discovery;
+  * anything else                          -> **miss**: full conversion,
+    result cached.
+
+Fingerprinting hashes the raw index bytes (blake2b), which costs real
+milliseconds at bench nnz — so fingerprints are memoized by the index
+array's object identity (strong refs pin the ids against reuse), and the
+hot hit path never hashes at all. The dtype of the values participates
+in the key so a pattern warmed at one dtype can never serve another; the
+tile config (``bm``/``bk`` or the ELL tag) likewise.
+
+Counters (``repro.obs``): ``tiled_conv_cache{event=hit|miss|refresh}``.
+Disable with ``REPRO_TILED_CACHE=0`` (every lookup degrades to a miss
+that bypasses storage — conversion semantics are identical either way,
+which is also the tested invariant).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from collections import OrderedDict
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+from repro import obs as _obs
+
+__all__ = ["PatternCache", "cache_enabled", "default_cache"]
+
+
+def cache_enabled() -> bool:
+    return os.environ.get("REPRO_TILED_CACHE", "1") != "0"
+
+
+class _Entry(NamedTuple):
+    plan: Any        # reusable pattern half (BlockSparsePlan / EllPlan)
+    operator: Any    # the converted operator built from (plan, data_obj)
+    data_obj: Any    # strong ref: identity check for the zero-work hit
+
+
+class PatternCache:
+    """Bounded LRU of converted sparse operators, keyed by pattern.
+
+    One process-wide instance (:func:`default_cache`) backs
+    ``core.sparse.prepare_operator``; tests construct their own. Entries
+    hold the full converted operator (block stacks are the dominant
+    footprint), so ``capacity`` stays small — the real workloads touch
+    one or two distinct patterns at a time.
+    """
+
+    def __init__(self, capacity: int = 4, counter: str = "tiled_conv_cache"):
+        self.capacity = capacity
+        self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
+        # id(indices) -> (indices strong ref, digest). The ref pins the
+        # id: without it a collected array's id could be reused by a new
+        # array and serve a stale digest.
+        self._fp_memo: dict[int, tuple[Any, bytes]] = {}
+        self._counter = counter
+        self.hits = 0
+        self.misses = 0
+        self.refreshes = 0
+
+    def _count(self, event: str) -> None:
+        _obs.get_registry().counter(
+            self._counter,
+            help="pattern-keyed sparse conversion cache events",
+        ).labels(event=event).inc()
+
+    def _fingerprint(self, indices) -> bytes:
+        memo = self._fp_memo.get(id(indices))
+        if memo is not None and memo[0] is indices:
+            return memo[1]
+        digest = hashlib.blake2b(
+            np.ascontiguousarray(np.asarray(indices)).tobytes(),
+            digest_size=16).digest()
+        if len(self._fp_memo) >= 4 * max(self.capacity, 1):
+            self._fp_memo.clear()
+        self._fp_memo[id(indices)] = (indices, digest)
+        return digest
+
+    def convert(self, a, config: tuple, plan_fn: Callable[[Any], Any],
+                apply_fn: Callable[[Any, Any], Any]):
+        """Convert BCOO ``a`` under ``config``, reusing cached pattern work.
+
+        ``plan_fn(a)`` builds the pattern plan + operator on a miss (it
+        returns ``(plan, operator)``); ``apply_fn(plan, data)`` rebuilds
+        an operator from a cached plan and fresh values. ``config`` is
+        the static part of the key — tile shape or format tag; the values
+        dtype is appended here so cross-dtype reuse is structurally
+        impossible.
+        """
+        if not cache_enabled():
+            plan, op = plan_fn(a)
+            return op
+        key = (self._fingerprint(a.indices), tuple(a.shape), *config,
+               np.dtype(a.data.dtype).str)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            if entry.data_obj is a.data:
+                self.hits += 1
+                self._count("hit")
+                return entry.operator
+            # same pattern, new values: one scatter through the old plan
+            op = apply_fn(entry.plan, a.data)
+            self._entries[key] = _Entry(entry.plan, op, a.data)
+            self.refreshes += 1
+            self._count("refresh")
+            return op
+        plan, op = plan_fn(a)
+        self._entries[key] = _Entry(plan, op, a.data)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        self.misses += 1
+        self._count("miss")
+        return op
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._fp_memo.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_DEFAULT: PatternCache | None = None
+
+
+def default_cache() -> PatternCache:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PatternCache()
+    return _DEFAULT

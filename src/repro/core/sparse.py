@@ -37,6 +37,9 @@ __all__ = [
     "gather_cols_dense",
     "gather_rows_dense",
     "EllOperator",
+    "EllPlan",
+    "ell_plan",
+    "ell_apply",
     "to_ell",
     "is_ell",
     "ell_matvec",
@@ -169,34 +172,79 @@ def is_ell(a) -> bool:
     return isinstance(a, EllOperator)
 
 
-def _ell_side(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-              m: int) -> tuple[np.ndarray, np.ndarray]:
+class _EllSidePlan(NamedTuple):
+    """Pattern half of one ELL orientation: where each value lands."""
+
+    r_sorted: np.ndarray   # (nnz,) destination row per sorted value
+    slot: np.ndarray       # (nnz,) destination slot per sorted value
+    order: np.ndarray      # (nnz,) stable sort permutation of the values
+    ell_idx: jax.Array     # (m, width) gather indices (pattern-only)
+    m: int
+    width: int
+
+
+class EllPlan(NamedTuple):
+    """Reusable pattern half of a BCOO -> dual-ELL conversion.
+
+    The ``core.opcache`` analogue of ``kernels.spmm.BlockSparsePlan``:
+    both orientations' sort/slot layouts plus the (values-independent)
+    gather-index grids, so a values refresh is two fancy scatters.
+    """
+
+    row: _EllSidePlan
+    col: _EllSidePlan
+
+
+def _ell_side(rows: np.ndarray, cols: np.ndarray, m: int) -> _EllSidePlan:
     counts = np.bincount(rows, minlength=m)
     width = max(int(counts.max()) if counts.size else 0, 1)
     order = np.argsort(rows, kind="stable")
     r_sorted = rows[order]
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
     slot = np.arange(len(rows)) - starts[r_sorted]
-    ell_vals = np.zeros((m, width), np.float32)
     ell_idx = np.zeros((m, width), np.int32)
-    ell_vals[r_sorted, slot] = vals[order]
     ell_idx[r_sorted, slot] = cols[order]
-    return ell_vals, ell_idx
+    return _EllSidePlan(r_sorted=r_sorted, slot=slot, order=order,
+                        ell_idx=jnp.asarray(ell_idx), m=m, width=width)
 
 
-def to_ell(a: jsparse.BCOO) -> EllOperator:
-    """One-time host-side conversion BCOO -> dual-ELL (O(nnz))."""
-    validate_bcoo(a)
+def _ell_side_vals(p: _EllSidePlan, vals: np.ndarray) -> jax.Array:
+    ell_vals = np.zeros((p.m, p.width), np.float32)
+    ell_vals[p.r_sorted, p.slot] = vals[p.order]
+    return jnp.asarray(ell_vals)
+
+
+def ell_plan(a: jsparse.BCOO) -> EllPlan:
+    """Pattern half of the dual-ELL conversion (sorting, slots, widths)."""
     m, n = a.shape
     rows = np.asarray(a.indices[:, 0])
     cols = np.asarray(a.indices[:, 1])
-    vals = np.asarray(a.data, dtype=np.float32)
-    row_vals, row_cols = _ell_side(rows, cols, vals, m)
-    col_vals, col_rows = _ell_side(cols, rows, vals, n)
+    return EllPlan(row=_ell_side(rows, cols, m), col=_ell_side(cols, rows, n))
+
+
+def ell_apply(plan: EllPlan, data) -> EllOperator:
+    """Values half: scatter fresh values through a cached pattern plan."""
+    vals = np.asarray(data, dtype=np.float32)
     return EllOperator(
-        row_vals=jnp.asarray(row_vals), row_cols=jnp.asarray(row_cols),
-        col_vals=jnp.asarray(col_vals), col_rows=jnp.asarray(col_rows),
+        row_vals=_ell_side_vals(plan.row, vals), row_cols=plan.row.ell_idx,
+        col_vals=_ell_side_vals(plan.col, vals), col_rows=plan.col.ell_idx,
     )
+
+
+def to_ell(a: jsparse.BCOO, cache=None) -> EllOperator:
+    """One-time host-side conversion BCOO -> dual-ELL (O(nnz)).
+
+    With a ``core.opcache.PatternCache``, repeated conversions of the
+    same sparsity pattern skip the sort/slot pattern pass (values-only
+    refresh) or the whole conversion (same data object).
+    """
+    validate_bcoo(a)
+    if cache is None:
+        return ell_apply(ell_plan(a), a.data)
+    return cache.convert(
+        a, ("ell",),
+        plan_fn=lambda x: ((p := ell_plan(x)), ell_apply(p, x.data)),
+        apply_fn=ell_apply)
 
 
 def ell_matvec(a: EllOperator, x: jax.Array) -> jax.Array:
@@ -237,8 +285,8 @@ def is_tiled(a) -> bool:
     return isinstance(a, BlockSparseMatrix)
 
 
-def to_tiled(a: jsparse.BCOO, bm: int = 128, bk: int = 128):
-    """One-time host-side conversion BCOO -> tile-level block-sparse.
+def to_tiled(a: jsparse.BCOO, bm: int = 128, bk: int = 128, *, cache=None):
+    """One-time conversion BCOO -> tile-level block-sparse.
 
     The counterpart of ``to_ell`` for the MXU regime: only tiles holding
     nonzeros keep a dense payload, and every subsequent product is a
@@ -246,12 +294,26 @@ def to_tiled(a: jsparse.BCOO, bm: int = 128, bk: int = 128):
     / the fused ``spmm_ata``) whose cost scales with *tile occupancy*
     instead of per-element gathers. Preferred above the dual-ELL
     crossover density (``probability.spmm_route``), where gather width
-    makes ELL products nnz-bound.
+    makes ELL products nnz-bound. Runs as a jitted device scan/scatter
+    on TPU and vectorized numpy elsewhere (``kernels.spmm``); a
+    ``core.opcache.PatternCache`` makes repeat conversions of a stable
+    sparsity pattern values-only (or free for an identical matrix).
     """
-    from repro.kernels.spmm import bcoo_to_block_sparse
+    from repro.kernels.spmm import (
+        block_sparse_apply,
+        block_sparse_plan,
+    )
 
     validate_bcoo(a)
-    return bcoo_to_block_sparse(a, bm=bm, bk=bk)
+
+    def _plan_fn(x):
+        plan = block_sparse_plan(x, bm=bm, bk=bk)
+        return plan, block_sparse_apply(plan, x.data)
+
+    if cache is None:
+        return _plan_fn(a)[1]
+    return cache.convert(a, ("tiled", bm, bk), plan_fn=_plan_fn,
+                         apply_fn=block_sparse_apply)
 
 
 def _tile_pad(v: jax.Array, tiles: int, width: int) -> jax.Array:
@@ -261,6 +323,7 @@ def _tile_pad(v: jax.Array, tiles: int, width: int) -> jax.Array:
 
 def tiled_abs_degree_sums(a) -> tuple[jax.Array, jax.Array]:
     """Bipartite degrees of Eq. 5 from the payload tiles, O(G * bm * bk)."""
+    a = a.materialize_scales()  # degrees of the *effective* operator
     bm, bk = a.tile_shape
     n_tr, n_tc = a.n_tiles
     av = jnp.abs(a.blocks)
@@ -276,15 +339,36 @@ def tiled_scale_rows_cols(a, s1: jax.Array, s2: jax.Array):
 
     Padding cells hold exact zeros, so the (arbitrary) padded scale
     entries multiply nothing.
+
+    On the Pallas/interpret tiers the scales are attached *lazily*
+    (``row_scale``/``col_scale`` grid views) and applied to each tile in
+    VMEM by the SpMM kernels — the normalized operator never exists as a
+    second block stack in HBM. The jnp tier folds them into the payloads
+    here, eagerly: its tile reference has no fused variant, and an
+    unfused lazy scale inside the subspace iteration's ``fori_loop``
+    would be re-applied every iteration. Both forms use the identical
+    multiply order, so results are bit-exact across tiers.
     """
     bm, bk = a.tile_shape
     n_tr, n_tc = a.n_tiles
-    s1t = _tile_pad(s1, n_tr, bm)[a.block_rows]        # (G, bm)
-    s2t = _tile_pad(s2, n_tc, bk)[a.block_cols]        # (G, bk)
+    rs = _tile_pad(s1, n_tr, bm)                       # (n_tr, bm)
+    cs = _tile_pad(s2, n_tc, bk)                       # (n_tc, bk)
     import repro.kernels.spmm as _spmm
+    from repro.kernels import ops as _kops
 
+    if _kops.tiled_scale_fusion():
+        if a.row_scale is not None:                    # compose scalings
+            rs = a.row_scale * rs
+            cs = a.col_scale * cs
+        return _spmm.BlockSparseMatrix(
+            blocks=a.blocks, block_rows=a.block_rows,
+            block_cols=a.block_cols, t_order=a.t_order, shape=a.shape,
+            row_scale=rs, col_scale=cs)
+    am = a.materialize_scales()
+    s1t = rs[a.block_rows]                             # (G, bm)
+    s2t = cs[a.block_cols]                             # (G, bk)
     return _spmm.BlockSparseMatrix(
-        blocks=a.blocks * s1t[:, :, None] * s2t[:, None, :],
+        blocks=am.blocks * s1t[:, :, None] * s2t[:, None, :],
         block_rows=a.block_rows, block_cols=a.block_cols,
         t_order=a.t_order, shape=a.shape)
 
@@ -308,23 +392,29 @@ def validate_spmm_impl(impl: str) -> str:
 
 
 def prepare_operator(a: jsparse.BCOO, impl: str, *, bm: int = 128,
-                     bk: int = 128):
-    """Host-side conversion of a BCOO matrix to the routed SpMM operand.
+                     bk: int = 128, cache="default"):
+    """Conversion of a BCOO matrix to the routed SpMM operand.
 
     ``impl`` must be a *resolved* route (``dense`` | ``dual_ell`` |
     ``tiled`` — resolve ``auto`` first via ``probability.spmm_route``).
-    The conversion is one-time host prep; callers amortize it across
-    every resample and subspace-iteration product that reuses the
-    operator. ``dense`` returns the densified matrix (the caller decided
-    sparsity is not worth the format).
+    Conversions go through the process-wide pattern cache
+    (``core.opcache``) by default, so the resample loop and streaming
+    re-chunks that keep a sparsity pattern pay the pattern pass once and
+    refresh values only (``cache=None`` bypasses; ``REPRO_TILED_CACHE=0``
+    disables globally). ``dense`` returns the densified matrix (the
+    caller decided sparsity is not worth the format).
     """
+    from repro.core import opcache
+
     validate_bcoo(a)
+    if cache == "default":
+        cache = opcache.default_cache() if opcache.cache_enabled() else None
     if impl == "dense":
         return a.todense()
     if impl == "dual_ell":
-        return to_ell(a)
+        return to_ell(a, cache=cache)
     if impl == "tiled":
-        return to_tiled(a, bm=bm, bk=bk)
+        return to_tiled(a, bm=bm, bk=bk, cache=cache)
     raise ValueError(
         f"impl must be a resolved route ('dense', 'dual_ell' or 'tiled'), "
         f"got {impl!r}")

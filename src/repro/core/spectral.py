@@ -78,6 +78,24 @@ def normalize_bipartite(a: jax.Array, eps: float = 1e-8):
     return a * d1_isqrt[:, None] * d2_isqrt[None, :], d1_isqrt, d2_isqrt
 
 
+def _orth_from_gram(yf: jax.Array, g: jax.Array,
+                    eps: float = 1e-7) -> jax.Array:
+    """CholeskyQR from a precomputed Gram: ``Q = Y L^{-T}``, ``G = LLᵀ``.
+
+    Split out of :func:`_cholesky_orth` so the tiled subspace iteration
+    can feed it the Gram emitted by the fused ``spmm_ata`` launch
+    (``with_gram=True``) — the ``(M, r)`` factor is then never re-read to
+    form ``YᵀY``. A trace-scaled ridge keeps the Cholesky finite when
+    ``Y`` is (numerically) rank-deficient.
+    """
+    r = g.shape[0]
+    ridge = eps * (jnp.trace(g) / r + 1.0)
+    l = jnp.linalg.cholesky(g + ridge * jnp.eye(r, dtype=g.dtype))
+    # Solve Q @ Lᵀ = Y  =>  Q = Y L^{-T}.
+    return jax.lax.linalg.triangular_solve(
+        l, yf, left_side=False, lower=True, transpose_a=True)
+
+
 def _cholesky_orth(y: jax.Array, eps: float = 1e-7) -> jax.Array:
     """Gram-based orthonormalization: ``Q = Y (YᵀY)^{-1/2}`` (CholeskyQR).
 
@@ -90,13 +108,7 @@ def _cholesky_orth(y: jax.Array, eps: float = 1e-7) -> jax.Array:
     """
     yf = y.astype(jnp.float32)
     g = yf.T @ yf                                   # (r, r) Gram — MXU
-    r = g.shape[0]
-    ridge = eps * (jnp.trace(g) / r + 1.0)
-    l = jnp.linalg.cholesky(g + ridge * jnp.eye(r, dtype=g.dtype))
-    # Solve Q @ Lᵀ = Y  =>  Q = Y L^{-T}.
-    q = jax.lax.linalg.triangular_solve(
-        l, yf, left_side=False, lower=True, transpose_a=True)
-    return q.astype(y.dtype)
+    return _orth_from_gram(yf, g, eps).astype(y.dtype)
 
 
 def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
@@ -135,23 +147,32 @@ def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
         # path (converted once per matrix, see sparse.EllOperator)
         matvec = lambda x: _sparse.ell_matvec(a, x)
         rmatvec = lambda x: _sparse.ell_rmatvec(a, x)
-        ata = None
+        ata = ata_step = None
     elif _sparse.is_tiled(a):
         from repro.kernels import ops as _kops  # lazy: kernels optional on CPU
 
         matvec = lambda x: _kops.spmm_tiled(a, x)
         rmatvec = lambda x: _kops.spmm_tiled(a, x, transpose=True)
         ata = lambda x: _kops.spmm_ata(a, x)
+        if qr_method == "cholesky":
+            # fused subspace-iteration step: one spmm_ata launch returns
+            # both Z = A.T(A X) and its (r, r) Gram (computed from the
+            # still-VMEM-resident stripe on TPU), feeding CholeskyQR
+            # directly — Z is never re-read to form ZᵀZ
+            ata_step = lambda x: _orth_from_gram(
+                *_kops.spmm_ata(a, x, with_gram=True))
+        else:
+            ata_step = lambda x: orth(ata(x))
     elif _sparse.is_bcoo(a):
         from repro.kernels import ops as _kops
 
         matvec = lambda x: _kops.spmm(a, x)                  # A @ x
         rmatvec = lambda x: _kops.spmm(a, x, transpose=True)  # A.T @ x
-        ata = None
+        ata = ata_step = None
     else:
         matvec = lambda x: a @ x
         rmatvec = lambda x: a.T @ x
-        ata = None
+        ata = ata_step = None
     omega = jax.random.normal(key, (n, r), dtype=jnp.float32 if sparse_in
                               else a.dtype)
     if sparse_in:
@@ -162,7 +183,7 @@ def randomized_svd(key: jax.Array, a: jax.Array, rank: int, n_iter: int = 4,
         omega = orth(omega)
     if ata is not None:
         # fused normal-equations power iteration on the (N, r) sketch
-        x = jax.lax.fori_loop(0, n_iter, lambda _, x: orth(ata(x)), omega)
+        x = jax.lax.fori_loop(0, n_iter, lambda _, x: ata_step(x), omega)
         q = orth(matvec(x))                         # (M, r)
     else:
         q = orth(matvec(omega))                     # (M, r)

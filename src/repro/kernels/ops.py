@@ -45,7 +45,7 @@ from .spmm import (
 __all__ = ["kmeans_assign", "kmeans_update", "cosine_assign", "cosine_topk",
            "bipartite_normalize", "flash_attention", "spmm", "sddmm",
            "spmm_tiled", "spmm_ata", "BlockSparseMatrix",
-           "bcoo_to_block_sparse"]
+           "bcoo_to_block_sparse", "tiled_scale_fusion"]
 
 
 def _interpret() -> bool:
@@ -69,6 +69,19 @@ def _tiled_backend() -> str:
     if jax.default_backend() == "tpu":
         return "pallas"
     return "jnp"
+
+
+def tiled_scale_fusion() -> bool:
+    """True when the current tiled backend applies pending diagonal
+    scales inside the kernels (pallas / interpret tiers).
+
+    ``core.sparse.tiled_scale_rows_cols`` consults this to decide between
+    attaching lazy scales (kernel-fused, zero extra HBM) and eagerly
+    materializing the scaled block stack (the jnp tier, where the tile
+    reference has no fused variant and re-scaling per product inside a
+    ``fori_loop`` body would repeat the work every iteration).
+    """
+    return _tiled_backend() != "jnp"
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
@@ -220,9 +233,13 @@ def spmm_tiled(a: BlockSparseMatrix, b: jax.Array, *,
     bm, bk = a.tile_shape
     n_tr, n_tc = a.n_tiles
     backend = _tiled_backend()
-    _obs.kernel_dispatch("spmm_tiled", backend, transpose=transpose)
+    _obs.kernel_dispatch("spmm_tiled", backend, transpose=transpose,
+                         scaled=a.has_scales)
     out_rows = k if transpose else m
     if backend == "jnp":
+        # the tile reference has no fused-scale variant: fold pending
+        # scales into the payload stack once, outside any product loop
+        a = a.materialize_scales()
         bp = _pad_to(b.astype(jnp.float32), 0, bm if transpose else bk)
         out = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
                                  n_tr, n_tc, bp, transpose=transpose)
@@ -232,14 +249,17 @@ def spmm_tiled(a: BlockSparseMatrix, b: jax.Array, *,
                  1, bn)
     if transpose:
         out = spmm_t_pallas(a.block_rows, a.block_cols, a.t_order, a.blocks,
-                            bp, k_out=n_tc * bk, bn=bn, interpret=interp)
+                            bp, k_out=n_tc * bk, bn=bn, interpret=interp,
+                            row_scale=a.row_scale, col_scale=a.col_scale)
     else:
         out = spmm_pallas(a.block_rows, a.block_cols, a.blocks, bp,
-                          m_out=n_tr * bm, bn=bn, interpret=interp)
+                          m_out=n_tr * bm, bn=bn, interpret=interp,
+                          row_scale=a.row_scale, col_scale=a.col_scale)
     return out[:out_rows, : b.shape[1]]
 
 
-def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
+def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128,
+             with_gram: bool = False):
     """Fused normal-equations pass: ``A.T @ (A @ x)`` in one sweep.
 
     The subspace iteration's hot step (DESIGN.md §9): both products of
@@ -248,38 +268,69 @@ def spmm_ata(a: BlockSparseMatrix, x: jax.Array, *, bn: int = 128) -> jax.Array:
     round-tripping through HBM. Falls back to two ``spmm_tiled`` calls
     when the resident stripes would not fit the VMEM budget (or on the
     jnp tier, where the composition is already fused by XLA).
+
+    ``with_gram=True`` returns ``(z, gram)`` with ``gram = z.T @ z``
+    ``(q, q)`` — the fused subspace-iteration step: on the kernel path
+    the Gram comes off the still-VMEM-resident output stripe inside the
+    same launch (requires ``x`` to fit one ``bn`` column stripe), so the
+    CholeskyQR orthonormalization that follows never re-reads ``z`` from
+    HBM. Tiers without the fused kernel compute the same Gram outside.
     """
     m, k = a.shape
     bm, bk = a.tile_shape
     n_tr, n_tc = a.n_tiles
+    n = x.shape[1]
     backend = _tiled_backend()
+    # the fused in-kernel Gram covers exactly one output column stripe
+    gram_in_kernel = with_gram and n <= bn
     if backend == "jnp":
-        _obs.kernel_dispatch("spmm_ata", "jnp", fused=False)
+        _obs.kernel_dispatch("spmm_ata", "jnp", fused=False,
+                             scaled=a.has_scales, with_gram=with_gram)
+        am = a.materialize_scales()
         xp = _pad_to(x.astype(jnp.float32), 0, bk)
-        y = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
+        y = ref.spmm_block_ref(am.blocks, am.block_rows, am.block_cols,
                                n_tr, n_tc, xp)
-        out = ref.spmm_block_ref(a.blocks, a.block_rows, a.block_cols,
+        out = ref.spmm_block_ref(am.blocks, am.block_rows, am.block_cols,
                                  n_tr, n_tc, y, transpose=True)
-        return out[:k, : x.shape[1]]
-    # fused-kernel residency (Y stripe + output stripe) priced by the same
-    # estimator the A4 static audit uses — one budget, runtime and lint
-    stripes = vmem.ata_resident_bytes(n_tr, n_tc, bm, bk, bn)
+        out = out[:k, :n]
+        if with_gram:
+            return out, out.T @ out
+        return out
+    # fused-kernel residency (Y stripe + output stripe + scales + Gram)
+    # priced by the same estimator the A4 static audit uses — one budget,
+    # runtime and lint
+    stripes = vmem.ata_resident_bytes(n_tr, n_tc, bm, bk, bn,
+                                      with_gram=gram_in_kernel,
+                                      scaled=a.has_scales)
     budget = vmem.vmem_budget_bytes("tpu")
     if stripes > budget:
         _obs.kernel_dispatch("spmm_ata", backend, fused=False,
+                             scaled=a.has_scales, with_gram=with_gram,
                              vmem_bytes=stripes, vmem_budget=budget)
         _obs.get_registry().counter(
             "spmm_ata_vmem_fallback",
             help="fused A.T@(A@x) declined by the VMEM estimator").inc()
         y = spmm_tiled(a, x, bn=bn)
-        return spmm_tiled(a, y, transpose=True, bn=bn)
+        out = spmm_tiled(a, y, transpose=True, bn=bn)
+        if with_gram:
+            return out, out.T @ out
+        return out
     _obs.kernel_dispatch("spmm_ata", backend, fused=True,
+                         scaled=a.has_scales, with_gram=with_gram,
                          vmem_bytes=stripes, vmem_budget=budget)
     interp = backend == "interpret"
     xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bk), 1, bn)
-    out = spmm_ata_pallas(a.block_rows, a.block_cols, a.blocks, xp,
-                          m_pad=n_tr * bm, bn=bn, interpret=interp)
-    return out[:k, : x.shape[1]]
+    res = spmm_ata_pallas(a.block_rows, a.block_cols, a.blocks, xp,
+                          m_pad=n_tr * bm, bn=bn, interpret=interp,
+                          row_scale=a.row_scale, col_scale=a.col_scale,
+                          with_gram=gram_in_kernel)
+    if gram_in_kernel:
+        out, gram = res
+        return out[:k, :n], gram[:n, :n]
+    out = res[:k, :n]
+    if with_gram:
+        return out, out.T @ out
+    return out
 
 
 def bipartite_normalize(a: jax.Array, eps: float = 1e-8,

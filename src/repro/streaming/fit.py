@@ -66,6 +66,7 @@ import dataclasses
 import functools
 import logging
 import time
+from collections import OrderedDict
 from typing import Iterable, NamedTuple
 
 import jax
@@ -256,6 +257,12 @@ class StreamingCocluster:
         self.chunks = 0
         self._t0 = time.perf_counter()
         self._peak_chunk_bytes = 0
+        # (t, id(chunk)) -> (chunk ref, blocks, feats): recovery replays
+        # refold the same chunk objects the cursor window retained, so the
+        # densify/gather/permute prep of a refold is a pure repeat — serve
+        # it from this bounded identity-keyed cache instead. Session-local
+        # (never serialized): a restored fitter has no chunk objects.
+        self._prep_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
 
     # ------------------------------------------------------------------ setup
 
@@ -374,8 +381,27 @@ class StreamingCocluster:
         columns with an independent permutation (counter-derived from
         ``(seed, t, resample)``) — the streaming analogue of the batch
         ``T_p``: more independent atoms per row, stronger consensus.
+
+        Keyed by ``(t, chunk identity)`` in a small cache: a recovery
+        replay refolds the *same* chunk object at the same step index, so
+        its prep (densify/gather + permutation assembly) is served from
+        the first fold — bit-identical by construction (same objects,
+        same counter-derived permutations).
         """
         cfg = self.cfg
+        chunk_obj = chunk               # identity anchor (chunk is rebound)
+        ck = (t, id(chunk))
+        hit = self._prep_cache.get(ck)
+        if hit is not None and hit[0] is chunk:
+            obs.get_registry().counter(
+                "stream_chunk_prep",
+                help="streaming chunk prep cache events",
+            ).labels(event="hit").inc()
+            return hit[1], hit[2]
+        obs.get_registry().counter(
+            "stream_chunk_prep",
+            help="streaming chunk prep cache events",
+        ).labels(event="miss").inc()
         n = self._n_cols
         psi = n // cfg.col_blocks
         key_t = jax.random.fold_in(jax.random.key(cfg.seed), t)
@@ -406,7 +432,12 @@ class StreamingCocluster:
         r = sub.shape[0]
         blocks = jnp.transpose(
             sub.reshape(r, cfg.blocks_per_chunk, psi), (1, 0, 2))
-        return blocks, feats.astype(jnp.float32)
+        feats = feats.astype(jnp.float32)
+        self._prep_cache[ck] = (chunk_obj, blocks, feats)
+        # bound by the cursor's replay window: older steps can't refold
+        while len(self._prep_cache) > 4:
+            self._prep_cache.popitem(last=False)
+        return blocks, feats
 
     def partial_fit(self, chunk, *, replayed: bool = False
                     ) -> "StreamingCocluster":

@@ -1,0 +1,224 @@
+"""Device-resident conversion parity + pattern-cache semantics (DESIGN.md §9).
+
+Two contracts from the sparse-prep rework:
+
+* **Conversion parity** — the fast host plan/apply path and the jitted
+  device path (``block_sparse_pattern_device`` / ``_build_device``,
+  exercised off-TPU via ``REPRO_FORCE_INTERPRET``) must reproduce the
+  original union1d/lexsort conversion (``bcoo_to_block_sparse_host``,
+  kept as the oracle) **bit-exactly**, field for field — including the
+  seeded zero payloads for empty tile-rows/-cols that both product
+  orientations rely on.
+
+* **Cache semantics** — ``core.opcache.PatternCache`` may only ever
+  return (a) the identical cached operator on an identity hit, (b) a
+  values-refreshed operator sharing the cached plan arrays on a
+  same-pattern/new-data lookup, or (c) a fresh conversion. No reuse
+  across pattern, tile-config, or dtype changes; ``REPRO_TILED_CACHE=0``
+  degrades every lookup to an uncached conversion.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro.core import opcache
+from repro.core import sparse as core_sparse
+from repro.data import to_bcoo
+from repro.kernels import spmm as kspmm
+
+
+def _rand_sparse(rng, m, n, density):
+    return np.where(rng.random((m, n)) < density,
+                    rng.normal(size=(m, n)), 0.0).astype(np.float32)
+
+
+def _with_empty_bands(rng, m, n, density, bm, bk):
+    """Sparse matrix with a forced-empty tile-row and tile-col band."""
+    mat = _rand_sparse(rng, m, n, density)
+    if m > 2 * bm:
+        mat[bm:2 * bm, :] = 0.0
+    if n > 2 * bk:
+        mat[:, bk:2 * bk] = 0.0
+    return mat
+
+
+def _assert_same_operator(got, want):
+    """All four conversion fields bit-exact (values and pattern)."""
+    np.testing.assert_array_equal(np.asarray(got.blocks),
+                                  np.asarray(want.blocks))
+    np.testing.assert_array_equal(np.asarray(got.block_rows),
+                                  np.asarray(want.block_rows))
+    np.testing.assert_array_equal(np.asarray(got.block_cols),
+                                  np.asarray(want.block_cols))
+    np.testing.assert_array_equal(np.asarray(got.t_order),
+                                  np.asarray(want.t_order))
+
+
+class TestConversionParity:
+    @pytest.mark.parametrize("shape,tile", [((300, 240), 64),
+                                            ((256, 192), 128),
+                                            ((64, 64), 64)])
+    def test_host_fast_path_matches_oracle(self, shape, tile):
+        rng = np.random.default_rng(shape[0] + tile)
+        mat = _with_empty_bands(rng, *shape, 0.1, tile, tile)
+        a = to_bcoo(mat)
+        oracle = kspmm.bcoo_to_block_sparse_host(a, bm=tile, bk=tile)
+        got = kspmm.bcoo_to_block_sparse(a, bm=tile, bk=tile)
+        _assert_same_operator(got, oracle)
+
+    @pytest.mark.parametrize("shape,tile", [((300, 240), 64),
+                                            ((256, 192), 128),
+                                            ((64, 64), 64)])
+    def test_device_path_matches_oracle(self, shape, tile, monkeypatch):
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+        rng = np.random.default_rng(shape[0] * 2 + tile)
+        mat = _with_empty_bands(rng, *shape, 0.1, tile, tile)
+        a = to_bcoo(mat)
+        plan = kspmm.block_sparse_plan(a, bm=tile, bk=tile)
+        assert plan.on_device
+        got = kspmm.block_sparse_apply(plan, a.data)
+        _assert_same_operator(got, kspmm.bcoo_to_block_sparse_host(
+            a, bm=tile, bk=tile))
+
+    def test_device_and_host_plans_agree(self, monkeypatch):
+        """Same pattern fields and scatter semantics from both planners."""
+        rng = np.random.default_rng(7)
+        a = to_bcoo(_rand_sparse(rng, 200, 136, 0.08))
+        host = kspmm.block_sparse_plan(a, bm=64, bk=64)
+        assert not host.on_device
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+        dev = kspmm.block_sparse_plan(a, bm=64, bk=64)
+        assert dev.on_device
+        assert host.g == dev.g
+        np.testing.assert_array_equal(np.asarray(host.block_rows),
+                                      np.asarray(dev.block_rows))
+        np.testing.assert_array_equal(np.asarray(host.block_cols),
+                                      np.asarray(dev.block_cols))
+        np.testing.assert_array_equal(np.asarray(host.t_order),
+                                      np.asarray(dev.t_order))
+        np.testing.assert_array_equal(np.asarray(host.flat_idx),
+                                      np.asarray(dev.flat_idx))
+        _assert_same_operator(kspmm.block_sparse_apply(dev, a.data),
+                              kspmm.block_sparse_apply(host, a.data))
+
+    def test_single_nnz_matrix(self):
+        """Degenerate pattern: one nonzero, everything else seeded zeros."""
+        mat = np.zeros((96, 96), np.float32)
+        mat[70, 70] = 3.5
+        a = to_bcoo(mat)
+        got = kspmm.bcoo_to_block_sparse(a, bm=32, bk=32)
+        _assert_same_operator(got, kspmm.bcoo_to_block_sparse_host(
+            a, bm=32, bk=32))
+        # every tile-row and tile-col is represented despite one nnz
+        assert set(np.asarray(got.block_rows)) == {0, 1, 2}
+        assert set(np.asarray(got.block_cols)) == {0, 1, 2}
+
+    def test_values_refresh_equals_fresh_conversion(self):
+        rng = np.random.default_rng(11)
+        mat = _rand_sparse(rng, 150, 150, 0.1)
+        a = to_bcoo(mat)
+        plan = kspmm.block_sparse_plan(a, bm=64, bk=64)
+        b = jsparse.BCOO((a.data * 2.0, a.indices), shape=a.shape)
+        _assert_same_operator(kspmm.block_sparse_apply(plan, b.data),
+                              kspmm.bcoo_to_block_sparse(b, bm=64, bk=64))
+
+
+class TestPatternCache:
+    def _bcoo(self, seed=0, m=128, n=128, density=0.1):
+        rng = np.random.default_rng(seed)
+        return to_bcoo(_rand_sparse(rng, m, n, density))
+
+    def test_identity_hit_returns_same_object(self):
+        cache = opcache.PatternCache()
+        a = self._bcoo()
+        t1 = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        t2 = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        assert t2 is t1
+        assert (cache.hits, cache.misses, cache.refreshes) == (1, 1, 0)
+
+    def test_values_refresh_shares_plan_arrays(self):
+        cache = opcache.PatternCache()
+        a = self._bcoo(seed=1)
+        t1 = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        b = jsparse.BCOO((a.data * 2.0, a.indices), shape=a.shape)
+        t2 = core_sparse.to_tiled(b, bm=64, bk=64, cache=cache)
+        assert cache.refreshes == 1
+        # pattern arrays are the cached plan's, values are fresh
+        assert t2.block_rows is t1.block_rows
+        assert t2.t_order is t1.t_order
+        np.testing.assert_array_equal(np.asarray(t2.blocks),
+                                      2.0 * np.asarray(t1.blocks))
+        # refreshed entry now hits on identity
+        assert core_sparse.to_tiled(b, bm=64, bk=64, cache=cache) is t2
+
+    def test_pattern_change_misses(self):
+        cache = opcache.PatternCache()
+        core_sparse.to_tiled(self._bcoo(seed=2), bm=64, bk=64, cache=cache)
+        core_sparse.to_tiled(self._bcoo(seed=3), bm=64, bk=64, cache=cache)
+        assert cache.misses == 2 and cache.hits == 0 and cache.refreshes == 0
+
+    def test_tile_config_change_misses(self):
+        cache = opcache.PatternCache()
+        a = self._bcoo(seed=4)
+        core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        core_sparse.to_tiled(a, bm=128, bk=128, cache=cache)
+        assert cache.misses == 2 and len(cache) == 2
+
+    def test_dtype_change_misses(self):
+        cache = opcache.PatternCache()
+        a = self._bcoo(seed=5)
+        core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        b = jsparse.BCOO((a.data.astype(jnp.bfloat16), a.indices),
+                         shape=a.shape)
+        core_sparse.to_tiled(b, bm=64, bk=64, cache=cache)
+        assert cache.misses == 2 and cache.refreshes == 0
+
+    def test_lru_eviction_is_bounded(self):
+        cache = opcache.PatternCache(capacity=2)
+        for seed in range(4):
+            core_sparse.to_tiled(self._bcoo(seed=10 + seed),
+                                 bm=64, bk=64, cache=cache)
+        assert len(cache) == 2 and cache.misses == 4
+
+    def test_ell_and_tiled_do_not_collide(self):
+        a = self._bcoo(seed=6)
+        cache = opcache.PatternCache()
+        ell = core_sparse.to_ell(a, cache=cache)
+        tiled = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        assert cache.misses == 2 and len(cache) == 2
+        assert core_sparse.to_ell(a, cache=cache) is ell
+        assert core_sparse.to_tiled(a, bm=64, bk=64, cache=cache) is tiled
+
+    def test_ell_refresh_matches_fresh_conversion(self):
+        cache = opcache.PatternCache()
+        a = self._bcoo(seed=7)
+        core_sparse.to_ell(a, cache=cache)
+        b = jsparse.BCOO((a.data * 3.0, a.indices), shape=a.shape)
+        got = core_sparse.to_ell(b, cache=cache)
+        want = core_sparse.to_ell(b)
+        assert cache.refreshes == 1
+        np.testing.assert_array_equal(np.asarray(got.row_vals),
+                                      np.asarray(want.row_vals))
+        np.testing.assert_array_equal(np.asarray(got.col_vals),
+                                      np.asarray(want.col_vals))
+
+    def test_env_kill_switch_bypasses_storage(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TILED_CACHE", "0")
+        cache = opcache.PatternCache()
+        a = self._bcoo(seed=8)
+        t1 = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        t2 = core_sparse.to_tiled(a, bm=64, bk=64, cache=cache)
+        assert t2 is not t1 and len(cache) == 0
+        assert (cache.hits, cache.misses, cache.refreshes) == (0, 0, 0)
+        _assert_same_operator(t1, t2)
+
+    def test_prepare_operator_routes_through_default_cache(self):
+        a = self._bcoo(seed=9)
+        default = opcache.default_cache()
+        default.clear()
+        t1 = core_sparse.prepare_operator(a, "tiled")
+        t2 = core_sparse.prepare_operator(a, "tiled")
+        assert t2 is t1 and default.hits >= 1
+        default.clear()

@@ -136,3 +136,124 @@ class TestBlockSparseFormat:
             return kops.spmm_tiled(op, jnp.ones((80, 3), jnp.float32))
 
         assert shape_of(a).shape == (100, 3)
+
+
+def _scaled(a, seed=0):
+    """Attach positive row/col scale grids to a tiled operand."""
+    import repro.kernels.spmm as kspmm
+
+    rng = np.random.default_rng(seed)
+    n_tr, n_tc = a.n_tiles
+    bm, bk = a.tile_shape
+    rs = jnp.asarray(rng.uniform(0.5, 2.0, (n_tr, bm)).astype(np.float32))
+    cs = jnp.asarray(rng.uniform(0.5, 2.0, (n_tc, bk)).astype(np.float32))
+    return kspmm.BlockSparseMatrix(
+        blocks=a.blocks, block_rows=a.block_rows, block_cols=a.block_cols,
+        t_order=a.t_order, shape=a.shape, row_scale=rs, col_scale=cs)
+
+
+class TestScaleFusion:
+    """Lazy diagonal scaling (DESIGN.md §9): the scaled operator must be
+    bit-identical to eagerly materializing D_r^{1/2}-style scales into the
+    payloads — the in-VMEM multiply order is pinned to the materialized
+    order, so fusion can never move a label."""
+
+    @pytest.mark.parametrize("tile", [64, 128])
+    def test_forward_lazy_equals_materialized(self, tier, tile):
+        rng = np.random.default_rng(tile)
+        mat = _rand_sparse(rng, 300, 240, 0.1)
+        a = _scaled(kops.bcoo_to_block_sparse(to_bcoo(mat), bm=tile, bk=tile))
+        b = jnp.asarray(rng.normal(size=(240, 17)).astype(np.float32))
+        got = np.asarray(kops.spmm_tiled(a, b))
+        want = np.asarray(kops.spmm_tiled(a.materialize_scales(), b))
+        np.testing.assert_array_equal(got, want)
+
+    def test_transpose_lazy_equals_materialized(self, tier):
+        rng = np.random.default_rng(1)
+        mat = _rand_sparse(rng, 200, 260, 0.08)
+        a = _scaled(kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64))
+        c = jnp.asarray(rng.normal(size=(200, 9)).astype(np.float32))
+        got = np.asarray(kops.spmm_tiled(a, c, transpose=True))
+        want = np.asarray(kops.spmm_tiled(a.materialize_scales(), c,
+                                          transpose=True))
+        np.testing.assert_array_equal(got, want)
+
+    def test_ata_lazy_equals_materialized(self, tier):
+        rng = np.random.default_rng(2)
+        mat = _rand_sparse(rng, 256, 192, 0.1)
+        a = _scaled(kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64))
+        x = jnp.asarray(rng.normal(size=(192, 7)).astype(np.float32))
+        got = np.asarray(kops.spmm_ata(a, x))
+        want = np.asarray(kops.spmm_ata(a.materialize_scales(), x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_scaled_matches_dense_reference(self, tier):
+        """Against the dense scaled product, not just self-consistency."""
+        rng = np.random.default_rng(3)
+        mat = _rand_sparse(rng, 150, 140, 0.1)
+        a = _scaled(kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64))
+        rs = np.asarray(a.row_scale).reshape(-1)[:150]
+        cs = np.asarray(a.col_scale).reshape(-1)[:140]
+        b = rng.normal(size=(140, 11)).astype(np.float32)
+        want = (rs[:, None] * mat * cs[None, :]) @ b
+        got = np.asarray(kops.spmm_tiled(a, jnp.asarray(b)))
+        np.testing.assert_allclose(got, want, atol=2e-3)
+
+    def test_materialize_is_idempotent_and_drops_scales(self, tier):
+        rng = np.random.default_rng(4)
+        a = _scaled(kops.bcoo_to_block_sparse(
+            to_bcoo(_rand_sparse(rng, 128, 128, 0.1)), bm=64, bk=64))
+        assert a.has_scales
+        m1 = a.materialize_scales()
+        assert not m1.has_scales
+        np.testing.assert_array_equal(np.asarray(m1.materialize_scales().blocks),
+                                      np.asarray(m1.blocks))
+
+
+class TestFusedGram:
+    def test_gram_matches_outer_product(self, tier):
+        """with_gram=True returns (AᵀAX, (AᵀAX)ᵀ(AᵀAX)) for narrow X."""
+        rng = np.random.default_rng(5)
+        mat = _rand_sparse(rng, 256, 192, 0.1)
+        a = kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64)
+        x = jnp.asarray(rng.normal(size=(192, 8)).astype(np.float32))
+        z, gram = kops.spmm_ata(a, x, with_gram=True)
+        np.testing.assert_allclose(np.asarray(gram),
+                                   np.asarray(z).T @ np.asarray(z),
+                                   atol=5e-4, rtol=1e-5)
+
+    def test_gram_scaled_operand(self, tier):
+        rng = np.random.default_rng(6)
+        mat = _rand_sparse(rng, 200, 150, 0.1)
+        a = _scaled(kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64))
+        x = jnp.asarray(rng.normal(size=(150, 6)).astype(np.float32))
+        z, gram = kops.spmm_ata(a, x, with_gram=True)
+        zm, gram_m = kops.spmm_ata(a.materialize_scales(), x, with_gram=True)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(zm))
+        np.testing.assert_array_equal(np.asarray(gram), np.asarray(gram_m))
+
+    def test_gram_vmem_fallback(self, tier, monkeypatch):
+        monkeypatch.setattr(kops.vmem, "vmem_budget_bytes", lambda p="tpu": 1)
+        rng = np.random.default_rng(7)
+        mat = _rand_sparse(rng, 128, 128, 0.1)
+        a = kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64)
+        x = jnp.asarray(rng.normal(size=(128, 5)).astype(np.float32))
+        z, gram = kops.spmm_ata(a, x, with_gram=True)
+        np.testing.assert_allclose(np.asarray(gram),
+                                   np.asarray(z).T @ np.asarray(z),
+                                   atol=5e-4, rtol=1e-5)
+
+    def test_fused_cholesky_step_matches_manual(self, tier):
+        """One fused subspace-iteration step == orth(AᵀAX) done by hand."""
+        from repro.core import spectral
+
+        rng = np.random.default_rng(8)
+        mat = _rand_sparse(rng, 256, 192, 0.1)
+        a = kops.bcoo_to_block_sparse(to_bcoo(mat), bm=64, bk=64)
+        x = jnp.asarray(rng.normal(size=(192, 8)).astype(np.float32))
+        z, gram = kops.spmm_ata(a, x, with_gram=True)
+        got = np.asarray(spectral._orth_from_gram(z, gram))
+        want = np.asarray(spectral._cholesky_orth(z))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+        # orthonormal columns
+        np.testing.assert_allclose(got.T @ got, np.eye(8), atol=1e-4)
