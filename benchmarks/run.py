@@ -21,6 +21,9 @@ scrubbed on rewrite. Sections (described in benchmarks/README.md):
                 densify-then-run baseline (-> ``BENCH_sparse.json``)
   stream_*      out-of-core chunked-fit throughput + assignment QPS
                 (-> ``BENCH_stream.json``)
+  serve_load_*  assignment-service load tests: traffic mixes through the
+                admission queue + coalescer, swap-under-load
+                (-> ``BENCH_stream.json``)
 
 ``--list`` prints the available section names and exits.
 """
@@ -94,8 +97,8 @@ def _kernel_kmeans_fused(report):
         report(f"{name},{(time.perf_counter()-t0)/3*1e6:.0f},{backend}")
 
 
-SECTIONS = ("prob", "roofline", "kernel", "sparse", "stream", "table3",
-            "table2")
+SECTIONS = ("prob", "roofline", "kernel", "sparse", "stream", "serve",
+            "table3", "table2")
 
 
 def main(argv=None) -> None:
@@ -145,6 +148,9 @@ def main(argv=None) -> None:
     if "stream" in sections:
         from benchmarks import bench_stream
         bench_stream.run(report, quick=args.quick)
+    if "serve" in sections:
+        from benchmarks import bench_serve
+        bench_serve.run(report, quick=args.quick)
     if "table3" in sections:
         from benchmarks import bench_table3
         bench_table3.run(report, rcv1_scale=0.05 if args.quick else 0.2)
@@ -185,8 +191,12 @@ def main(argv=None) -> None:
                      own_prefixes=("sparse_",),
                      replace_prefixes=("sparse_",))
     if stream_rows:
+        # the serve-load family regenerates whole when its section ran:
+        # replace it so renamed/retired mixes cannot accrete
         _merge_write("BENCH_stream.json", stream_rows,
-                     own_prefixes=("stream_", "serve_"))
+                     own_prefixes=("stream_", "serve_"),
+                     replace_prefixes=(("serve_load_",)
+                                       if "serve" in sections else ()))
     if roofline_rows:
         _merge_write("BENCH_roofline.json", roofline_rows,
                      own_prefixes=("roofline_",),

@@ -151,6 +151,19 @@ def _step_dir(ckpt_dir: str, step: int) -> str:
 
 
 def available_steps(ckpt_dir: str) -> list[int]:
+    """Committed step numbers under ``ckpt_dir``, each listed exactly once.
+
+    Mid-overwrite both ``step_X`` and ``step_X.old`` can exist (the
+    crash window between ``save``'s two renames) — both stems map to the
+    same step, so candidates are deduped *by step number*, never listed
+    twice. The sentinel check consults both the canonical directory and
+    its ``.old`` displacement regardless of which name ``listdir``
+    returned: a concurrent overwrite can rename ``step_X`` to
+    ``step_X.old`` between the listing and the check, and a listing that
+    only re-checked the snapshotted name would transiently report a
+    committed step as missing (the hot-swap path lists while a
+    background save commits).
+    """
     if not os.path.isdir(ckpt_dir):
         return []
     steps = set()
@@ -160,7 +173,9 @@ def available_steps(ckpt_dir: str) -> list[int]:
         stem = name[:-len(".old")] if name.endswith(".old") else name
         if not (stem.startswith("step_") and stem[len("step_"):].isdigit()):
             continue
-        if os.path.exists(os.path.join(ckpt_dir, name, _SENTINEL)):
+        final = os.path.join(ckpt_dir, stem)
+        if (os.path.exists(os.path.join(final, _SENTINEL))
+                or os.path.exists(os.path.join(final + ".old", _SENTINEL))):
             steps.add(int(stem[len("step_"):]))
     return sorted(steps)
 

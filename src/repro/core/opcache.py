@@ -28,12 +28,23 @@ Counters (``repro.obs``): ``tiled_conv_cache{event=hit|miss|refresh}``.
 Disable with ``REPRO_TILED_CACHE=0`` (every lookup degrades to a miss
 that bypasses storage — conversion semantics are identical either way,
 which is also the tested invariant).
+
+Thread safety: the serving path scores requests on worker threads while
+a background fit/swap converts operators through the same process-wide
+:func:`default_cache`. All mutable state (LRU order, entry table, the
+fingerprint memo) is guarded by one re-entrant lock, metric-creation
+style (cf. ``obs/metrics.py``): lookups/installs hold it, the conversion
+work itself (``plan_fn``/``apply_fn``, the expensive part) runs outside
+it, so two threads may both convert on a cold miss — last-install-wins,
+which is correct because conversion is deterministic in ``(pattern,
+values, config)``.
 """
 
 from __future__ import annotations
 
 import hashlib
 import os
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, NamedTuple
 
@@ -71,6 +82,11 @@ class PatternCache:
         # id: without it a collected array's id could be reused by a new
         # array and serve a stale digest.
         self._fp_memo: dict[int, tuple[Any, bytes]] = {}
+        # One lock over entries + memo: concurrent serving threads and a
+        # background fit interleave convert()/clear() freely. RLock so a
+        # plan_fn that re-enters the cache (nested prepare) cannot
+        # deadlock. Conversion work runs outside the lock.
+        self._lock = threading.RLock()
         self._counter = counter
         self.hits = 0
         self.misses = 0
@@ -83,15 +99,19 @@ class PatternCache:
         ).labels(event=event).inc()
 
     def _fingerprint(self, indices) -> bytes:
-        memo = self._fp_memo.get(id(indices))
-        if memo is not None and memo[0] is indices:
-            return memo[1]
+        with self._lock:
+            memo = self._fp_memo.get(id(indices))
+            if memo is not None and memo[0] is indices:
+                return memo[1]
+        # hash outside the lock (milliseconds at bench nnz); a racing
+        # thread hashing the same indices lands on the same digest
         digest = hashlib.blake2b(
             np.ascontiguousarray(np.asarray(indices)).tobytes(),
             digest_size=16).digest()
-        if len(self._fp_memo) >= 4 * max(self.capacity, 1):
-            self._fp_memo.clear()
-        self._fp_memo[id(indices)] = (indices, digest)
+        with self._lock:
+            if len(self._fp_memo) >= 4 * max(self.capacity, 1):
+                self._fp_memo.clear()
+            self._fp_memo[id(indices)] = (indices, digest)
         return digest
 
     def convert(self, a, config: tuple, plan_fn: Callable[[Any], Any],
@@ -110,41 +130,60 @@ class PatternCache:
             return op
         key = (self._fingerprint(a.indices), tuple(a.shape), *config,
                np.dtype(a.data.dtype).str)
-        entry = self._entries.get(key)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                if entry.data_obj is a.data:
+                    self.hits += 1
+                    hit_op = entry.operator
+                    entry = None          # resolved: zero-work hit
+                else:
+                    hit_op = None         # resolved: values refresh
+            else:
+                hit_op = None             # resolved: full miss
+        if hit_op is not None:
+            self._count("hit")
+            return hit_op
         if entry is not None:
-            self._entries.move_to_end(key)
-            if entry.data_obj is a.data:
-                self.hits += 1
-                self._count("hit")
-                return entry.operator
-            # same pattern, new values: one scatter through the old plan
+            # same pattern, new values: one scatter through the old plan.
+            # Runs outside the lock — a concurrent refresh of the same
+            # key does the same deterministic work; last install wins.
             op = apply_fn(entry.plan, a.data)
-            self._entries[key] = _Entry(entry.plan, op, a.data)
-            self.refreshes += 1
+            with self._lock:
+                self._entries[key] = _Entry(entry.plan, op, a.data)
+                self._entries.move_to_end(key)
+                self.refreshes += 1
             self._count("refresh")
             return op
         plan, op = plan_fn(a)
-        self._entries[key] = _Entry(plan, op, a.data)
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-        self.misses += 1
+        with self._lock:
+            self._entries[key] = _Entry(plan, op, a.data)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+            self.misses += 1
         self._count("miss")
         return op
 
     def clear(self) -> None:
-        self._entries.clear()
-        self._fp_memo.clear()
+        with self._lock:
+            self._entries.clear()
+            self._fp_memo.clear()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
 
 _DEFAULT: PatternCache | None = None
+_DEFAULT_LOCK = threading.Lock()
 
 
 def default_cache() -> PatternCache:
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = PatternCache()
+        with _DEFAULT_LOCK:
+            if _DEFAULT is None:
+                _DEFAULT = PatternCache()
     return _DEFAULT

@@ -29,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 __all__ = ["MeshAxes", "pad_vocab", "param_specs", "param_shardings",
-           "batch_specs", "cache_specs", "path_name", "stream_state_specs"]
+           "batch_specs", "cache_specs", "path_name", "stream_state_specs",
+           "serve_model_specs", "serve_model_shardings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +202,38 @@ def stream_state_specs(tree, mesh: Mesh, axis: str = "data"):
         return P(*dims)
 
     return jax.tree.map(one, tree)
+
+
+def serve_model_specs(model, mesh: Mesh, axis: str = "data"):
+    """PartitionSpecs for a ``CoclusterModel``'s serving tables.
+
+    Policy for the assignment service (DESIGN.md §15): the per-cluster
+    signature tables (``row_sigs``/``col_sigs``, ``(K, q)``) and the
+    vote tables (``(M, K)``/``(N, K)``) shard their *leading* dimension
+    over ``axis`` when divisible — the cosine scoring contraction is
+    over ``q``, so a cluster-sharded table scores a slice of clusters
+    per device and GSPMD lowers the argmax/top-k to a cross-device
+    reduce. Everything 1-D (anchor index vectors, centering means,
+    labels) replicates: the scorer gathers anchor coordinates on every
+    device. Leaves whose leading dim does not divide the mesh relax to
+    replication, never fail to lower (same contract as ``param_specs``).
+    """
+    size = mesh.shape[axis]
+
+    def one(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) >= 2 and shape[0] % size == 0 and shape[0] >= size:
+            return P(axis, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, model)
+
+
+def serve_model_shardings(model, mesh: Mesh, axis: str = "data"):
+    """``NamedSharding`` pytree for :func:`serve_model_specs`."""
+    specs = serve_model_specs(model, mesh, axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def batch_specs(cfg: ArchConfig, mesh: Mesh, ax: MeshAxes = MeshAxes(),

@@ -6,8 +6,14 @@ system:
     model.py    CoclusterModel artifact + checkpoint round-trip
     fit.py      out-of-core fit over row chunks (dense or BCOO)
     assign.py   online out-of-sample assignment (Pallas-backed scoring)
+    registry.py named, versioned model store (config hash + fingerprint
+                + metrics per version; DESIGN.md §15)
+    serve.py    sharded multi-replica assignment service: admission
+                queue, fixed-shape batch coalescing, load shedding, hot
+                model swap (DESIGN.md §15)
 
-``launch/serve_lamc.py`` is the batched request-loop driver on top.
+``launch/serve_lamc.py`` is the thin driver on top;
+``benchmarks/bench_serve.py`` is the load-test harness.
 """
 
 from .assign import (
@@ -38,6 +44,20 @@ from .model import (
     model_memberships,
     save_model,
 )
+from .registry import (
+    ModelRegistry,
+    RegistryEntry,
+    config_hash,
+    model_fingerprint,
+)
+from .serve import (
+    REJECT_REASONS,
+    AssignService,
+    ServeConfig,
+    ServeResult,
+    Ticket,
+    validate_request,
+)
 
 __all__ = [
     "CoclusterModel", "ModelLoadError", "MODEL_KIND",
@@ -47,4 +67,7 @@ __all__ = [
     "FIT_STATE_KIND", "save_fit_state", "load_fit_state",
     "AssignResult", "TopKAssignResult", "assign_rows", "assign_cols",
     "assign_rows_topk", "assign_cols_topk",
+    "ModelRegistry", "RegistryEntry", "config_hash", "model_fingerprint",
+    "AssignService", "ServeConfig", "ServeResult", "Ticket",
+    "validate_request", "REJECT_REASONS",
 ]

@@ -49,6 +49,14 @@ class TopKAssignResult(NamedTuple):
 
 
 def _assign(feats: jax.Array, mean: jax.Array, sigs: jax.Array) -> AssignResult:
+    if feats.shape[0] == 0:
+        # The service's batch coalescer can legitimately flush an empty
+        # batch; the scoring kernel's tile slicing cannot take B=0 (its
+        # fixed point tile is wider than the operand), so short-circuit
+        # to an empty result of the kernel's exact dtypes. Shapes are
+        # static, so this branch resolves at trace time under jit.
+        return AssignResult(jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), jnp.float32))
     f = feats.astype(jnp.float32) - mean[None, :]
     labels, score = _kops.cosine_assign(f, sigs)
     return AssignResult(labels, score)
@@ -56,6 +64,16 @@ def _assign(feats: jax.Array, mean: jax.Array, sigs: jax.Array) -> AssignResult:
 
 def _assign_topk(feats: jax.Array, mean: jax.Array, sigs: jax.Array,
                  k: int) -> TopKAssignResult:
+    if feats.shape[0] == 0:
+        # same zero-row guard as ``_assign`` (see there); k is validated
+        # against the signature count by the kernel wrapper on the
+        # non-empty path, so mirror the check before returning
+        if not 1 <= k <= sigs.shape[0]:
+            raise ValueError(
+                f"top-k width must be in [1, {sigs.shape[0]}] (the "
+                f"signature count), got k={k}")
+        return TopKAssignResult(jnp.zeros((0, k), jnp.int32),
+                                jnp.zeros((0, k), jnp.float32))
     f = feats.astype(jnp.float32) - mean[None, :]
     labels, scores = _kops.cosine_topk(f, sigs, k)
     return TopKAssignResult(labels, scores)

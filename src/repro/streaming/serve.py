@@ -1,0 +1,499 @@
+"""Sharded, multi-replica assignment service with hot model swap.
+
+The production serving layer over ``streaming.assign`` (DESIGN.md §15):
+callers :meth:`AssignService.submit` variable-size request batches and
+get back a :class:`Ticket`; worker replicas coalesce admitted requests
+into **fixed-shape** jit batches (zero-padded to ``ServeConfig.batch``
+rows, so every (axis, k) pair compiles exactly once per model version),
+score them against the current :class:`_Engine`, and fulfil the tickets
+with host numpy results stamped with the model version that served them.
+
+Admission is load-shedding, not blocking: a request is rejected *at
+submit* — with a machine-readable reason code counted per-reason in
+``repro.obs`` (``serve_svc_rejected{reason=...}``) — when it is
+malformed (rank/width/dtype/non-finite), larger than one jit batch
+(``oversize``), the queue's bounded row budget is exhausted
+(``queue_full``), or the service is closed (``shutdown``). An admitted
+request is never dropped: workers drain the queue on close, and a swap
+never touches in-flight work.
+
+Hot swap protocol: a new model (fitted or loaded in the background —
+see :meth:`swap_async` and :class:`streaming.registry.ModelRegistry`) is
+wrapped in a fresh engine, its scorers are **pre-warmed** for every
+(axis, k) shape the old engine had compiled, and only then is the
+engine reference swapped — one atomic assignment. Workers read the
+reference once per batch, so every batch (and therefore every response)
+is attributable to exactly one version; there is no torn state to read
+because an engine is immutable after construction.
+
+Sharding: with more than one device visible, the per-cluster signature
+and vote tables are placed via ``runtime.shardings.serve_model_specs``
+(cluster-sharded scoring; anchors/means replicate) — the single-device
+path is the same code with replicated specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from repro import obs as _obs
+from repro.runtime import shardings as _shardings
+
+from .assign import assign_cols, assign_cols_topk, assign_rows, assign_rows_topk
+from .model import CoclusterModel
+
+__all__ = ["AssignService", "ServeConfig", "ServeResult", "Ticket",
+           "validate_request", "REJECT_REASONS"]
+
+#: admission reject reason codes (the ``reason`` label of
+#: ``serve_svc_rejected``); ``internal_error`` is the post-admission
+#: failure path (a batch that raised inside the scorer).
+REJECT_REASONS = ("bad_rank", "bad_width", "bad_dtype", "non_finite",
+                  "bad_k", "oversize", "queue_full", "shutdown",
+                  "internal_error")
+
+
+def validate_request(x, dim: int) -> tuple[str, str] | None:
+    """``(reason_code, detail)`` for one request batch, or None if servable.
+
+    Checks are host-side and cheap relative to the assign kernel: rank
+    and width (a wrong-width batch would be a jit shape error five
+    frames deep), non-float payloads, and non-finite values (NaN/Inf
+    scores would win/lose every argmax and silently poison the labels).
+    Zero-row batches are *valid* — the coalescer's flush can produce
+    them and ``assign_rows``/``assign_cols`` return empty results.
+    """
+    shape = tuple(np.shape(x))
+    if len(shape) != 2:
+        return ("bad_rank",
+                f"expected (batch, {dim}), got shape {shape}")
+    if shape[1] != dim:
+        return ("bad_width",
+                f"model expects {dim} features, request has {shape[1]} "
+                f"(shape {shape})")
+    arr = np.asarray(x)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return ("bad_dtype", f"expected float features, got {arr.dtype}")
+    if not np.isfinite(arr).all():
+        bad = int(np.size(arr) - np.isfinite(arr).sum())
+        return ("non_finite", f"{bad} NaN/Inf values in the batch")
+    return None
+
+
+class ServeResult(NamedTuple):
+    """Terminal state of one submitted request."""
+
+    ok: bool
+    labels: np.ndarray | None     # (r,) int32 for k=1, (r, k) for k>1
+    scores: np.ndarray | None     # same leading shape, f32
+    version: str | None           # model version that served it (ok only)
+    reason: str | None = None     # reject code (one of REJECT_REASONS)
+    detail: str | None = None     # human-readable reject detail
+
+
+class Ticket:
+    """Completion handle for one submitted request (thread-safe)."""
+
+    __slots__ = ("_event", "_result")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result: ServeResult | None = None
+
+    def _fulfill(self, result: ServeResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> ServeResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request not served within {timeout}s (queue backlog or "
+                "service stopped?)")
+        assert self._result is not None
+        return self._result
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service knobs (all static for the life of the service)."""
+
+    batch: int = 64               # fixed jit batch rows; also max request size
+    replicas: int = 1             # scoring worker threads
+    max_queue_rows: int = 4096    # admission budget; beyond it -> queue_full
+    poll_timeout_s: float = 0.05  # worker wake-up cadence while idle
+    shard: bool = True            # device-shard tables when >1 device
+    mesh_axis: str = "data"
+
+
+class _Request(NamedTuple):
+    seq: int
+    x: np.ndarray                 # (r, dim) float32, host
+    rows: int
+    ticket: Ticket
+    t_submit: float
+
+
+class _Engine:
+    """One immutable model version + its per-(axis, k) jitted scorers.
+
+    Engines are constructed, warmed, and then only *read* — the swap
+    protocol relies on that: a worker that grabbed an engine reference
+    can keep scoring against it while the service reference already
+    points at a successor. Scorer creation is get-or-create under a
+    lock (jit tracing may be triggered from any worker thread).
+    """
+
+    def __init__(self, model: CoclusterModel, version: str, *,
+                 shard: bool = True, mesh_axis: str = "data"):
+        self.version = version
+        self.mesh = None
+        devices = jax.devices()
+        if shard and len(devices) > 1:
+            self.mesh = jax.sharding.Mesh(
+                np.asarray(devices), (mesh_axis,))
+            placed = jax.device_put(
+                model, _shardings.serve_model_shardings(
+                    model, self.mesh, mesh_axis))
+            self.model = placed
+        else:
+            self.model = model
+        self._scorers: dict[tuple[str, int], Callable] = {}
+        self._lock = threading.Lock()
+
+    def dim(self, axis: str) -> int:
+        return self.model.n_cols if axis == "rows" else self.model.n_rows
+
+    def n_clusters(self, axis: str) -> int:
+        return (self.model.n_row_clusters if axis == "rows"
+                else self.model.n_col_clusters)
+
+    def scorer(self, axis: str, k: int) -> Callable:
+        key = (axis, k)
+        with self._lock:
+            fn = self._scorers.get(key)
+            if fn is not None:
+                return fn
+            model = self.model
+            if k == 1:
+                base = assign_rows if axis == "rows" else assign_cols
+                fn = jax.jit(lambda x: base(model, x))
+            else:
+                base = (assign_rows_topk if axis == "rows"
+                        else assign_cols_topk)
+                fn = jax.jit(lambda x: base(model, x, k=k))
+            self._scorers[key] = fn
+            return fn
+
+    def warm(self, axis: str, k: int, batch: int) -> None:
+        """Compile + execute the (axis, k) scorer at the service's fixed
+        batch shape — the pre-warm step of the swap protocol."""
+        x = np.zeros((batch, self.dim(axis)), np.float32)
+        jax.block_until_ready(self.scorer(axis, k)(x))
+
+    def warmed_keys(self) -> tuple[tuple[str, int], ...]:
+        with self._lock:
+            return tuple(self._scorers)
+
+
+class AssignService:
+    """Multi-replica assignment service over one live ``CoclusterModel``.
+
+    ``submit`` is the only request door; ``swap``/``swap_async`` replace
+    the model without dropping anything; ``close`` drains and stops.
+    Usable as a context manager. All results are host numpy.
+    """
+
+    def __init__(self, model: CoclusterModel, *, version: str = "v1",
+                 config: ServeConfig = ServeConfig(),
+                 metrics: _obs.Registry | None = None,
+                 warm: bool = True):
+        self.config = config
+        if config.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {config.batch}")
+        if config.replicas < 1:
+            raise ValueError(
+                f"replicas must be >= 1, got {config.replicas}")
+        self._metrics = metrics if metrics is not None else _obs.get_registry()
+        self._rejected = self._metrics.counter(
+            "serve_svc_rejected", help="rejected requests, by reason")
+        self._submitted = self._metrics.counter(
+            "serve_svc_submitted", help="requests admitted to the queue")
+        self._rows_served = self._metrics.counter(
+            "serve_svc_rows", help="rows scored and returned")
+        self._batches = self._metrics.counter(
+            "serve_svc_batches", help="jit batches dispatched")
+        self._swaps = self._metrics.counter(
+            "serve_svc_swaps", help="hot model swaps")
+        self._queue_gauge = self._metrics.gauge(
+            "serve_svc_queue_rows", help="rows waiting for a worker")
+        self._batch_lat = self._metrics.histogram(
+            "serve_svc_batch_latency_us", help="score+fulfill per batch, µs")
+        self._req_lat = self._metrics.histogram(
+            "serve_svc_request_latency_us", help="submit->fulfill, µs")
+        self._batch_fill = self._metrics.histogram(
+            "serve_svc_batch_fill_pct", buckets=tuple(range(5, 101, 5)),
+            help="per-batch fill: coalesced rows / batch capacity, %")
+
+        self._engine = _Engine(model, version, shard=config.shard,
+                               mesh_axis=config.mesh_axis)
+        if warm:
+            self._engine.warm("rows", 1, config.batch)
+
+        self._cond = threading.Condition()
+        self._queues: dict[tuple[str, int], deque[_Request]] = {}
+        self._queued_rows = 0
+        self._seq = 0
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker_loop, daemon=True,
+                             name=f"assign-serve-{i}")
+            for i in range(config.replicas)]
+        for w in self._workers:
+            w.start()
+
+    # -- admission -------------------------------------------------------
+    def _reject(self, code: str, detail: str) -> Ticket:
+        self._rejected.labels(reason=code).inc()
+        _obs.event("serve_reject", reason=code, detail=detail)
+        t = Ticket()
+        t._fulfill(ServeResult(ok=False, labels=None, scores=None,
+                               version=None, reason=code, detail=detail))
+        return t
+
+    def submit(self, x, axis: str = "rows", k: int = 1) -> Ticket:
+        """Admit one request batch; never blocks on the queue.
+
+        ``x``: ``(r, dim)`` float array (``r <= config.batch``); ``axis``
+        picks row- vs column-cluster assignment; ``k`` the top-k width
+        (``k=1`` returns flat ``(r,)`` labels/scores like
+        ``assign_rows``). Returns a :class:`Ticket` — already fulfilled
+        with a reject reason when admission fails.
+        """
+        if axis not in ("rows", "cols"):
+            raise ValueError(f"axis must be 'rows' or 'cols', got {axis!r}")
+        engine = self._engine
+        if self._closed:
+            return self._reject("shutdown", "service is closed")
+        bad = validate_request(x, engine.dim(axis))
+        if bad is not None:
+            return self._reject(*bad)
+        if not 1 <= k <= engine.n_clusters(axis):
+            return self._reject(
+                "bad_k", f"k must be in [1, {engine.n_clusters(axis)}] for "
+                         f"axis={axis!r}, got {k}")
+        arr = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
+        rows = arr.shape[0]
+        if rows > self.config.batch:
+            return self._reject(
+                "oversize", f"request has {rows} rows; one jit batch holds "
+                            f"{self.config.batch} — split the request")
+        if rows == 0:
+            # legitimately empty (a coalescer flush upstream): complete
+            # immediately with empty arrays of the served shapes
+            shape = (0,) if k == 1 else (0, k)
+            t = Ticket()
+            self._submitted.inc()
+            t._fulfill(ServeResult(
+                ok=True, labels=np.zeros(shape, np.int32),
+                scores=np.zeros(shape, np.float32), version=engine.version))
+            return t
+        ticket = Ticket()
+        with self._cond:
+            if self._closed:
+                return self._reject("shutdown", "service is closed")
+            if self._queued_rows + rows > self.config.max_queue_rows:
+                return self._reject(
+                    "queue_full",
+                    f"{self._queued_rows} rows queued of "
+                    f"{self.config.max_queue_rows} budget; shedding load")
+            self._seq += 1
+            req = _Request(self._seq, arr, rows, ticket, time.perf_counter())
+            self._queues.setdefault((axis, k), deque()).append(req)
+            self._queued_rows += rows
+            self._queue_gauge.set(float(self._queued_rows))
+            self._submitted.inc()
+            self._cond.notify()
+        return ticket
+
+    # -- scoring workers -------------------------------------------------
+    def _take_batch(self) -> tuple[tuple[str, int], list[_Request]] | None:
+        """Pop a coalesced batch for the (axis, k) with the oldest head
+        request. Caller holds ``self._cond``."""
+        best_key, best_seq = None, None
+        for key, q in self._queues.items():
+            if q and (best_seq is None or q[0].seq < best_seq):
+                best_key, best_seq = key, q[0].seq
+        if best_key is None:
+            return None
+        q = self._queues[best_key]
+        out: list[_Request] = []
+        rows = 0
+        while q and rows + q[0].rows <= self.config.batch:
+            r = q.popleft()
+            out.append(r)
+            rows += r.rows
+        self._queued_rows -= rows
+        self._queue_gauge.set(float(self._queued_rows))
+        return best_key, out
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed and not any(self._queues.values()):
+                    self._cond.wait(self.config.poll_timeout_s)
+                taken = self._take_batch()
+                if taken is None:
+                    if self._closed:
+                        return
+                    continue
+            self._score_batch(*taken)
+
+    def _score_batch(self, key: tuple[str, int], reqs: list[_Request]) -> None:
+        axis, k = key
+        # one reference read: the whole batch — and every response in it
+        # — is served by exactly this engine/version
+        engine = self._engine
+        rows = sum(r.rows for r in reqs)
+        t0 = time.perf_counter()
+        try:
+            # the fill is inside the guard: a swap to a model with a
+            # different feature width turns queued old-width requests
+            # into per-request internal_error rejects, never a dead
+            # worker thread
+            xb = np.zeros((self.config.batch, engine.dim(axis)), np.float32)
+            off = 0
+            for r in reqs:
+                xb[off:off + r.rows] = r.x
+                off += r.rows
+            out = jax.block_until_ready(engine.scorer(axis, k)(xb))
+        except Exception as e:  # noqa: BLE001 — a worker must survive any batch
+            detail = f"scorer failed for axis={axis} k={k}: {e!r}"
+            for r in reqs:
+                self._rejected.labels(reason="internal_error").inc()
+                r.ticket._fulfill(ServeResult(
+                    ok=False, labels=None, scores=None, version=None,
+                    reason="internal_error", detail=detail))
+            return
+        dt_us = (time.perf_counter() - t0) * 1e6
+        labels = np.asarray(out[0])
+        scores = np.asarray(out[1])
+        now = time.perf_counter()
+        off = 0
+        for r in reqs:
+            sl = slice(off, off + r.rows)
+            r.ticket._fulfill(ServeResult(
+                ok=True, labels=labels[sl].copy(), scores=scores[sl].copy(),
+                version=engine.version))
+            self._req_lat.observe((now - r.t_submit) * 1e6)
+            off += r.rows
+        self._batches.inc()
+        self._rows_served.inc(rows)
+        self._batch_lat.observe(dt_us)
+        self._batch_fill.observe(100.0 * rows / self.config.batch)
+
+    # -- swap protocol ---------------------------------------------------
+    @property
+    def version(self) -> str:
+        return self._engine.version
+
+    @property
+    def model(self) -> CoclusterModel:
+        return self._engine.model
+
+    def swap(self, model: CoclusterModel, version: str) -> str:
+        """Warm-swap to ``model`` without dropping in-flight requests.
+
+        Builds the successor engine, pre-compiles every (axis, k) scorer
+        the current engine has warmed — at the service's fixed batch
+        shape, so the first post-swap batch pays zero trace time — then
+        publishes it with one atomic reference assignment. Returns the
+        displaced version id.
+        """
+        old = self._engine
+        new = _Engine(model, version, shard=self.config.shard,
+                      mesh_axis=self.config.mesh_axis)
+        warmed = old.warmed_keys() or (("rows", 1),)
+        for axis, k in warmed:
+            if k <= new.n_clusters(axis):
+                new.warm(axis, k, self.config.batch)
+        self._engine = new
+        self._swaps.inc()
+        _obs.event("serve_swap", old=old.version, new=version)
+        return old.version
+
+    def swap_async(self, loader: Callable[[], CoclusterModel],
+                   version: str) -> Ticket:
+        """Fit/load a successor in the background, then warm-swap to it.
+
+        ``loader`` runs on a daemon thread (a registry ``load``, a
+        streaming ``fit``, ...); traffic keeps flowing on the current
+        engine the whole time. The returned :class:`Ticket` resolves
+        with ``version`` (ok) once the swap is published, or with
+        ``reason='internal_error'`` if the loader raised.
+        """
+        ticket = Ticket()
+
+        def _run():
+            try:
+                model = loader()
+                old = self.swap(model, version)
+                ticket._fulfill(ServeResult(
+                    ok=True, labels=None, scores=None, version=version,
+                    detail=f"swapped from {old}"))
+            except Exception as e:  # noqa: BLE001 — surface via the ticket
+                ticket._fulfill(ServeResult(
+                    ok=False, labels=None, scores=None, version=None,
+                    reason="internal_error", detail=repr(e)))
+
+        threading.Thread(target=_run, daemon=True,
+                         name=f"assign-swap-{version}").start()
+        return ticket
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Stop admitting, drain the queue, join the workers.
+
+        Every request admitted before ``close`` is still served (the
+        zero-drop guarantee); submissions after it reject with
+        ``shutdown``.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        for w in self._workers:
+            w.join(timeout)
+
+    def __enter__(self) -> "AssignService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        """Point-in-time snapshot of this service's metric values."""
+        return {
+            "version": self.version,
+            "queued_rows": self._queued_rows,
+            "submitted": self._submitted.value,
+            "rows_served": self._rows_served.value,
+            "batches": self._batches.value,
+            "swaps": self._swaps.value,
+            "rejected": {key: c.value
+                         for key, c in self._rejected._series.items()},
+            "p50_request_us": self._req_lat.percentile(50),
+            "p99_request_us": self._req_lat.percentile(99),
+            "mean_batch_fill_pct": (self._batch_fill.sum
+                                    / max(self._batch_fill.count, 1)),
+        }

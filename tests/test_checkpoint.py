@@ -127,6 +127,42 @@ class TestOverwrite:
         back, _ = ckpt.restore(d, 3, tree)
         np.testing.assert_allclose(np.asarray(back.votes), 0.5)
 
+    def test_available_steps_dedupes_final_plus_old(self, tmp_path):
+        # crash window where BOTH step_X and step_X.old exist (old dir
+        # displaced, new dir already renamed in, cleanup not yet run):
+        # the step must be listed exactly once, not per-directory
+        import shutil
+
+        d = str(tmp_path)
+        ckpt.save(d, 3, _model_tree())
+        shutil.copytree(tmp_path / "step_00000003",
+                        tmp_path / "step_00000003.old")
+        assert ckpt.available_steps(d) == [3]
+
+    def test_available_steps_survives_listing_race(self, tmp_path,
+                                                   monkeypatch):
+        # the hot-swap path lists while a background save overwrites: the
+        # listdir snapshot returns the canonical name, then the saver
+        # renames step_X -> step_X.old before the sentinel check runs. A
+        # listing that only re-checked the snapshotted name would report
+        # a committed step as transiently missing.
+        import os as _os
+
+        d = str(tmp_path)
+        ckpt.save(d, 3, _model_tree())
+        real_listdir = _os.listdir
+
+        def raced_listdir(path):
+            names = real_listdir(path)
+            if _os.path.abspath(path) == _os.path.abspath(d):
+                # simulate the rename landing right after the snapshot
+                _os.rename(_os.path.join(d, "step_00000003"),
+                           _os.path.join(d, "step_00000003.old"))
+            return names
+
+        monkeypatch.setattr(_os, "listdir", raced_listdir)
+        assert ckpt.available_steps(d) == [3]
+
     def test_save_over_displaced_copy_cleans_it_up(self, tmp_path):
         d = str(tmp_path)
         ckpt.save(d, 3, _model_tree())

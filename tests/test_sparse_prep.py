@@ -153,6 +153,49 @@ class TestPatternCache:
         # refreshed entry now hits on identity
         assert core_sparse.to_tiled(b, bm=64, bk=64, cache=cache) is t2
 
+    def test_concurrent_convert_is_safe(self):
+        # two threads hammer one cache with an interleaved mix of hits,
+        # refreshes, and capacity-evicting misses. Unsynchronized, the
+        # OrderedDict mutates under iteration / loses LRU moves; the
+        # locked cache must never raise, never return a wrong operator,
+        # and never grow past capacity.
+        import threading
+
+        cache = opcache.PatternCache(capacity=4)
+        mats = [self._bcoo(seed=s, m=64, n=64) for s in range(8)]
+        oracle = [core_sparse.to_tiled(a, bm=32, bk=32) for a in mats]
+        errors: list = []
+
+        def hammer(offset: int) -> None:
+            try:
+                for i in range(200):
+                    j = (i + offset) % len(mats)
+                    a = mats[j]
+                    if i % 3 == 0:  # values refresh on the cached pattern
+                        a = jsparse.BCOO((a.data * 2.0, a.indices),
+                                         shape=a.shape)
+                    got = core_sparse.to_tiled(a, bm=32, bk=32, cache=cache)
+                    want = oracle[j]
+                    np.testing.assert_array_equal(
+                        np.asarray(got.block_rows),
+                        np.asarray(want.block_rows))
+                    np.testing.assert_allclose(
+                        np.abs(np.asarray(got.blocks)),
+                        np.abs(np.asarray(want.blocks))
+                        * (2.0 if i % 3 == 0 else 1.0), rtol=1e-6)
+            except Exception as e:  # noqa: BLE001 — surfaced by the assert
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(k,))
+                   for k in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120.0)
+        assert not errors, errors[0]
+        assert len(cache) <= 4
+        assert cache.hits + cache.misses + cache.refreshes == 400
+
     def test_pattern_change_misses(self):
         cache = opcache.PatternCache()
         core_sparse.to_tiled(self._bcoo(seed=2), bm=64, bk=64, cache=cache)

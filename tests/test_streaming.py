@@ -207,6 +207,25 @@ class TestOutOfSampleAssignment:
         np.testing.assert_array_equal(np.asarray(dense.labels),
                                       np.asarray(sparse_req.labels))
 
+    def test_zero_row_batch_returns_empty(self, batch_result):
+        # a coalescer flush (or an empty poll) legitimately produces a
+        # zero-row request; it must return empty results, not crash the
+        # scoring kernel with a zero-size grid
+        _, out = batch_result
+        model = streaming.model_from_result(out)
+        res = streaming.assign_rows(model, jnp.zeros((0, model.n_cols)))
+        assert res.labels.shape == (0,) and res.score.shape == (0,)
+        assert res.labels.dtype == jnp.int32
+        cres = streaming.assign_cols(model, jnp.zeros((0, model.n_rows)))
+        assert cres.labels.shape == (0,)
+        topk = streaming.assign_rows_topk(
+            model, jnp.zeros((0, model.n_cols)), k=3)
+        assert topk.labels.shape == (0, 3) and topk.scores.shape == (0, 3)
+        # empty batches still validate k: a bad k is a caller bug at any size
+        with pytest.raises(ValueError, match="k"):
+            streaming.assign_rows_topk(
+                model, jnp.zeros((0, model.n_cols)), k=99)
+
     def test_wrong_width_is_loud(self, batch_result, planted):
         _, out = batch_result
         model = streaming.model_from_result(out)
@@ -260,6 +279,22 @@ class TestServeDriver:
         assert out["serve_assign_rows_qps"] > 0
         assert out["_model_kind"] == streaming.MODEL_KIND
         assert len(out["_labels_sample"]) == 8
+
+    def test_partial_final_batch_qps_counts_real_rows(self, tmp_path):
+        # 40 rows in 16-row batches = 2 full + one 8-row tail. The old
+        # QPS formula charged batch * hist.count = 48 rows — an
+        # over-report whenever the tail batch was short.
+        from repro.launch import serve_lamc
+
+        ckpt_dir = str(tmp_path / "model")
+        serve_lamc.fit_demo_model(ckpt_dir, n_rows=256, n_cols=128, k=3,
+                                  chunk_rows=128)
+        out = serve_lamc.serve(ckpt_dir, batch=16, rows=40, warmup=1,
+                               axis="rows")
+        assert out["serve_assign_rows_rows"] == 40
+        # labels sample comes from the last (8-row) batch
+        assert len(out["_labels_sample"]) == 8
+        assert out["serve_assign_rows_qps"] > 0
 
     def test_all_requests_rejected_still_reports(self, tmp_path):
         # every batch bounced: the error counter must come back without
